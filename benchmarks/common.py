@@ -1,0 +1,28 @@
+"""Shared helpers for the benchmark harness."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.configs.tiny import config as tiny_config
+from repro.data.math_task import MathTask
+from repro.models import model as M
+from repro.sharding import tree_values
+
+
+def tiny_setup(d_model=64, n_layers=1, max_operand=5, seed=0):
+    task = MathTask(max_operand=max_operand, ops="+")
+    cfg = tiny_config(vocab_size=task.tok.vocab_size, d_model=d_model,
+                      n_layers=n_layers)
+    params = tree_values(M.init_params(cfg, jax.random.PRNGKey(seed)))
+    return task, cfg, params
+
+
+def time_call(fn, *args, iters=10, warmup=2, **kw):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kw))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = jax.block_until_ready(fn(*args, **kw))
+    return (time.perf_counter() - t0) / iters * 1e6, out  # us/call

@@ -1,0 +1,332 @@
+"""One benchmark per paper table/figure. Each returns (name, us_per_call,
+derived) rows for the CSV emitted by benchmarks.run."""
+from __future__ import annotations
+
+import os
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import tiny_setup, time_call
+from repro.core.algo import RLConfig
+from repro.core.conventional import ConventionalConfig, ConventionalRL
+from repro.core.pipeline import PipelineConfig, PipelineRL
+from repro.core.rollout import EngineConfig, GenerationEngine
+from repro.core.sim import HardwareModel, conventional_throughput, fig9_curves
+from repro.core.trainer import Trainer
+from repro.models import model as M
+from repro.optim.adam import AdamConfig
+from repro.sharding import tree_values
+
+Row = Tuple[str, float, str]
+FAST = os.environ.get("BENCH_FAST", "1") == "1"
+
+
+# ---------------------------------------------------------------------------
+# Fig. 2: generation throughput / batch-size decay during a drain
+# ---------------------------------------------------------------------------
+
+def fig2_generation() -> List[Row]:
+    task, cfg, params = tiny_setup()
+    rows: List[Row] = []
+    # (a) throughput vs batch size (real decode-step wall time on CPU)
+    for H in (4, 16, 64):
+        ec = EngineConfig(n_slots=H, max_len=16)
+        eng = GenerationEngine(cfg, params, ec, task.sample, seed=0)
+        eng.refill()
+        us, _ = time_call(lambda: eng.step(task), iters=5, warmup=2)
+        rows.append((f"fig2a/decode_step_H{H}", us,
+                     f"tokens_per_step={H}"))
+    # (b) batch size decays as sequences finish (drain, no refill)
+    ec = EngineConfig(n_slots=32, max_len=20)
+    eng = GenerationEngine(cfg, params, ec, task.sample, seed=1)
+    eng.refill()
+    decay = []
+    for _ in range(24):
+        decay.append(eng.n_active)
+        eng.step(task)
+        if eng.n_active == 0:
+            break
+    rows.append(("fig2b/drain_batch_decay", 0.0,
+                 "active=" + "|".join(map(str, decay))))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig. 5: learning speed — PipelineRL vs Conventional (R(t) and R(S))
+# ---------------------------------------------------------------------------
+
+def fig5_learning() -> List[Row]:
+    """CPU-scale twin of the paper's 128-GPU comparison. The hardware model
+    is scaled so the toy per-chip batches sit where the paper's H100 batches
+    sit on U(h): h_sat=16 plays the role of the H100's h_sat~256. The
+    pipeline concentrates generation on N-T chips at a saturating slot count
+    (H=64 -> 16/chip) while Conventional RL spreads B*G sequences over all N
+    chips (4/chip, underutilized) and pays the drain tail — the exact
+    mechanism of the paper's ~2x (Fig. 5a/5c)."""
+    steps = 10 if FAST else 60
+    rows: List[Row] = []
+    results: Dict[str, list] = {}
+    hw = HardwareModel(h_sat=16)
+
+    task, cfg, params = tiny_setup(d_model=96, n_layers=2)
+    t0 = time.perf_counter()
+    trainer = Trainer(cfg, params, rl=RLConfig(entropy_coef=0.003),
+                      adam=AdamConfig(lr=3e-3))
+    # balanced stage rates (Appendix A.3): r_gen(U(24/3)*3) ~ r_train(5/tau);
+    # N=8 is the paper's "scarce compute" limitation regime, so the co-sim
+    # gain is modest — the full-scale 1.57x/2x claims are validated by the
+    # fig9 analytic reproduction at N=128
+    p = PipelineRL(cfg, params, task,
+                   EngineConfig(n_slots=24, max_len=16),
+                   PipelineConfig(batch_size=16, n_opt_steps=steps,
+                                  n_chips=8, train_chips=5,
+                                  pack_rows=4, pack_seq=80),
+                   hw=hw, trainer=trainer)
+    log = p.run()
+    results["pipeline"] = log
+    rows.append(("fig5/pipeline", (time.perf_counter() - t0) * 1e6 / steps,
+                 f"simtime={log[-1]['time']:.0f}f reward_last="
+                 f"{np.mean([r['reward'] for r in log[-5:]]):.3f} "
+                 f"max_lag={max(r['max_lag'] for r in log):.0f}"))
+
+    for G in (2, 4, 8):
+        task, cfg, params = tiny_setup(d_model=96, n_layers=2)
+        t0 = time.perf_counter()
+        trainer = Trainer(cfg, params, rl=RLConfig(entropy_coef=0.003),
+                          adam=AdamConfig(lr=3e-3))
+        c = ConventionalRL(cfg, params, task,
+                           EngineConfig(n_slots=16, max_len=16),
+                           ConventionalConfig(batch_size=16, g_steps=G,
+                                              n_opt_steps=steps, n_chips=8,
+                                              pack_rows=4, pack_seq=80),
+                           hw=hw, trainer=trainer)
+        log = c.run()
+        results[f"conv_G{G}"] = log
+        rows.append((f"fig5/conventional_G{G}",
+                     (time.perf_counter() - t0) * 1e6 / steps,
+                     f"simtime={log[-1]['time']:.0f}f reward_last="
+                     f"{np.mean([r['reward'] for r in log[-5:]]):.3f}"))
+
+    # headline: sim wall-clock to process the same number of samples.
+    # the matched-lag comparison is G=8 (pipeline max_lag ~ 8, Fig 5b/6a)
+    tp = results["pipeline"][-1]["time"]
+    for G in (2, 4, 8):
+        tc = results[f"conv_G{G}"][-1]["time"]
+        rows.append((f"fig5/speedup_vs_G{G}", 0.0,
+                     f"pipeline_t={tp:.0f} conv_t={tc:.0f} "
+                     f"speedup={tc / tp:.2f}x"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig. 6: max lag and ESS over training
+# ---------------------------------------------------------------------------
+
+def fig6_lag_ess() -> List[Row]:
+    steps = 8 if FAST else 40
+    rows: List[Row] = []
+    task, cfg, params = tiny_setup()
+    trainer = Trainer(cfg, params, adam=AdamConfig(lr=1e-3))
+    p = PipelineRL(cfg, params, task,
+                   EngineConfig(n_slots=16, max_len=16),
+                   PipelineConfig(batch_size=8, n_opt_steps=steps, n_chips=8,
+                                  train_chips=4, pack_rows=3, pack_seq=64),
+                   trainer=trainer)
+    plog = p.run()
+    rows.append(("fig6a/pipeline_max_lag", 0.0,
+                 f"max={max(r['max_lag'] for r in plog):.0f} "
+                 f"mean={np.mean([r['mean_lag'] for r in plog]):.2f}"))
+    rows.append(("fig6b/pipeline_ess", 0.0,
+                 f"min={min(r['ess'] for r in plog):.3f} "
+                 f"mean={np.mean([r['ess'] for r in plog]):.3f}"))
+
+    for G in (4, 8):  # fig10 mechanism: ESS decays as G grows
+        task, cfg, params = tiny_setup()
+        trainer = Trainer(cfg, params, adam=AdamConfig(lr=1e-3))
+        c = ConventionalRL(cfg, params, task,
+                           EngineConfig(n_slots=16, max_len=16),
+                           ConventionalConfig(batch_size=8, g_steps=G,
+                                              n_opt_steps=steps, n_chips=8,
+                                              pack_rows=3, pack_seq=64),
+                           trainer=trainer)
+        clog = c.run()
+        rows.append((f"fig6a/conv_G{G}_max_lag", 0.0,
+                     f"max={max(r['max_lag'] for r in clog):.0f}"))
+        rows.append((f"fig6b/conv_G{G}_ess", 0.0,
+                     f"min={min(r['ess'] for r in clog):.3f} "
+                     f"mean={np.mean([r['ess'] for r in clog]):.3f}"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# beyond-paper ablation: in-flight update frequency (paper §4 discussion:
+# "depending on how frequently one can make weight updates")
+# ---------------------------------------------------------------------------
+
+def ablation_update_every() -> List[Row]:
+    steps = 8 if FAST else 24
+    rows: List[Row] = []
+    for every in (1, 2, 4):
+        task, cfg, params = tiny_setup()
+        trainer = Trainer(cfg, params, adam=AdamConfig(lr=1e-3))
+        p = PipelineRL(cfg, params, task,
+                       EngineConfig(n_slots=16, max_len=16),
+                       PipelineConfig(batch_size=8, n_opt_steps=steps,
+                                      n_chips=8, train_chips=4, pack_rows=3,
+                                      pack_seq=64, update_every=every),
+                       trainer=trainer)
+        log = p.run()
+        rows.append((f"ablation/update_every_{every}", 0.0,
+                     f"max_lag={max(r['max_lag'] for r in log):.0f} "
+                     f"mean_lag={np.mean([r['mean_lag'] for r in log]):.2f} "
+                     f"ess={np.mean([r['ess'] for r in log]):.3f}"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig. 7 (§5.1): KL of mixed-policy (in-flight, stale KV) vs lagged policies
+# ---------------------------------------------------------------------------
+
+def fig7_kl() -> List[Row]:
+    """Train a few checkpoints C_0..C_g; compare behavior distributions:
+      - conventional lag k: sample everything from C_0, evaluate under C_g
+      - in-flight (stale KV): swap weights every L/g tokens during sampling
+      - in-flight + recomputed KV: same but recompute the cache at each swap
+    KL estimated as E_mu[log mu - log pi_final] over sampled tokens."""
+    g_max = 4
+    task, cfg, params = tiny_setup(d_model=96, n_layers=2)
+    # moderate per-step weight deltas: the paper's regime is lr 1e-6 on a 7B
+    # model; too-large deltas make the stale-KV perturbation dominate, too
+    # small ones drown the KL in Monte-Carlo noise
+    trainer = Trainer(cfg, params, adam=AdamConfig(lr=7e-4),
+                      rl=RLConfig(entropy_coef=0.003))
+    # build consecutive checkpoints with real RL training
+    p = PipelineRL(cfg, params, task, EngineConfig(n_slots=16, max_len=16),
+                   PipelineConfig(batch_size=8, n_opt_steps=1, n_chips=8,
+                                  train_chips=4, pack_rows=3, pack_seq=64),
+                   trainer=trainer)
+    ckpts = [trainer.state.params]
+    for _ in range(g_max):
+        p.run(trainer.version + 1)
+        ckpts.append(trainer.state.params)
+
+    def sample_and_eval(update_schedule, recompute):
+        """update_schedule: list of (step_index, ckpt_index)."""
+        ec = EngineConfig(n_slots=128, max_len=24)
+        eng = GenerationEngine(cfg, ckpts[0], ec, task.sample, seed=11)
+        eng.refill()
+        sched = dict(update_schedule)
+        rollouts = []
+        for step in range(96):
+            if step in sched:
+                eng.set_weights(ckpts[sched[step]], sched[step],
+                                recompute_kv=recompute)
+            rollouts.extend(eng.step(task))
+            if eng.n_active == 0:
+                break
+        # evaluate the sampled tokens under the final checkpoint
+        tot, n = 0.0, 0
+        final = ckpts[g_max]
+        for r in rollouts:
+            T = r.length
+            toks = jnp.asarray(r.tokens)[None]
+            pos = jnp.arange(T)[None]
+            out = M.forward(final, toks, pos, cfg)
+            lp = jax.nn.log_softmax(out["logits"][0].astype(jnp.float32), -1)
+            for t in range(r.prompt_len, T):
+                cur = float(lp[t - 1, r.tokens[t]])
+                tot += r.behavior_logprobs[t] - cur
+                n += 1
+        return tot / max(n, 1)
+
+    L = 24  # == EngineConfig.max_len of sample_and_eval
+    inflight_sched = [(max(1, (k + 1) * L // (g_max + 1)), k + 1)
+                      for k in range(g_max)]
+    rows: List[Row] = []
+    for lag in (g_max, g_max // 2, 0):
+        kl = sample_and_eval([(0, g_max - lag)], recompute=False)
+        rows.append((f"fig7/conventional_lag{lag}", 0.0, f"kl={kl:.4f}"))
+    kl_inflight = sample_and_eval(inflight_sched, recompute=False)
+    rows.append(("fig7/inflight_stale_kv", 0.0, f"kl={kl_inflight:.4f}"))
+    kl_recomp = sample_and_eval(inflight_sched, recompute=True)
+    rows.append(("fig7/inflight_recomputed_kv", 0.0, f"kl={kl_recomp:.4f}"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig. 8: utilization curve U(h)
+# ---------------------------------------------------------------------------
+
+def fig8_utilization() -> List[Row]:
+    hw = HardwareModel()
+    pts = {h: float(hw.U(h)) for h in (1, 16, 64, 128, 192, 256, 512)}
+    return [("fig8/U(h)", 0.0,
+             " ".join(f"{h}:{u:.3f}" for h, u in pts.items()))]
+
+
+# ---------------------------------------------------------------------------
+# Fig. 9 + A.4 case study: throughput vs max lag
+# ---------------------------------------------------------------------------
+
+def fig9_pareto() -> List[Row]:
+    hw = HardwareModel()
+    rows: List[Row] = []
+    t0 = time.perf_counter()
+    curves = fig9_curves(hw)
+    us = (time.perf_counter() - t0) * 1e6 / len(curves)
+    for r in curves:
+        rows.append((f"fig9/g{r['g_max']}", us,
+                     f"r_conv={r['r_conv']:.2f} r_pipe={r['r_pipe']:.2f} "
+                     f"speedup={r['speedup']:.2f} I={r['I']} H={r['H']}"))
+    r_conv, r_gen, r_train = conventional_throughput(hw, 128, 128, 134, 2048)
+    rows.append(("figA4/case_study", 0.0,
+                 f"r_conv={r_conv:.1f}(paper 10.7) r_gen={r_gen:.1f}(18.3) "
+                 f"r_train={r_train:.2f}(26.02)"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Table 1 analogue: success rate before/after RL on the math task
+# ---------------------------------------------------------------------------
+
+def table1_success() -> List[Row]:
+    """Exact-match success before/after PipelineRL training. lr matters the
+    way the paper's Fig. 10 says it does: 3e-3 diverges (policy collapses to
+    repeated digits), 1e-3 learns. Dense shaping (partial_credit) stands in
+    for a pretrained base model's head start."""
+    steps = 12 if FAST else 400
+    from repro.data.math_task import MathTask
+    from repro.configs.tiny import config as tiny_config
+    from repro.sharding import tree_values
+    from repro.models import model as M
+    import jax as _jax
+    task = MathTask(max_operand=2, ops="+", partial_credit=True)
+    cfg = tiny_config(vocab_size=task.tok.vocab_size, d_model=96, n_layers=2)
+    params = tree_values(M.init_params(cfg, _jax.random.PRNGKey(0)))
+
+    def success_rate(p_eval, n=32):
+        ec = EngineConfig(n_slots=n, max_len=14, temperature=1e-4)
+        eng = GenerationEngine(cfg, p_eval, ec, task.sample, seed=123)
+        eng.refill()
+        rolls = []
+        for _ in range(64):
+            rolls.extend(eng.step(task))
+            if eng.n_active == 0:
+                break
+        return float(np.mean([r.reward > 0.5 for r in rolls])) if rolls else 0.0
+
+    base = success_rate(params)
+    trainer = Trainer(cfg, params, rl=RLConfig(entropy_coef=0.01),
+                      adam=AdamConfig(lr=1e-3))
+    p = PipelineRL(cfg, params, task, EngineConfig(n_slots=16, max_len=14),
+                   PipelineConfig(batch_size=16, n_opt_steps=steps, n_chips=8,
+                                  train_chips=4, pack_rows=4, pack_seq=72),
+                   trainer=trainer)
+    p.run()
+    trained = success_rate(trainer.state.params)
+    return [("table1/success_rate", 0.0,
+             f"base={base:.3f} pipeline_rl={trained:.3f} steps={steps}")]

@@ -1,0 +1,86 @@
+"""Assemble EXPERIMENTS.md tables from the results/*.json artifacts.
+
+    PYTHONPATH=src python -m benchmarks.report > /tmp/tables.md
+"""
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def _load(name):
+    path = os.path.join(RESULTS, name)
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def _fmt(x, digits=3):
+    if x is None:
+        return "-"
+    if isinstance(x, float):
+        if x == 0:
+            return "0"
+        if abs(x) < 1e-2 or abs(x) >= 1e4:
+            return f"{x:.2e}"
+        return f"{x:.{digits}g}"
+    return str(x)
+
+
+def dryrun_table(name, title):
+    rs = _load(name)
+    if rs is None:
+        print(f"(missing {name})")
+        return
+    print(f"\n### {title}\n")
+    print("| arch | shape | mesh | t_compute | t_memory | t_collective |"
+          " dominant | useful FLOPs | mem GB/dev | compile s |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for r in rs:
+        if not r.get("ok"):
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | FAILED: "
+                  f"{r.get('error','?')[:60]} | | | | | | |")
+            continue
+        mem = r.get("memory_analysis", {}).get("peak_gb",
+                                               r.get("mem_gb_per_dev"))
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+              f"| {_fmt(r['t_compute_s'])} | {_fmt(r['t_memory_s'])} "
+              f"| {_fmt(r['t_collective_s'])} | {r['bottleneck']} "
+              f"| {_fmt(r.get('useful_flops_ratio'))} | {_fmt(mem)} "
+              f"| {r.get('t_compile_s', r.get('t_total_s'))} |")
+
+
+def weight_update_table():
+    rs = _load("dryrun_1pod.json")
+    if rs is None:
+        return
+    print("\n### In-flight weight-update transfer (trainer->generator "
+          "reshard, 16x16 mesh)\n")
+    print("| arch | collective GB/dev | t_collective |")
+    print("|---|---|---|")
+    seen = set()
+    for r in rs:
+        wu = r.get("weight_update")
+        if not wu or r["arch"] in seen:
+            continue
+        seen.add(r["arch"])
+        print(f"| {r['arch']} | {_fmt(wu['coll_gbytes_per_dev'])} "
+              f"| {_fmt(wu['t_collective_s'])} |")
+
+
+def main():
+    dryrun_table("dryrun_1pod.json",
+                 "Baseline (paper-faithful defaults), single pod 16x16, "
+                 "uncalibrated cost_analysis")
+    dryrun_table("dryrun_2pod.json", "Multi-pod 2x16x16 (512 chips)")
+    dryrun_table("dryrun_1pod_calibrated_optimized.json",
+                 "Calibrated + optimized (remat+microbatch for train, "
+                 "GEN_RULES+donation for inference), single pod")
+    weight_update_table()
+
+
+if __name__ == "__main__":
+    main()

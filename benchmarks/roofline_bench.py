@@ -1,0 +1,35 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads results/dryrun_*.json produced by `python -m repro.launch.dryrun`;
+falls back to compiling one cheap combo live if no artifacts exist."""
+from __future__ import annotations
+
+import json
+import os
+from typing import List, Tuple
+
+Row = Tuple[str, float, str]
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def roofline_rows() -> List[Row]:
+    path = os.path.join(RESULTS, "dryrun_1pod.json")
+    if not os.path.exists(path):
+        return [("roofline/missing", 0.0,
+                 "run: python -m repro.launch.dryrun --all --out "
+                 "results/dryrun_1pod.json")]
+    rows: List[Row] = []
+    with open(path) as f:
+        recs = json.load(f)
+    for r in recs:
+        if not r.get("ok"):
+            rows.append((f"roofline/{r['arch']}/{r['shape']}", 0.0, "FAILED"))
+            continue
+        ratio = r.get("useful_flops_ratio")
+        rows.append((
+            f"roofline/{r['arch']}/{r['shape']}", 0.0,
+            f"tc={r['t_compute_s']:.2e}s tm={r['t_memory_s']:.2e}s "
+            f"tx={r['t_collective_s']:.2e}s dom={r['bottleneck']} "
+            f"useful={ratio:.2f}" if ratio else
+            f"tc={r['t_compute_s']:.2e}s dom={r['bottleneck']}"))
+    return rows

@@ -1,0 +1,65 @@
+"""Benchmark harness: one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig9] [--full]
+
+Prints ``name,us_per_call,derived`` CSV. BENCH_FAST=0 (or --full) runs the
+long learning-curve variants.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="substring filter on benchmark group name")
+    ap.add_argument("--full", action="store_true",
+                    help="long variants (learning curves at full length)")
+    args = ap.parse_args()
+    if args.full:
+        os.environ["BENCH_FAST"] = "0"
+
+    # imports after BENCH_FAST is settled
+    from benchmarks import figures
+    from benchmarks.kernels_bench import kernel_benchmarks
+    from benchmarks.roofline_bench import roofline_rows
+
+    groups = {
+        "fig2": figures.fig2_generation,
+        "fig5": figures.fig5_learning,
+        "fig6": figures.fig6_lag_ess,
+        "fig7": figures.fig7_kl,
+        "fig8": figures.fig8_utilization,
+        "fig9": figures.fig9_pareto,
+        "table1": figures.table1_success,
+        "ablation": figures.ablation_update_every,
+        "kernels": kernel_benchmarks,
+        "roofline": roofline_rows,
+    }
+
+    print("name,us_per_call,derived")
+    failed = []
+    for name, fn in groups.items():
+        if args.only and args.only not in name:
+            continue
+        t0 = time.perf_counter()
+        try:
+            rows = fn()
+        except Exception as e:  # keep the harness running
+            failed.append(name)
+            print(f"{name}/ERROR,0,{type(e).__name__}: {e}")
+            continue
+        for rname, us, derived in rows:
+            print(f"{rname},{us:.1f},{derived}")
+        print(f"# {name} done in {time.perf_counter() - t0:.1f}s",
+              file=sys.stderr)
+    if failed:
+        raise SystemExit(f"benchmark groups failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

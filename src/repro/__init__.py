@@ -1,0 +1,25 @@
+"""PipelineRL in JAX: asynchronous RL for LLMs with in-flight weight
+updates (Piché et al., 2025), as a multi-pod TPU framework.
+
+Public API (the paper's contribution as a composable module):
+
+    from repro import PipelineRL, PipelineConfig      # Alg. 2 orchestrator
+    from repro import GenerationEngine, EngineConfig  # Actor (in-flight updates)
+    from repro import Trainer, RLConfig               # IS-REINFORCE trainer
+    from repro import ConventionalRL                  # Alg. 1 baseline
+    from repro.configs import get_config, SHAPES      # 10 assigned archs
+"""
+from repro.core.algo import RLConfig
+from repro.core.conventional import ConventionalConfig, ConventionalRL
+from repro.core.pipeline import PipelineConfig, PipelineRL
+from repro.core.preprocess import PreprocessConfig, Preprocessor
+from repro.core.rollout import EngineConfig, GenerationEngine
+from repro.core.serving import Server
+from repro.core.sim import HardwareModel
+from repro.core.trainer import Trainer
+
+__all__ = [
+    "ConventionalConfig", "ConventionalRL", "EngineConfig",
+    "GenerationEngine", "HardwareModel", "PipelineConfig", "PipelineRL",
+    "PreprocessConfig", "Preprocessor", "RLConfig", "Server", "Trainer",
+]

@@ -1,0 +1,36 @@
+"""Minimal tree checkpointing: flatten the pytree with '/'-joined key paths
+into an .npz. Enough for the RL driver's periodic checkpoints and the §5.1
+consecutive-checkpoint KL study."""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    out = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save(path: str, tree) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez(path, **_flatten(tree))
+
+
+def load(path: str, like) -> Any:
+    """Restore into the structure of `like` (shapes/dtypes preserved)."""
+    with np.load(path) as data:
+        flat = dict(data)
+    leaves_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+    vals = []
+    for path_, leaf in leaves_like:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path_)
+        arr = flat[key]
+        vals.append(arr.astype(leaf.dtype) if hasattr(leaf, "dtype") else arr)
+    return jax.tree_util.tree_unflatten(jax.tree.structure(like), vals)

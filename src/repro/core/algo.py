@@ -1,0 +1,84 @@
+"""RL algorithm layer: truncated-importance-sampling REINFORCE with a
+learned value baseline (paper Eq. 4-5) and the ESS on-policyness metric
+(Eq. 6, Kong 1992)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class RLConfig:
+    is_clamp: float = 5.0          # paper: "clamp the importance weights to 5"
+    value_coef: float = 0.5
+    aux_coef: float = 0.001        # MoE load-balance
+    entropy_coef: float = 0.0
+    temperature: float = 1.0
+
+
+def token_logprobs(logits, tokens):
+    """logits: (B,S,V) predicting token t from context < t (i.e. logits[t]
+    scores tokens[t+1]); returns per-token logprob of the *sampled* token,
+    aligned with `tokens` (position 0 gets 0)."""
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    lp_next = jnp.take_along_axis(lp[:, :-1], tokens[:, 1:, None], axis=-1)[..., 0]
+    return jnp.pad(lp_next, ((0, 0), (1, 0)))
+
+
+def ess(weights, mask) -> jax.Array:
+    """Normalized effective sample size (Eq. 6) over masked tokens."""
+    w = weights * mask
+    n = jnp.maximum(mask.sum(), 1.0)
+    s1 = w.sum()
+    s2 = jnp.square(w).sum()
+    return jnp.square(s1) / jnp.maximum(n * s2, 1e-30)
+
+
+def reinforce_loss(
+    logits, values, batch: Dict[str, jax.Array], cfg: RLConfig,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Truncated-IS REINFORCE (Eq. 5) + value MSE.
+
+    batch: packed train batch (tokens, loss_mask, behavior_logprobs,
+    rewards (per-token broadcast), ...). `values` may be None.
+    """
+    tokens, mask = batch["tokens"], batch["loss_mask"]
+    cur_lp = token_logprobs(logits, tokens)             # (B,S) f32
+    beh_lp = batch["behavior_logprobs"]
+    rewards = batch["rewards"]
+
+    log_ratio = jnp.where(mask > 0, cur_lp - beh_lp, 0.0)
+    ratio = jnp.exp(log_ratio)
+    clamped = jnp.minimum(ratio, cfg.is_clamp)
+
+    if values is not None:
+        baseline = values
+        value_loss = jnp.sum(jnp.square(rewards - values) * mask) \
+            / jnp.maximum(mask.sum(), 1.0)
+    else:
+        baseline = jnp.zeros_like(rewards)
+        value_loss = jnp.zeros((), jnp.float32)
+    adv = jax.lax.stop_gradient(rewards - baseline)
+
+    pg = -jnp.sum(jax.lax.stop_gradient(clamped) * adv * cur_lp * mask) \
+        / jnp.maximum(mask.sum(), 1.0)
+
+    loss = pg + cfg.value_coef * value_loss
+    ent = -jnp.sum(jnp.exp(cur_lp) * cur_lp * mask) / jnp.maximum(mask.sum(), 1.0)
+    if cfg.entropy_coef:
+        loss = loss - cfg.entropy_coef * ent
+
+    metrics = {
+        "pg_loss": pg,
+        "value_loss": value_loss,
+        "ess": ess(ratio, mask),
+        "mean_is_weight": jnp.sum(ratio * mask) / jnp.maximum(mask.sum(), 1.0),
+        "clip_frac": jnp.sum((ratio > cfg.is_clamp) * mask)
+            / jnp.maximum(mask.sum(), 1.0),
+        "token_kl": jnp.sum((beh_lp - cur_lp) * mask) / jnp.maximum(mask.sum(), 1.0),
+        "mean_reward_tok": jnp.sum(rewards * mask) / jnp.maximum(mask.sum(), 1.0),
+    }
+    return loss, metrics

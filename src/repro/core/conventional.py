@@ -1,0 +1,83 @@
+"""Conventional RL baseline (Algorithm 1): alternate full-fleet generation
+of B*G sequences with G optimizer steps; the behavior policy lags the
+current policy by up to G-1 steps. Same engine, same trainer, same
+simulated clock — only the schedule differs."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.pipeline import _batch_to_device, _lag_stats
+from repro.core.rollout import EngineConfig, GenerationEngine
+from repro.core.sim import HardwareModel
+from repro.core.trainer import Trainer
+from repro.data.math_task import MathTask
+from repro.data.packing import pack
+
+
+@dataclasses.dataclass
+class ConventionalConfig:
+    batch_size: int = 16          # B per optimizer step
+    g_steps: int = 4              # G optimizer steps per RL step
+    n_opt_steps: int = 48
+    n_chips: int = 8              # all chips generate, then all train
+    pack_rows: int = 8
+    pack_seq: int = 128
+
+
+class ConventionalRL:
+    def __init__(self, cfg: ModelConfig, params, task: MathTask,
+                 ec: EngineConfig, cc: ConventionalConfig,
+                 hw: HardwareModel = HardwareModel(),
+                 trainer: Optional[Trainer] = None, seed: int = 0):
+        if ec.n_slots < cc.batch_size * cc.g_steps:
+            ec = dataclasses.replace(ec, n_slots=cc.batch_size * cc.g_steps)
+        self.cfg, self.task, self.ec, self.cc, self.hw = cfg, task, ec, cc, hw
+        self.trainer = trainer or Trainer(cfg, params)
+        self.engine = GenerationEngine(cfg, self.trainer.params, ec,
+                                       task.sample, seed=seed)
+        self.time = 0.0
+        self.log: List[Dict] = []
+
+    def run(self, n_opt_steps: Optional[int] = None) -> List[Dict]:
+        n = n_opt_steps or self.cc.n_opt_steps
+        cc, hw = self.cc, self.hw
+        while self.trainer.version < n:
+            # --- generation phase: mu <- pi, drain B*G sequences ---------
+            self.engine.set_weights(self.trainer.params, self.trainer.version)
+            self.engine.refill(self.time)
+            rollouts = []
+            while self.engine.n_active > 0:
+                h = self.engine.n_active
+                finished = self.engine.step(self.task, now=self.time)
+                self.time += hw.step_cost(h / cc.n_chips)
+                for r in finished:
+                    r.finished_at = self.time
+                rollouts.extend(finished)
+            # --- training phase: G optimizer steps -----------------------
+            order = np.random.RandomState(self.trainer.version).permutation(
+                len(rollouts))
+            for g in range(cc.g_steps):
+                idx = order[g * cc.batch_size:(g + 1) * cc.batch_size]
+                chunk = [rollouts[i] for i in idx]
+                batch = pack(chunk, cc.pack_rows, cc.pack_seq)
+                stats = batch.pop("packing_stats")
+                metrics = self.trainer.step(_batch_to_device(batch))
+                n_tokens = sum(r.length for r in chunk)
+                self.time += hw.train_time(n_tokens, cc.n_chips)
+                max_lag, mean_lag = _lag_stats(chunk, self.trainer.version - 1)
+                self.log.append({
+                    "version": self.trainer.version,
+                    "samples": self.trainer.version * cc.batch_size,
+                    "time": self.time,
+                    "reward": float(np.mean([r.reward for r in chunk])),
+                    "mean_len": float(np.mean([r.length for r in chunk])),
+                    "max_lag": max_lag,
+                    "mean_lag": mean_lag,
+                    "fill": stats["fill"],
+                    **metrics,
+                })
+        return self.log

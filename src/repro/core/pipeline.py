@@ -1,0 +1,159 @@
+"""PipelineRL orchestrator (Algorithm 2): concurrent Actor + Trainer with
+in-flight weight updates, co-simulated deterministically.
+
+Both stages execute *real* JAX compute; wall-clock is the Appendix-A
+hardware model (flash units), which is what makes the paper's asynchrony
+reproducible on CPU: the trainer step runs eagerly as soon as B sequences
+exist in the queue, its completion is stamped on the simulated clock, and
+the actor applies the weight update at the first decode-step boundary after
+that stamp — token-granular in-flight updates, exactly Figure 1(b).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.queues import SampleQueue
+from repro.core.rollout import EngineConfig, GenerationEngine
+from repro.core.sim import HardwareModel
+from repro.core.trainer import Trainer
+from repro.data.math_task import MathTask
+from repro.data.packing import Rollout, pack
+
+
+@dataclasses.dataclass
+class PipelineConfig:
+    batch_size: int = 16          # B sequences per optimizer step
+    n_opt_steps: int = 50
+    n_chips: int = 8              # N
+    train_chips: int = 4          # T; generation gets N-T
+    pack_rows: int = 8
+    pack_seq: int = 128
+    queue_maxsize: Optional[int] = None
+    recompute_kv: bool = False    # §5.1 ablation
+    update_every: int = 1         # optimizer steps between weight pushes
+    # GRPO-style group-relative baseline (Shao et al., 2024): subtract the
+    # mean reward of same-prompt rollouts instead of (or on top of) the
+    # learned value baseline. Use with a prompt source that repeats prompts.
+    group_baseline: bool = False
+
+
+def _batch_to_device(batch: Dict[str, np.ndarray]) -> Dict[str, jnp.ndarray]:
+    return {k: jnp.asarray(v) for k, v in batch.items()
+            if k != "packing_stats"}
+
+
+def _apply_group_baseline(rollouts: List[Rollout]) -> List[Rollout]:
+    """GRPO-style: reward <- reward - mean(rewards of same-prompt rollouts).
+    Returns shallow copies so queue bookkeeping is untouched."""
+    import copy
+    groups: Dict[int, List[float]] = {}
+    for r in rollouts:
+        groups.setdefault(r.prompt_key, []).append(r.reward)
+    means = {k: float(np.mean(v)) for k, v in groups.items()}
+    out = []
+    for r in rollouts:
+        r2 = copy.copy(r)
+        r2.reward = r.reward - means[r.prompt_key]
+        out.append(r2)
+    return out
+
+
+def _lag_stats(rollouts: List[Rollout], trainer_version: int):
+    lags = []
+    for r in rollouts:
+        mask = np.arange(r.length) >= r.prompt_len
+        lags.append((trainer_version - r.weight_versions)[mask])
+    if not lags:
+        return 0.0, 0.0
+    cat = np.concatenate(lags)
+    if cat.size == 0:
+        return 0.0, 0.0
+    return float(cat.max()), float(cat.mean())
+
+
+class PipelineRL:
+    """The paper's system: run with `.run()`, read `.log` for R(t)/R(S)."""
+
+    def __init__(self, cfg: ModelConfig, params, task: MathTask,
+                 ec: EngineConfig, pc: PipelineConfig,
+                 hw: HardwareModel = HardwareModel(),
+                 trainer: Optional[Trainer] = None, seed: int = 0,
+                 preprocessor=None):
+        self.cfg, self.task, self.ec, self.pc, self.hw = cfg, task, ec, pc, hw
+        self.trainer = trainer or Trainer(cfg, params)
+        self.preprocessor = preprocessor  # paper Fig. 4 middle stage
+        self.engine = GenerationEngine(cfg, self.trainer.params, ec,
+                                       task.sample, seed=seed)
+        self.queue = SampleQueue(pc.queue_maxsize)
+        self.actor_time = 0.0
+        self.trainer_time = 0.0
+        self.pending: List = []  # (available_at, params, version)
+        self.log: List[Dict] = []
+
+    @property
+    def gen_chips(self) -> int:
+        return self.pc.n_chips - self.pc.train_chips
+
+    def run(self, n_opt_steps: Optional[int] = None) -> List[Dict]:
+        n = n_opt_steps or self.pc.n_opt_steps
+        self.engine.refill(self.actor_time)
+        while self.trainer.version < n:
+            self._actor_tick()
+            self._trainer_tick()
+        return self.log
+
+    # ------------------------------------------------------------------
+    def _actor_tick(self):
+        # in-flight weight update at a decode-step boundary (Alg. 2 l. 9-11)
+        while self.pending and self.pending[0][0] <= self.actor_time:
+            _, params, version = self.pending.pop(0)
+            self.engine.set_weights(params, version,
+                                    recompute_kv=self.pc.recompute_kv)
+        h_active = self.engine.n_active
+        finished = self.engine.step(self.task, now=self.actor_time)
+        self.actor_time += self.hw.step_cost(h_active / max(self.gen_chips, 1))
+        for r in finished:
+            r.finished_at = self.actor_time
+        self.queue.put(finished)
+        self.engine.refill(self.actor_time)
+
+    def _trainer_tick(self):
+        B = self.pc.batch_size
+        while len(self.queue) >= B:
+            rollouts = self.queue.pop(B)
+            t_avail = max(r.finished_at for r in rollouts)
+            raw_reward = float(np.mean([r.reward for r in rollouts]))
+            if self.preprocessor is not None:
+                rollouts = self.preprocessor.process(rollouts)
+                t_avail += self.preprocessor.stage_time(
+                    sum(r.length for r in rollouts))
+            start = max(self.trainer_time, t_avail)
+            if self.pc.group_baseline:
+                rollouts = _apply_group_baseline(rollouts)
+            batch = pack(rollouts, self.pc.pack_rows, self.pc.pack_seq)
+            stats = batch.pop("packing_stats")
+            metrics = self.trainer.step(_batch_to_device(batch))
+            n_tokens = sum(r.length for r in rollouts)
+            self.trainer_time = start + self.hw.train_time(
+                n_tokens, self.pc.train_chips)
+            max_lag, mean_lag = _lag_stats(rollouts, self.trainer.version - 1)
+            if (self.trainer.version % self.pc.update_every) == 0:
+                self.pending.append((self.trainer_time, self.trainer.params,
+                                     self.trainer.version))
+            self.log.append({
+                "version": self.trainer.version,
+                "samples": self.trainer.version * B,
+                "time": self.trainer_time,
+                "reward": raw_reward,
+                "mean_len": float(np.mean([r.length for r in rollouts])),
+                "max_lag": max_lag,
+                "mean_lag": mean_lag,
+                "fill": stats["fill"],
+                **metrics,
+            })

@@ -1,0 +1,79 @@
+"""Preprocessor — the middle pipeline stage of the paper's implementation
+(Fig. 4): computes reference-model log-probabilities for finished rollouts
+and applies the RLHF-style per-token KL penalty
+
+    r_t  <-  r_task/T  -  beta * (log mu(y_t) - log pi_ref(y_t))
+
+before sequences reach the trainer. Streams between Actor and Trainer like
+the Redis stage in the paper; in the co-simulation it contributes its own
+stage latency (a pure forward pass at tau/3 flashes/token on its chips).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.algo import token_logprobs
+from repro.data.packing import Rollout
+from repro.models import model as M
+
+
+@dataclasses.dataclass
+class PreprocessConfig:
+    kl_coef: float = 0.0        # beta; 0 disables the KL term
+    n_chips: int = 2            # preprocessor workers (sim timing)
+    max_len: int = 64           # padding bucket for the jitted ref forward
+    fwd_flashes_per_token: float = 4.92 / 3.0  # forward-only share of tau
+
+
+class Preprocessor:
+    """Computes pi_ref token logprobs for rollouts and KL-shapes rewards."""
+
+    def __init__(self, cfg: ModelConfig, ref_params, pc: PreprocessConfig):
+        self.cfg, self.pc = cfg, pc
+        self.ref_params = ref_params
+
+        @jax.jit
+        def ref_logprobs(params, tokens, positions):
+            out = M.forward(params, tokens, positions, cfg)
+            return token_logprobs(out["logits"], tokens)
+
+        self._ref_logprobs = ref_logprobs
+
+    def process(self, rollouts: List[Rollout]) -> List[Rollout]:
+        if not rollouts:
+            return rollouts
+        T = self.pc.max_len
+        n = len(rollouts)
+        toks = np.zeros((n, T), np.int32)
+        for i, r in enumerate(rollouts):
+            L = min(r.length, T)
+            toks[i, :L] = r.tokens[:L]
+        pos = jnp.broadcast_to(jnp.arange(T)[None], (n, T))
+        ref_lp = np.asarray(self._ref_logprobs(self.ref_params,
+                                               jnp.asarray(toks), pos))
+        out = []
+        for i, r in enumerate(rollouts):
+            L = min(r.length, T)
+            r.ref_logprobs = ref_lp[i, :L].copy()
+            if self.pc.kl_coef > 0:
+                mask = np.arange(L) >= r.prompt_len
+                kl = (r.behavior_logprobs[:L] - r.ref_logprobs) * mask
+                penalty = np.zeros(L, np.float32)
+                penalty[mask] = self.pc.kl_coef * kl[mask]
+                n_tok = max(int(mask.sum()), 1)
+                r.token_rewards = (np.full(L, r.reward / n_tok, np.float32)
+                                   * mask - penalty)
+            out.append(r)
+        return out
+
+    def stage_time(self, n_tokens: int) -> float:
+        """Simulated stage latency (flashes) for a batch of tokens."""
+        return n_tokens * self.pc.fwd_flashes_per_token / max(
+            self.pc.n_chips, 1)

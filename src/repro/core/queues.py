@@ -1,0 +1,35 @@
+"""Sample queue between Actor and Trainer (the Redis stream of the paper's
+implementation, collapsed to an in-process ring buffer — single-controller
+JAX has no network hop between stages, but the back-pressure semantics are
+preserved: a bounded buffer that drops the *oldest* samples keeps lag
+minimal when the trainer stalls, e.g. during a checkpoint)."""
+from __future__ import annotations
+
+from collections import deque
+from typing import List, Optional
+
+from repro.data.packing import Rollout
+
+
+class SampleQueue:
+    def __init__(self, maxsize: Optional[int] = None):
+        self.buf: deque = deque()
+        self.maxsize = maxsize
+        self.dropped = 0
+        self.total_put = 0
+
+    def put(self, rollouts: List[Rollout]) -> None:
+        for r in rollouts:
+            self.buf.append(r)
+            self.total_put += 1
+            if self.maxsize is not None and len(self.buf) > self.maxsize:
+                self.buf.popleft()  # ring-buffer semantics: drop oldest
+                self.dropped += 1
+
+    def pop(self, n: int) -> List[Rollout]:
+        if len(self.buf) < n:
+            raise ValueError(f"queue has {len(self.buf)} < {n}")
+        return [self.buf.popleft() for _ in range(n)]
+
+    def __len__(self) -> int:
+        return len(self.buf)

@@ -1,0 +1,230 @@
+"""Continuous-batching generation engine with in-flight weight updates —
+the Actor process of PipelineRL (Algorithm 2), TPU/JAX-native.
+
+vLLM's dynamic paged batching becomes a *slot array*: H static slots, each
+with its own write index into a preallocated KV cache. Finished sequences
+retire and their slot is refilled with a new prompt in the same jitted step
+function (no dynamic shapes). The in-flight weight update is a host-side
+pointer swap of the behavior weights μ — the KV cache (and SSM state) of
+in-progress sequences is retained *stale*, exactly the paper's mechanism
+(§5.1 shows this is safe; `recompute_kv=True` reproduces their ablation).
+
+Per-token bookkeeping records the behavior logprob (mixed-policy μ of
+Eq. 8) and the weight version each token was sampled under (token lag).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, kv_cache_specs
+from repro.data.math_task import MathTask, Problem
+from repro.data.packing import Rollout
+from repro.models import model as M
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    n_slots: int = 16            # H, the generation batch size
+    max_len: int = 64            # prompt + completion budget per sequence
+    temperature: float = 1.0
+    eos_id: int = 2
+    pad_id: int = 0
+
+
+def _zero_cache(cfg: ModelConfig, n_slots: int, max_len: int):
+    specs = kv_cache_specs(cfg, n_slots, max_len)
+    return {k: jnp.zeros(v.shape, v.dtype) for k, v in specs.items()}
+
+
+def _engine_step(params, st: Dict[str, Any], cfg: ModelConfig,
+                 ec: EngineConfig):
+    """One token for every active slot. st: tokens (H,T), n_cached (H,),
+    prompt_len (H,), active (H,) bool, cache, lp (H,T), key."""
+    H, T = st["tokens"].shape
+    idx = jnp.arange(H)
+    cur_tok = st["tokens"][idx, st["n_cached"]][:, None]          # (H,1)
+    positions = st["n_cached"][:, None]                           # (H,1)
+    out = M.decode_step(params, cur_tok, positions, st["cache"],
+                        st["n_cached"], cfg, ring=False)
+    logits = out["logits"][:, 0] / jnp.maximum(ec.temperature, 1e-6)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+
+    key, sub = jax.random.split(st["key"])
+    sampled = jax.random.categorical(sub, logp, axis=-1)          # (H,)
+
+    next_idx = st["n_cached"] + 1
+    in_prompt = next_idx < st["prompt_len"]
+    forced = st["tokens"][idx, jnp.minimum(next_idx, T - 1)]
+    next_tok = jnp.where(in_prompt, forced, sampled).astype(jnp.int32)
+    tok_lp = jnp.take_along_axis(logp, next_tok[:, None], axis=-1)[:, 0]
+    tok_lp = jnp.where(in_prompt, 0.0, tok_lp)
+
+    active = st["active"]
+    write = active & (next_idx < T)
+    tokens = st["tokens"].at[idx, jnp.minimum(next_idx, T - 1)].set(
+        jnp.where(write, next_tok, st["tokens"][idx, jnp.minimum(next_idx, T - 1)]))
+    lp = st["lp"].at[idx, jnp.minimum(next_idx, T - 1)].set(
+        jnp.where(write, tok_lp, st["lp"][idx, jnp.minimum(next_idx, T - 1)]))
+
+    finished = active & ~in_prompt & (
+        (next_tok == ec.eos_id) | (next_idx >= T - 1))
+    n_cached = jnp.where(active, next_idx, st["n_cached"])
+    new_active = active & ~finished
+
+    new_st = dict(st, tokens=tokens, lp=lp, key=key,
+                  n_cached=n_cached, active=new_active, cache=out["cache"])
+    return new_st, finished
+
+
+class GenerationEngine:
+    """H-slot continuous-batching engine (Algorithm 2, Actor)."""
+
+    def __init__(self, cfg: ModelConfig, params, ec: EngineConfig,
+                 prompt_source: Callable[[], Problem], seed: int = 0):
+        self.cfg, self.ec = cfg, ec
+        self.params = params      # behavior weights μ
+        self.version = 0          # trainer version of μ
+        self.prompt_source = prompt_source
+        H, T = ec.n_slots, ec.max_len
+        self.state: Dict[str, Any] = {
+            "tokens": jnp.zeros((H, T), jnp.int32),
+            "lp": jnp.zeros((H, T), jnp.float32),
+            "n_cached": jnp.zeros((H,), jnp.int32),
+            "prompt_len": jnp.ones((H,), jnp.int32),
+            "active": jnp.zeros((H,), bool),
+            "cache": _zero_cache(cfg, H, T),
+            "key": jax.random.PRNGKey(seed),
+        }
+        # host-side bookkeeping
+        self.problems: List[Optional[Problem]] = [None] * H
+        self.ver_buf = np.zeros((H, T), np.int32)
+        self.started_at = np.zeros(H, np.float64)
+        self.tokens_generated = 0
+        self._step = jax.jit(functools.partial(_engine_step, cfg=cfg, ec=ec))
+        self._recompute = jax.jit(functools.partial(self._recompute_impl, cfg=cfg))
+
+    # ----- weights -----------------------------------------------------
+    def set_weights(self, params, version: int, recompute_kv: bool = False):
+        """In-flight weight update: swap μ, keep the (stale) KV cache.
+        recompute_kv=True reproduces the paper's §5.1 ablation (recompute
+        the cache of in-progress sequences under the new weights)."""
+        self.params = params
+        self.version = version
+        if recompute_kv:
+            self.state["cache"] = self._recompute(params, self.state)
+
+    @staticmethod
+    def _recompute_impl(params, st, cfg: ModelConfig):
+        H, T = st["tokens"].shape
+        positions = jnp.broadcast_to(jnp.arange(T)[None], (H, T))
+        out = M.forward(params, st["tokens"], positions, cfg, return_cache=True)
+        # entries at positions >= n_cached are garbage in both old and new
+        # caches (masked by cache_index), so a full overwrite is safe.
+        new = dict(st["cache"])
+        for k in ("k", "v", "c_kv", "k_rope", "conv", "ssd"):
+            if k in out["cache"]:
+                if k in ("conv", "ssd"):
+                    continue  # recurrent state recompute not supported here
+                new[k] = out["cache"][k].astype(new[k].dtype)
+        return new
+
+    # ----- admission ----------------------------------------------------
+    def refill(self, now: float = 0.0) -> int:
+        """Fill inactive slots with fresh prompts. The prompt source may
+        return None to decline (serving: empty request queue) — those slots
+        stay inactive. Returns #admitted."""
+        active = np.asarray(self.state["active"])
+        free = np.where(~active)[0]
+        if free.size == 0:
+            return 0
+        H, T = self.ec.n_slots, self.ec.max_len
+        tokens = np.asarray(self.state["tokens"]).copy()
+        n_cached = np.asarray(self.state["n_cached"]).copy()
+        prompt_len = np.asarray(self.state["prompt_len"]).copy()
+        lp = np.asarray(self.state["lp"]).copy()
+        act = active.copy()
+        admitted = []
+        for s in free:
+            prob = self.prompt_source()
+            if prob is None:
+                continue
+            admitted.append(s)
+            pl = min(len(prob.prompt_ids), T - 2)
+            tokens[s] = self.ec.pad_id
+            tokens[s, :pl] = prob.prompt_ids[:pl]
+            lp[s] = 0.0
+            n_cached[s] = 0
+            prompt_len[s] = pl
+            act[s] = True
+            self.problems[s] = prob
+            self.ver_buf[s] = 0
+            self.started_at[s] = now
+        if not admitted:
+            return 0
+        st = self.state
+        st["tokens"] = jnp.asarray(tokens)
+        st["n_cached"] = jnp.asarray(n_cached)
+        st["prompt_len"] = jnp.asarray(prompt_len)
+        st["lp"] = jnp.asarray(lp)
+        st["active"] = jnp.asarray(act)
+        # zero recurrent state of refilled slots (attention cache is masked
+        # by cache_index, but SSM state carries over unless cleared)
+        if "ssd" in st["cache"]:
+            mask = jnp.asarray(
+                ~np.isin(np.arange(self.ec.n_slots), np.asarray(admitted)),
+                st["cache"]["ssd"].dtype)
+            st["cache"]["ssd"] = st["cache"]["ssd"] * mask[None, :, None, None, None]
+            st["cache"]["conv"] = st["cache"]["conv"] * mask[None, :, None, None].astype(st["cache"]["conv"].dtype)
+        return len(admitted)
+
+    @property
+    def n_active(self) -> int:
+        return int(np.asarray(self.state["active"]).sum())
+
+    # ----- stepping -----------------------------------------------------
+    def step(self, task: Optional[MathTask] = None,
+             now: float = 0.0) -> List[Rollout]:
+        """Generate one token on every active slot; returns rollouts that
+        finished this step."""
+        prev_active = np.asarray(self.state["active"])
+        prev_ncached = np.asarray(self.state["n_cached"])
+        self.state, finished = self._step(self.params, self.state)
+        finished = np.asarray(finished)
+        # record weight version for tokens written this step
+        wrote = prev_active & (prev_ncached + 1 < self.ec.max_len)
+        self.ver_buf[wrote, prev_ncached[wrote] + 1] = self.version
+        self.tokens_generated += int(prev_active.sum())
+
+        done: List[Rollout] = []
+        if finished.any():
+            tokens = np.asarray(self.state["tokens"])
+            lp = np.asarray(self.state["lp"])
+            n_cached = np.asarray(self.state["n_cached"])
+            for s in np.where(finished)[0]:
+                L = int(n_cached[s]) + 1  # includes the just-sampled token
+                L = min(L, self.ec.max_len)
+                prob = self.problems[s]
+                pl = int(np.asarray(self.state["prompt_len"])[s])
+                completion = tokens[s, pl:L]
+                reward = 0.0
+                if task is not None and prob is not None:
+                    reward = task.reward(prob, completion,
+                                         self.ec.max_len - pl)
+                done.append(Rollout(
+                    tokens=tokens[s, :L].copy(),
+                    prompt_len=pl,
+                    behavior_logprobs=lp[s, :L].copy(),
+                    reward=reward,
+                    weight_versions=self.ver_buf[s, :L].copy(),
+                    finished_at=now,
+                    prompt_key=(hash(tuple(prob.prompt_ids)) & 0x7FFFFFFF
+                                if prob is not None else 0),
+                    slot=int(s),
+                ))
+        return done

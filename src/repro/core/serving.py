@@ -1,0 +1,136 @@
+"""Request-level serving front over the continuous-batching engine.
+
+Mirrors the paper's three integration endpoints (§4 "Architecture and
+Implementation Details") in-process:
+
+  - submit()/step()            ~ /v1/chat/completions (batched, continuous)
+  - connect_trainer()          ~ /init_process_group (weight-transfer pairing)
+  - request_weight_update()    ~ /request_weight_update (in-flight update)
+
+Tracks per-request latency (admission wait, end-to-end) so serving SLOs are
+measurable across in-flight updates — the paper's headline property: the
+engine only *briefly pauses* for new weights, no request is dropped.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.rollout import EngineConfig, GenerationEngine
+from repro.data.math_task import Problem
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt_ids: List[int]
+    submitted_at: float = 0.0
+    admitted_at: Optional[float] = None
+    finished_at: Optional[float] = None
+    completion_ids: Optional[np.ndarray] = None
+    weight_versions: Optional[np.ndarray] = None
+
+    @property
+    def latency(self) -> Optional[float]:
+        if self.finished_at is None:
+            return None
+        return self.finished_at - self.submitted_at
+
+
+class _QueueSource:
+    """Prompt source draining the server's waiting queue (None when empty);
+    records which Request each admitted Problem belongs to."""
+
+    def __init__(self, server: "Server"):
+        self.server = server
+        self.last_admitted: List[Request] = []
+
+    def __call__(self) -> Optional[Problem]:
+        if not self.server.waiting:
+            return None
+        req = self.server.waiting.popleft()
+        req.admitted_at = self.server.clock
+        self.last_admitted.append(req)
+        prob = Problem(req.prompt_ids, 0)
+        prob.rid = req.rid  # type: ignore[attr-defined]
+        return prob
+
+
+class Server:
+    """Continuous-batching server with in-flight weight updates."""
+
+    def __init__(self, cfg: ModelConfig, params, ec: EngineConfig,
+                 seed: int = 0):
+        self.cfg, self.ec = cfg, ec
+        self.waiting: deque = deque()
+        self.in_flight: Dict[int, Request] = {}
+        self.done: List[Request] = []
+        self._next_rid = 0
+        self.clock = 0.0
+        self._trainer: Optional[Callable] = None
+        self._source = _QueueSource(self)
+        self.engine = GenerationEngine(cfg, params, ec, self._source,
+                                       seed=seed)
+
+    # ---- the three endpoints -----------------------------------------
+    def submit(self, prompt_ids: List[int]) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        self.waiting.append(Request(rid, list(prompt_ids),
+                                    submitted_at=self.clock))
+        return rid
+
+    def connect_trainer(self, get_weights: Callable[[], tuple]) -> None:
+        """Pair with a trainer: `get_weights() -> (params, version)`."""
+        self._trainer = get_weights
+
+    def request_weight_update(self, recompute_kv: bool = False) -> int:
+        """In-flight update: swap weights at the next step boundary; every
+        in-flight request keeps its KV cache."""
+        assert self._trainer is not None, "connect_trainer first"
+        params, version = self._trainer()
+        self.engine.set_weights(params, version, recompute_kv=recompute_kv)
+        return version
+
+    # ---- serving loop ---------------------------------------------------
+    def step(self, dt: float = 1.0) -> List[Request]:
+        """Admit waiting requests, decode one token for every in-flight
+        request; returns requests completed this step."""
+        self._source.last_admitted = []
+        self.engine.refill(self.clock)
+        for req in self._source.last_admitted:
+            self.in_flight[req.rid] = req
+        rollouts = self.engine.step(None, now=self.clock)
+        self.clock += dt
+        out = []
+        for r in rollouts:
+            prob = self.engine.problems[r.slot]
+            rid = getattr(prob, "rid", None)
+            if rid is None or rid not in self.in_flight:
+                continue
+            req = self.in_flight.pop(rid)
+            req.finished_at = self.clock
+            req.completion_ids = r.tokens[r.prompt_len:]
+            req.weight_versions = r.weight_versions[r.prompt_len:]
+            self.done.append(req)
+            out.append(req)
+        return out
+
+    # ---- metrics --------------------------------------------------------
+    def metrics(self) -> dict:
+        lat = [r.latency for r in self.done if r.latency is not None]
+        wait = [r.admitted_at - r.submitted_at for r in self.done
+                if r.admitted_at is not None]
+        return {
+            "served": len(self.done),
+            "in_flight": len(self.in_flight),
+            "waiting": len(self.waiting),
+            "p50_latency": float(np.percentile(lat, 50)) if lat else 0.0,
+            "p99_latency": float(np.percentile(lat, 99)) if lat else 0.0,
+            "mean_admission_wait": float(np.mean(wait)) if wait else 0.0,
+            "tokens_generated": self.engine.tokens_generated,
+        }

@@ -1,0 +1,124 @@
+"""Trainer: the π side of PipelineRL (Algorithm 2, Trainer process).
+
+`train_step` is a pure function (pjit-able with the sharding rules); the
+`Trainer` class wraps it with weight-version bookkeeping — each optimizer
+step bumps `version`, which is what the in-flight weight update ships to
+the generation engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.algo import RLConfig, reinforce_loss
+from repro.models import model as M
+from repro.optim.adam import AdamConfig, AdamState, adam_init, adam_update
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamState
+    version: jax.Array  # == number of optimizer steps taken
+
+
+def init_train_state(params) -> TrainState:
+    return TrainState(params=params, opt=adam_init(params),
+                      version=jnp.zeros((), jnp.int32))
+
+
+def loss_fn(params, batch: Dict[str, jax.Array], cfg: ModelConfig,
+            rl: RLConfig):
+    out = M.forward(
+        params, batch["tokens"], batch["positions"], cfg,
+        segment_ids=batch.get("segment_ids"),
+        prefix_embeds=batch.get("prefix_embeds"),
+    )
+    loss, metrics = reinforce_loss(out["logits"], out.get("values"), batch, rl)
+    if cfg.n_experts:
+        loss = loss + rl.aux_coef * out["aux_loss"]
+        metrics["moe_aux"] = out["aux_loss"]
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def train_step(state: TrainState, batch, cfg: ModelConfig, rl: RLConfig,
+               adam: AdamConfig, microbatch: int = 1, lr_schedule=None,
+               ) -> Tuple[TrainState, Dict[str, jax.Array]]:
+    """One optimizer step. microbatch > 1 enables gradient accumulation:
+    the global batch is split into `microbatch` chunks processed by a scan,
+    dividing activation memory by the same factor (beyond-paper memory
+    optimization, see EXPERIMENTS.md §Perf)."""
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+    if microbatch <= 1:
+        (_, metrics), grads = grad_fn(state.params, batch, cfg, rl)
+    else:
+        def split(x):
+            return x.reshape((microbatch, x.shape[0] // microbatch)
+                             + x.shape[1:])
+
+        mb = jax.tree.map(split, batch)
+        first = jax.tree.map(lambda x: x[0], mb)
+        m_shapes = jax.eval_shape(
+            lambda p, c: grad_fn(p, c, cfg, rl)[0][1], state.params, first)
+        zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              state.params)
+        zero_m = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), m_shapes)
+
+        def acc(carry, chunk):
+            g_acc, m_acc = carry
+            (_, m), g = grad_fn(state.params, chunk, cfg, rl)
+            g_acc = jax.tree.map(
+                lambda a, b: a + b.astype(jnp.float32) / microbatch, g_acc, g)
+            m_acc = jax.tree.map(lambda a, b: a + b / microbatch, m_acc, m)
+            return (g_acc, m_acc), None
+
+        (grads, metrics), _ = jax.lax.scan(acc, (zero_g, zero_m), mb)
+    lr = lr_schedule(state.opt.step) if lr_schedule is not None else None
+    new_params, new_opt, gnorm = adam_update(state.params, grads, state.opt,
+                                             adam, lr=lr)
+    metrics["grad_norm"] = gnorm
+    if lr is not None:
+        metrics["lr"] = lr
+    return TrainState(new_params, new_opt, state.version + 1), metrics
+
+
+def make_train_step(cfg: ModelConfig, rl: RLConfig, adam: AdamConfig,
+                    donate: bool = True, microbatch: int = 1,
+                    lr_schedule=None):
+    fn = functools.partial(train_step, cfg=cfg, rl=rl, adam=adam,
+                           microbatch=microbatch, lr_schedule=lr_schedule)
+    return jax.jit(fn, donate_argnums=(0,) if donate else ())
+
+
+class Trainer:
+    """Consumes packed batches, performs optimizer steps, exposes the
+    current policy weights + version for in-flight updates."""
+
+    def __init__(self, cfg: ModelConfig, params, rl: RLConfig = RLConfig(),
+                 adam: AdamConfig = AdamConfig(), lr_schedule=None):
+        self.cfg, self.rl, self.adam = cfg, rl, adam
+        self.state = init_train_state(params)
+        # no donation: the generation engine aliases these buffers between
+        # in-flight updates (the co-sim shares one device)
+        self._step = make_train_step(cfg, rl, adam, donate=False,
+                                     lr_schedule=lr_schedule)
+        self.history: list = []
+
+    @property
+    def version(self) -> int:
+        return int(self.state.version)
+
+    @property
+    def params(self):
+        return self.state.params
+
+    def step(self, batch) -> Dict[str, float]:
+        self.state, metrics = self._step(self.state, batch)
+        metrics = {k: float(v) for k, v in metrics.items()}
+        self.history.append(metrics)
+        return metrics

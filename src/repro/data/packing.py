@@ -1,0 +1,90 @@
+"""Online sequence packing (paper §4 'Key optimizations ... online sequence
+packing for fast training').
+
+Finished rollouts of ragged length are packed greedily (first-fit) into
+fixed (B, S) training rows; `segment_ids` prevent cross-sequence attention,
+`positions` restart per segment, and `loss_mask` covers completion tokens
+only. Packed batches match the `train` input_specs exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Rollout:
+    """One finished sequence from the generation engine."""
+    tokens: np.ndarray             # (T,) prompt + completion
+    prompt_len: int
+    behavior_logprobs: np.ndarray  # (T,) 0 for prompt positions
+    reward: float
+    weight_versions: np.ndarray    # (T,) trainer version each token was sampled under
+    finished_at: float = 0.0       # sim-clock timestamp (lag bookkeeping)
+    prompt_key: int = 0            # prompt identity (group-relative baseline)
+    ref_logprobs: Optional[np.ndarray] = None   # filled by the Preprocessor
+    token_rewards: Optional[np.ndarray] = None  # KL-shaped per-token rewards
+    slot: int = -1                 # engine slot that produced this rollout
+
+    @property
+    def length(self) -> int:
+        return int(self.tokens.shape[0])
+
+
+def pack(rollouts: List[Rollout], batch: int, seq: int,
+         pad_id: int = 0) -> Dict[str, np.ndarray]:
+    """First-fit pack rollouts into (batch, seq) rows. Sequences longer than
+    `seq` are truncated; rows that stay empty are fully masked."""
+    tokens = np.full((batch, seq), pad_id, np.int32)
+    segment_ids = np.zeros((batch, seq), np.int32)
+    positions = np.zeros((batch, seq), np.int32)
+    loss_mask = np.zeros((batch, seq), np.float32)
+    behavior_lp = np.zeros((batch, seq), np.float32)
+    rewards = np.zeros((batch, seq), np.float32)   # per-token (broadcast of seq reward)
+    versions = np.zeros((batch, seq), np.int32)
+    used = np.zeros(batch, np.int32)
+    n_seg = np.zeros(batch, np.int32)
+    dropped = 0
+
+    for r in rollouts:
+        T = min(r.length, seq)
+        row = -1
+        for b in range(batch):
+            if used[b] + T <= seq:
+                row = b
+                break
+        if row < 0:
+            dropped += 1
+            continue
+        o = used[row]
+        tokens[row, o:o + T] = r.tokens[:T]
+        n_seg[row] += 1
+        segment_ids[row, o:o + T] = n_seg[row]
+        positions[row, o:o + T] = np.arange(T)
+        # loss on completion tokens only (prediction targets are shifted in
+        # the trainer; the mask marks *sampled* positions)
+        lm_start = min(r.prompt_len, T)
+        loss_mask[row, o + lm_start:o + T] = 1.0
+        behavior_lp[row, o:o + T] = r.behavior_logprobs[:T]
+        if r.token_rewards is not None:
+            rewards[row, o:o + T] = r.token_rewards[:T]
+        else:
+            rewards[row, o:o + T] = r.reward
+        versions[row, o:o + T] = r.weight_versions[:T]
+        used[row] += T
+
+    return {
+        "tokens": tokens,
+        "segment_ids": segment_ids,
+        "positions": positions,
+        "loss_mask": loss_mask,
+        "behavior_logprobs": behavior_lp,
+        "rewards": rewards,
+        "weight_versions": versions,
+        "packing_stats": {
+            "fill": float(used.sum()) / float(batch * seq),
+            "dropped": dropped,
+        },
+    }

@@ -1,0 +1,98 @@
+"""Pallas TPU flash-decode: one-token GQA attention against a (possibly
+ring-buffer) KV cache — the generation engine's hot loop.
+
+TPU adaptation of vLLM's paged-attention CUDA kernel: instead of gather-
+paged KV blocks, the cache is a contiguous per-slot ring buffer (static
+shapes, see DESIGN.md) and the kernel streams KV *blocks* HBM->VMEM along
+the sequential trailing grid axis with online-softmax accumulation in VMEM
+scratch. Invalid slots (>= cache length) are masked, so one kernel serves
+both the growing-cache and the full-ring cases.
+
+grid = (batch, kv_heads, n_kv_blocks); all `rep` q-heads of a kv head are
+processed together as a (rep, d) tile — MXU-friendly and it amortizes the
+KV block fetch exactly like GQA intends.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                   *, scale: float, block_k: int, n_kv_blocks: int):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                 # (rep, d)
+    k = k_ref[0, 0].astype(jnp.float32)                 # (bk, d)
+    v = v_ref[0, 0].astype(jnp.float32)                 # (bk, dv)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    valid = (ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (q.shape[0], block_k), 1)) < len_ref[0]
+    s = jnp.where(valid, s, NEG_INF)
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_prev * corr + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_decode(q, k_cache, v_cache, lengths, *, scale: float,
+                 block_k: int = 256, interpret: bool = True):
+    """q: (B,H,Dk); caches: (B,CL,KV,D); lengths: (B,) valid cache length
+    per slot (pass CL for a full ring buffer). Returns (B,H,Dv)."""
+    B, H, Dk = q.shape
+    CL, KV = k_cache.shape[1], k_cache.shape[2]
+    Dv = v_cache.shape[-1]
+    rep = H // KV
+    block_k = min(block_k, CL)
+    assert CL % block_k == 0, (CL, block_k)
+    nk = CL // block_k
+
+    qr = q.reshape(B, KV, rep, Dk)
+    kr = jnp.swapaxes(k_cache, 1, 2)                    # (B,KV,CL,D)
+    vr = jnp.swapaxes(v_cache, 1, 2)
+    lengths = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (B,))
+
+    kernel = functools.partial(_decode_kernel, scale=scale, block_k=block_k,
+                               n_kv_blocks=nk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, KV, nk),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, ki: (b,),
+                         memory_space=pltpu.MemorySpace.SMEM),
+            pl.BlockSpec((1, 1, rep, Dk), lambda b, h, ki: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, Dk), lambda b, h, ki: (b, h, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, Dv), lambda b, h, ki: (b, h, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rep, Dv), lambda b, h, ki: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, rep, Dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((rep, 1), jnp.float32),
+            pltpu.VMEM((rep, 1), jnp.float32),
+            pltpu.VMEM((rep, Dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lengths, qr, kr, vr)
+    return out.reshape(B, H, Dv)

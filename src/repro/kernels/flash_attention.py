@@ -1,0 +1,107 @@
+"""Pallas TPU flash attention (prefill/train) with GQA and causal masking.
+
+TPU adaptation of the paper's vLLM/CUDA attention path: online-softmax over
+KV blocks with the running (m, l, acc) statistics held in VMEM scratch that
+persists across the sequential trailing grid axis. Block shapes are
+MXU-aligned (128) and sized so the working set (q tile + k tile + v tile +
+acc) fits v5e VMEM (~128 KiB * 128 lanes).
+
+grid = (batch, q_heads, n_q_blocks, n_kv_blocks); the kv axis is innermost
+(sequential on TPU), so scratch carries the accumulation; the causal upper
+triangle is skipped with pl.when (real savings on TPU, structural no-op in
+interpret mode).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                  *, scale: float, block_q: int, block_k: int,
+                  n_kv_blocks: int, causal: bool):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)            # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)            # (bk, dv)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (bq, bk)
+        if causal:
+            rows = qi * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            cols = ki * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(rows >= cols, s, NEG_INF)
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_prev * corr + p.sum(axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    if causal:
+        # skip fully-masked blocks above the diagonal
+        pl.when(qi * block_q + block_q - 1 >= ki * block_k)(_compute)
+    else:
+        _compute()
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, scale: float, causal: bool = True,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = True):
+    """q: (B,H,S,Dk); k,v: (B,KV,S,Dk/Dv) — GQA folded via h // rep.
+    Returns (B,H,S,Dv)."""
+    B, H, S, Dk = q.shape
+    KV, Dv = k.shape[1], v.shape[-1]
+    rep = H // KV
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    assert S % block_q == 0 and S % block_k == 0, (S, block_q, block_k)
+    nq, nk = S // block_q, S // block_k
+    grid = (B, H, nq, nk)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, block_q=block_q, block_k=block_k,
+        n_kv_blocks=nk, causal=causal)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, Dk), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, Dk), lambda b, h, qi, ki, _r=rep: (b, h // _r, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, Dv), lambda b, h, qi, ki, _r=rep: (b, h // _r, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, Dv), lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, Dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running max
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running denom
+            pltpu.VMEM((block_q, Dv), jnp.float32),  # running numerator
+        ],
+        interpret=interpret,
+    )(q, k, v)

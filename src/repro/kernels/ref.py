@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for every Pallas kernel (the blocked/naive model-zoo
+implementations double as references; re-exported here with the kernels'
+calling conventions)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.attention import (
+    _naive_causal_attention,
+    decode_attention as _decode_ref,
+)
+from repro.models.ssm import ssd_chunked
+
+
+def flash_attention_ref(q, k, v, *, scale: float, causal: bool = True):
+    """q: (B,H,S,Dk); k,v: (B,KV,S,D). Matches kernels.flash_attention."""
+    qb = jnp.swapaxes(q, 1, 2)      # (B,S,H,D)
+    kb = jnp.swapaxes(k, 1, 2)
+    vb = jnp.swapaxes(v, 1, 2)
+    if not causal:
+        raise NotImplementedError("reference is causal-only")
+    out = _naive_causal_attention(qb, kb, vb, scale=scale)
+    return jnp.swapaxes(out, 1, 2)
+
+
+def flash_decode_ref(q, k_cache, v_cache, lengths, *, scale: float):
+    """Matches kernels.flash_decode (lengths == CL means full ring)."""
+    return _decode_ref(q, k_cache, v_cache, jnp.asarray(lengths),
+                       scale=scale, ring=False)
+
+
+def ssd_scan_ref(x, dt, A, B, C, *, chunk: int = 64):
+    """Matches kernels.ssd_scan: returns (y, final_state (b,h,n,p))."""
+    y, state = ssd_chunked(x, dt, A, B, C, chunk)
+    return y, jnp.swapaxes(state, -1, -2)

@@ -1,0 +1,182 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape) on
+the production meshes and record memory/cost/collective analysis.
+
+  python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out results.json]
+
+This is the proof that the distribution config is coherent without real
+hardware: a sharding mismatch, OOM-at-compile, or unsupported collective
+fails here. Results feed EXPERIMENTS.md §Dry-run and §Roofline.
+"""
+import argparse   # noqa: E402
+import json       # noqa: E402
+import time       # noqa: E402
+import traceback  # noqa: E402
+
+import jax        # noqa: E402
+
+from repro.configs import ARCH_IDS, SHAPES, get_config          # noqa: E402
+from repro.configs.base import for_shape                        # noqa: E402
+from repro.launch.mesh import make_production_mesh              # noqa: E402
+from repro.launch.steps import lower_program, lower_weight_update  # noqa: E402
+from repro.roofline.analysis import analyze, model_flops_estimate  # noqa: E402
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool = False,
+            include_weight_update: bool = False, calibrated: bool = False,
+            optimized: bool = False) -> dict:
+    """optimized=True applies the §Perf winners: remat + microbatch=16 for
+    train shapes, GEN_RULES + cache donation for inference shapes.
+    calibrated=True replaces the scan-blind cost_analysis terms with the
+    unroll-calibrated extrapolation (see repro.roofline.calibrate)."""
+    import dataclasses
+
+    from repro.launch.steps import GEN_RULES
+    from repro.roofline.calibrate import calibrated_roofline
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "x".join(map(str, mesh.devices.shape)), "ok": False,
+           "optimized": optimized, "calibrated": calibrated}
+    rules = None
+    lower_kw = {}
+    microbatch = 1
+    if optimized:
+        if shape.kind == "train":
+            cfg = dataclasses.replace(cfg, remat=True)
+            microbatch = 16
+            lower_kw["microbatch"] = 16
+        else:
+            # GEN_RULES gathers the FSDP dim: a win up to ~40B params, but
+            # replicating 671B-MoE weights over the data axis costs 84GB/dev
+            # — keep weight sharding for the giants (§Perf-2 discussion)
+            if cfg.param_count() < 40e9:
+                rules = GEN_RULES
+                lower_kw["rules"] = GEN_RULES
+            lower_kw["donate_cache"] = True
+    t0 = time.time()
+    try:
+        prog = lower_program(cfg, shape, mesh, **lower_kw)
+        t_lower = time.time() - t0
+        compiled = prog.compile()
+        t_compile = time.time() - t0 - t_lower
+        if calibrated:
+            ma0 = compiled.memory_analysis()
+            roof = calibrated_roofline(
+                cfg, shape, mesh, microbatch=microbatch, rules=rules,
+                mem_bytes_per_device=float(ma0.argument_size_in_bytes
+                                           + ma0.temp_size_in_bytes))
+            if rules is not None:
+                roof.name += ":gen_rules"
+        else:
+            roof = analyze(prog.name, compiled, n_dev,
+                           model_flops_estimate(for_shape(cfg, shape), shape))
+        rec.update(ok=True, t_lower_s=round(t_lower, 1),
+                   t_compile_s=round(t_compile, 1), **roof.row())
+        try:
+            ma = compiled.memory_analysis()
+            rec["memory_analysis"] = {
+                "argument_gb": ma.argument_size_in_bytes / 1e9,
+                "output_gb": ma.output_size_in_bytes / 1e9,
+                "temp_gb": ma.temp_size_in_bytes / 1e9,
+                "peak_gb": (ma.argument_size_in_bytes
+                            + ma.temp_size_in_bytes) / 1e9,
+            }
+        except Exception:
+            pass
+        if include_weight_update:
+            wu = lower_weight_update(cfg, mesh)
+            wu_compiled = wu.compile()
+            wroof = analyze(wu.name, wu_compiled, n_dev)
+            rec["weight_update"] = wroof.row()
+    except Exception as e:
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    rec["t_total_s"] = round(time.time() - t0, 1)
+    return rec
+
+
+def run_disaggregated(arch: str, n_train_model: int = 8) -> dict:
+    """The paper's T-vs-(N-T) resource split as meshes: lower train_step on
+    the trainer submesh, serve_step on the generator submesh, and the
+    in-flight weight transfer between them — proving the disaggregated
+    placement is coherent (PipelineRL's actual deployment topology)."""
+    from repro.launch.mesh import make_disaggregated_meshes
+    from repro.launch.steps import GEN_RULES
+
+    full = make_production_mesh()
+    train_mesh, gen_mesh = make_disaggregated_meshes(
+        full, n_train_model=n_train_model)
+    cfg = get_config(arch)
+    rec = {"arch": arch, "train_mesh": str(train_mesh.devices.shape),
+           "gen_mesh": str(gen_mesh.devices.shape), "ok": False}
+    t0 = time.time()
+    try:
+        tp = lower_program(cfg, SHAPES["train_4k"], train_mesh)
+        tc = tp.compile()
+        rec["train"] = analyze(tp.name, tc, train_mesh.devices.size).row()
+        gp = lower_program(cfg, SHAPES["decode_32k"], gen_mesh,
+                           rules=GEN_RULES, donate_cache=True)
+        gc = gp.compile()
+        rec["serve"] = analyze(gp.name, gc, gen_mesh.devices.size).row()
+        rec["ok"] = True
+    except Exception as e:
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    rec["t_total_s"] = round(time.time() - t0, 1)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=tuple(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--weight-update", action="store_true")
+    ap.add_argument("--calibrated", action="store_true",
+                    help="unroll-calibrated roofline terms (3 extra compiles)")
+    ap.add_argument("--optimized", action="store_true",
+                    help="apply §Perf winners (remat+microbatch / GEN_RULES)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    combos = []
+    if args.all:
+        combos = [(a, s) for a in ARCH_IDS for s in SHAPES]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        combos = [(args.arch, args.shape)]
+
+    results = []
+    for arch, shape in combos:
+        rec = run_one(arch, shape, multi_pod=args.multi_pod,
+                      include_weight_update=args.weight_update,
+                      calibrated=args.calibrated, optimized=args.optimized)
+        status = "OK " if rec["ok"] else "FAIL"
+        print(f"[{status}] {arch:24s} {shape:12s} mesh={rec['mesh']} "
+              f"t={rec['t_total_s']}s "
+              + (f"bottleneck={rec.get('bottleneck')}" if rec["ok"]
+                 else rec.get("error", "")), flush=True)
+        results.append(rec)
+        if args.out:
+            os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+            with open(args.out, "w") as f:
+                json.dump(results, f, indent=1, default=str)
+
+    n_ok = sum(r["ok"] for r in results)
+    print(f"\n{n_ok}/{len(results)} combinations lowered + compiled")
+    if n_ok < len(results):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,191 @@
+"""Step-program builders for the launcher and the multi-pod dry-run.
+
+For every (architecture × input shape × mesh) this module produces the jit
+callable + in_shardings needed to `.lower().compile()` the program:
+
+  train   -> RL train_step (forward + IS-REINFORCE + Adam)
+  prefill -> prompt forward building the KV cache
+  decode  -> serve_step: ONE new token against a seq_len cache
+  (plus)  -> weight_update: the in-flight weight transfer, expressed as a
+             reshard from the trainer layout (FSDP+TP) to the generation
+             layout (TP only, FSDP gathered) — its collectives ARE the
+             paper's in-flight update cost, visible in the HLO.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (
+    ModelConfig, ShapeSpec, for_shape, input_logical, input_specs,
+)
+from repro.core.algo import RLConfig
+from repro.core.trainer import TrainState, train_step
+from repro.models import model as M
+from repro.optim.adam import AdamConfig, AdamState
+from repro.sharding import Annotated, logical_to_spec, tree_shardings, tree_values
+
+# generation engines keep tensor parallelism but gather the FSDP dim: the
+# trainer->generator weight transfer is exactly this reshard. The embedding
+# table's vocab dim is replicated too: a gather from a vocab-sharded operand
+# makes GSPMD fully rematerialize the table every step (§Perf iteration 3)
+GEN_RULES = {"p_embed": None, "p_embed_vocab": None}
+
+
+def abstract_params(cfg: ModelConfig):
+    return M.init_params(cfg, abstract=True)
+
+
+def abstract_train_state(cfg: ModelConfig) -> Tuple[Any, Any]:
+    """(TrainState of ShapeDtypeStructs, TrainState of NamedShardings) —
+    shardings filled in by state_shardings()."""
+    ann = abstract_params(cfg)
+    params = tree_values(ann)
+    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    opt = AdamState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                    m=jax.tree.map(f32, params),
+                    v=jax.tree.map(f32, params))
+    state = TrainState(params=params, opt=opt,
+                       version=jax.ShapeDtypeStruct((), jnp.int32))
+    return ann, state
+
+
+def state_shardings(ann, mesh: Mesh, rules=None):
+    ps = tree_shardings(ann, mesh, rules)
+    rep = NamedSharding(mesh, P())
+    return TrainState(params=ps,
+                      opt=AdamState(step=rep, m=ps, v=ps),
+                      version=rep)
+
+
+def batch_shardings(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+                    rules=None):
+    specs = input_specs(cfg, shape)
+    logical = input_logical(cfg, shape)
+
+    def shard(spec_tree, log_tree):
+        return jax.tree.map(
+            lambda s, l: NamedSharding(
+                mesh, logical_to_spec(l, s.shape, mesh, rules)),
+            spec_tree, log_tree,
+            is_leaf=lambda x: isinstance(x, tuple) or x is None)
+
+    out = {}
+    for k, v in specs.items():
+        if isinstance(v, dict):  # cache tree
+            out[k] = {kk: NamedSharding(
+                mesh, logical_to_spec(logical[k][kk], vv.shape, mesh, rules))
+                for kk, vv in v.items()}
+        else:
+            out[k] = NamedSharding(
+                mesh, logical_to_spec(logical[k], v.shape, mesh, rules))
+    return specs, out
+
+
+# ---------------------------------------------------------------------------
+# step functions (pure; closed over cfg)
+# ---------------------------------------------------------------------------
+
+def make_train_fn(cfg: ModelConfig, rl: RLConfig = RLConfig(),
+                  adam: AdamConfig = AdamConfig(), microbatch: int = 1):
+    def fn(state, batch):
+        new_state, metrics = train_step(state, batch, cfg, rl, adam,
+                                        microbatch=microbatch)
+        return new_state, metrics
+    return fn
+
+
+def make_prefill_fn(cfg: ModelConfig):
+    def fn(params, batch):
+        out = M.forward(params, batch["tokens"], batch["positions"], cfg,
+                        prefix_embeds=batch.get("prefix_embeds"),
+                        return_cache=True)
+        next_tok = jnp.argmax(out["logits"][:, -1:], axis=-1)
+        return next_tok, out["cache"]
+    return fn
+
+
+def make_serve_fn(cfg: ModelConfig, ring: bool):
+    def fn(params, batch):
+        out = M.decode_step(params, batch["tokens"], batch["positions"],
+                            batch["cache"], batch["cache_index"], cfg,
+                            ring=ring)
+        next_tok = jnp.argmax(out["logits"], axis=-1)
+        return next_tok, out["cache"]
+    return fn
+
+
+def weight_update_fn(params):
+    """Identity on the weights; in/out shardings differ (train vs gen
+    layout), so XLA lowers this to the in-flight weight-transfer
+    collectives."""
+    return params
+
+
+# ---------------------------------------------------------------------------
+# lowering helper
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class LoweredProgram:
+    name: str
+    lowered: Any
+    compiled: Any = None
+
+    def compile(self):
+        self.compiled = self.lowered.compile()
+        return self.compiled
+
+
+def lower_program(arch_cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+                  rules=None, microbatch: int = 1,
+                  donate_cache: bool = False) -> LoweredProgram:
+    """Lower the step program for one (arch, shape) on `mesh`.
+
+    donate_cache=True donates the decode batch (KV cache) so XLA aliases the
+    in/out cache buffers and the ring-buffer write is in-place — without it
+    every serve_step copies the whole cache (§Perf iteration 2)."""
+    from repro.shardctx import sharding_context
+
+    cfg = for_shape(arch_cfg, shape)
+    specs, bshard = batch_shardings(cfg, shape, mesh, rules)
+
+    if shape.kind == "train":
+        ann, state = abstract_train_state(cfg)
+        sshard = state_shardings(ann, mesh, rules)
+        fn = make_train_fn(cfg, microbatch=microbatch)
+        with sharding_context(mesh, rules):
+            lowered = jax.jit(fn, in_shardings=(sshard, bshard)).lower(
+                state, specs)
+    else:
+        ann = abstract_params(cfg)
+        params = tree_values(ann)
+        pshard = tree_shardings(ann, mesh, rules)
+        if shape.kind == "prefill":
+            fn = make_prefill_fn(cfg)
+        else:
+            ring = cfg.attention_variant == "sliding_window"
+            fn = make_serve_fn(cfg, ring)
+        donate = (1,) if (donate_cache and shape.kind == "decode") else ()
+        with sharding_context(mesh, rules):
+            lowered = jax.jit(fn, in_shardings=(pshard, bshard),
+                              donate_argnums=donate).lower(params, specs)
+    return LoweredProgram(f"{cfg.name}:{shape.name}", lowered)
+
+
+def lower_weight_update(arch_cfg: ModelConfig, mesh: Mesh) -> LoweredProgram:
+    ann = abstract_params(arch_cfg)
+    params = tree_values(ann)
+    train_shard = tree_shardings(ann, mesh)
+    # giants (>40B) keep the trainer layout at the generator too (gathering
+    # 671B of expert weights over the data axis is 171 GB/dev — see §Perf-3)
+    gen_rules = GEN_RULES if arch_cfg.param_count() < 40e9 else None
+    gen_shard = tree_shardings(ann, mesh, gen_rules)
+    lowered = jax.jit(weight_update_fn, in_shardings=(train_shard,),
+                      out_shardings=gen_shard).lower(params)
+    return LoweredProgram(f"{arch_cfg.name}:weight_update", lowered)

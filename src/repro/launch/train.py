@@ -1,0 +1,130 @@
+"""End-to-end RL training driver.
+
+    PYTHONPATH=src python -m repro.launch.train \
+        --mode pipeline --steps 60 --batch 16 --lr 3e-3 \
+        --ckpt-dir /tmp/pipelinerl
+
+Runs PipelineRL (or the Conventional RL baseline) on the synthetic math
+reasoning task with the tiny testbed model (CPU-scale twin of the paper's
+Qwen-2.5-7B runs), logging reward/ESS/lag per optimizer step and writing
+periodic checkpoints.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+
+from repro.checkpoint import checkpoint
+from repro.configs.tiny import config as tiny_config
+from repro.core.algo import RLConfig
+from repro.core.conventional import ConventionalConfig, ConventionalRL
+from repro.core.evaluator import Evaluator
+from repro.core.pipeline import PipelineConfig, PipelineRL
+from repro.core.preprocess import PreprocessConfig, Preprocessor
+from repro.core.rollout import EngineConfig
+from repro.core.trainer import Trainer
+from repro.data.math_task import MathTask
+from repro.models import model as M
+from repro.optim.adam import AdamConfig
+from repro.optim.schedule import warmup_constant
+from repro.sharding import tree_values
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=("pipeline", "conventional"),
+                    default="pipeline")
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--g", type=int, default=4, help="G for conventional")
+    ap.add_argument("--slots", type=int, default=16, help="H generation batch")
+    ap.add_argument("--max-len", type=int, default=16)
+    ap.add_argument("--chips", type=int, default=8)
+    ap.add_argument("--train-chips", type=int, default=4)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--d-model", type=int, default=96)
+    ap.add_argument("--layers", type=int, default=2)
+    ap.add_argument("--max-operand", type=int, default=3)
+    ap.add_argument("--recompute-kv", action="store_true",
+                    help="§5.1 ablation: recompute cache at weight updates")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--eval-every", type=int, default=0,
+                    help="greedy held-out eval every N optimizer steps")
+    ap.add_argument("--kl-coef", type=float, default=0.0,
+                    help="reference-KL reward shaping (preprocessor stage)")
+    ap.add_argument("--warmup", type=int, default=0,
+                    help="LR warmup steps (0 = constant)")
+    ap.add_argument("--log-out", default=None)
+    args = ap.parse_args()
+
+    task = MathTask(max_operand=args.max_operand, ops="+")
+    cfg = tiny_config(vocab_size=task.tok.vocab_size, d_model=args.d_model,
+                      n_layers=args.layers)
+    params = tree_values(M.init_params(cfg, jax.random.PRNGKey(args.seed)))
+    schedule = warmup_constant(args.lr, args.warmup) if args.warmup else None
+    trainer = Trainer(cfg, params, rl=RLConfig(entropy_coef=0.003),
+                      adam=AdamConfig(lr=args.lr), lr_schedule=schedule)
+    ec = EngineConfig(n_slots=args.slots, max_len=args.max_len)
+    pack_rows = max(2, args.batch * args.max_len // 320)
+    preprocessor = None
+    if args.kl_coef > 0:
+        # freeze the init policy as pi_ref (paper Fig. 4 middle stage)
+        preprocessor = Preprocessor(
+            cfg, params, PreprocessConfig(kl_coef=args.kl_coef,
+                                          max_len=args.max_len))
+    evaluator = Evaluator(cfg, task, max_len=args.max_len) \
+        if args.eval_every else None
+
+    if args.mode == "pipeline":
+        runner = PipelineRL(
+            cfg, params, task, ec,
+            PipelineConfig(batch_size=args.batch, n_opt_steps=args.steps,
+                           n_chips=args.chips, train_chips=args.train_chips,
+                           pack_rows=pack_rows, pack_seq=80,
+                           recompute_kv=args.recompute_kv),
+            trainer=trainer, seed=args.seed, preprocessor=preprocessor)
+    else:
+        runner = ConventionalRL(
+            cfg, params, task, ec,
+            ConventionalConfig(batch_size=args.batch, g_steps=args.g,
+                               n_opt_steps=args.steps, n_chips=args.chips,
+                               pack_rows=pack_rows, pack_seq=80),
+            trainer=trainer, seed=args.seed)
+
+    ckpt_paths = []
+    last_v = 0
+    while trainer.version < args.steps:
+        target = min(trainer.version + args.ckpt_every, args.steps)
+        runner.run(target)
+        for r in runner.log[last_v:]:
+            print(f"step {r['version']:4d}  t={r['time']:9.0f}f  "
+                  f"reward={r['reward']:+.3f}  ess={r.get('ess', 0):.3f}  "
+                  f"max_lag={r['max_lag']:.0f}  loss={r.get('loss', 0):+.4f}",
+                  flush=True)
+        last_v = len(runner.log)
+        if args.ckpt_dir:
+            path = os.path.join(args.ckpt_dir, f"step{trainer.version}.npz")
+            checkpoint.save(path, trainer.state.params)
+            ckpt_paths.append(path)
+            print(f"checkpoint -> {path}", flush=True)
+        if evaluator and args.eval_every and \
+                trainer.version % args.eval_every == 0:
+            ev = evaluator.evaluate(trainer.state.params)
+            print(f"eval @ step {trainer.version}: "
+                  f"success_rate={ev['success_rate']:.3f} "
+                  f"mean_len={ev['mean_len']:.1f}", flush=True)
+
+    if args.log_out:
+        os.makedirs(os.path.dirname(args.log_out) or ".", exist_ok=True)
+        with open(args.log_out, "w") as f:
+            json.dump(runner.log, f, indent=1)
+        print(f"log -> {args.log_out}")
+
+
+if __name__ == "__main__":
+    main()

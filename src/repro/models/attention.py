@@ -1,0 +1,341 @@
+"""Attention: GQA (+qk-norm, sliding window) and MLA (DeepSeek-V3 latent).
+
+Full-sequence paths use a *blocked* online-softmax implementation (the jnp
+twin of the Pallas flash kernel) so the dry-run memory analysis reflects a
+flash-attention working set instead of a materialized (S, S) score tensor.
+Decode paths read a static-shape ring-buffer KV cache.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ParamDef, apply_rope, rms_norm
+from repro.shardctx import constrain
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# parameter definitions
+# ---------------------------------------------------------------------------
+
+def attention_defs(cfg: ModelConfig, n_stack: int) -> Dict[str, ParamDef]:
+    d, dt = cfg.d_model, cfg.dtype
+    L = (n_stack,)
+    Ll = ("layers",)
+    out_scale = 0.02 / np.sqrt(2 * cfg.n_layers)
+    if cfg.use_mla:
+        nope, rope, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+        return {
+            "wq_a": ParamDef(L + (d, cfg.q_lora_rank), Ll + ("p_embed", "p_lora"), dt),
+            "q_norm": ParamDef(L + (cfg.q_lora_rank,), Ll + ("p_lora",), dt, -1.0),
+            "wq_b": ParamDef(L + (cfg.q_lora_rank, cfg.n_heads, nope + rope),
+                             Ll + ("p_lora", "p_heads", "p_head_dim"), dt),
+            "wkv_a": ParamDef(L + (d, cfg.kv_lora_rank + rope), Ll + ("p_embed", "p_lora"), dt),
+            "kv_norm": ParamDef(L + (cfg.kv_lora_rank,), Ll + ("p_lora",), dt, -1.0),
+            "wk_b": ParamDef(L + (cfg.kv_lora_rank, cfg.n_heads, nope),
+                             Ll + ("p_lora", "p_heads", "p_head_dim"), dt),
+            "wv_b": ParamDef(L + (cfg.kv_lora_rank, cfg.n_heads, vd),
+                             Ll + ("p_lora", "p_heads", "p_head_dim"), dt),
+            "wo": ParamDef(L + (cfg.n_heads, vd, d),
+                           Ll + ("p_heads", "p_head_dim", "p_embed"), dt, out_scale),
+        }
+    defs = {
+        "wq": ParamDef(L + (d, cfg.n_heads, cfg.d_head),
+                       Ll + ("p_embed", "p_heads", "p_head_dim"), dt),
+        "wk": ParamDef(L + (d, cfg.n_kv_heads, cfg.d_head),
+                       Ll + ("p_embed", "p_kv_heads", "p_head_dim"), dt),
+        "wv": ParamDef(L + (d, cfg.n_kv_heads, cfg.d_head),
+                       Ll + ("p_embed", "p_kv_heads", "p_head_dim"), dt),
+        "wo": ParamDef(L + (cfg.n_heads, cfg.d_head, d),
+                       Ll + ("p_heads", "p_head_dim", "p_embed"), dt, out_scale),
+    }
+    if cfg.use_qk_norm:
+        defs["qn"] = ParamDef(L + (cfg.d_head,), Ll + ("p_head_dim",), dt, -1.0)
+        defs["kn"] = ParamDef(L + (cfg.d_head,), Ll + ("p_head_dim",), dt, -1.0)
+    return defs
+
+
+# ---------------------------------------------------------------------------
+# blocked (flash-style) causal attention — jnp reference of the Pallas kernel
+# ---------------------------------------------------------------------------
+
+def blocked_causal_attention(
+    q, k, v,
+    *,
+    scale: float,
+    segment_ids=None,
+    window: int = 0,
+    q_block: int = 512,
+    kv_block: int = 512,
+):
+    """q: (B,S,H,Dk); k,v: (B,S,KV,Dk/Dv); GQA via H = KV*rep.
+
+    Online-softmax over KV blocks; O(S * block) memory instead of O(S^2).
+    `window > 0` adds a sliding-window constraint (j > i - window).
+    """
+    B, S, H, Dk = q.shape
+    KV, Dv = k.shape[2], v.shape[-1]
+    rep = H // KV
+    if S % q_block or S % kv_block or S <= q_block:
+        return _naive_causal_attention(q, k, v, scale=scale,
+                                       segment_ids=segment_ids, window=window)
+    nq, nk = S // q_block, S // kv_block
+    qr = q.reshape(B, nq, q_block, KV, rep, Dk)
+    kr = k.reshape(B, nk, kv_block, KV, Dk)
+    vr = v.reshape(B, nk, kv_block, KV, Dv)
+    seg = None
+    if segment_ids is not None:
+        seg = segment_ids.reshape(B, nq, q_block)
+
+    q_pos = jnp.arange(S).reshape(nq, q_block)
+    k_pos = jnp.arange(S).reshape(nk, kv_block)
+
+    def one_q_block(qi):
+        qb = qr[:, qi]  # (B,qb,KV,rep,Dk)
+        qp = q_pos[qi]  # (qb,)
+        sq = seg[:, qi] if seg is not None else None
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kb, vb = kr[:, ki], vr[:, ki]
+            kp = k_pos[ki]
+            s = jnp.einsum("bqgrd,bkgd->bgrqk", qb, kb,
+                           preferred_element_type=jnp.float32) * scale
+            mask = qp[:, None] >= kp[None, :]
+            if window:
+                mask &= qp[:, None] - kp[None, :] < window
+            mask = mask[None, None, None]
+            if sq is not None:
+                sk = segment_ids.reshape(B, nk, kv_block)[:, ki]
+                mask = mask & (sq[:, None, :, None] == sk[:, None, None, :])[:, :, None]
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bgrqk,bkgd->bgrqd", p.astype(vb.dtype), vb,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KV, rep, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, rep, q_block), jnp.float32)
+        a0 = jnp.zeros((B, KV, rep, q_block, Dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out  # (B,KV,rep,qb,Dv)
+
+    outs = jax.lax.map(one_q_block, jnp.arange(nq))  # (nq,B,KV,rep,qb,Dv)
+    out = jnp.moveaxis(outs, 0, 1)  # (B,nq,KV,rep,qb,Dv)
+    out = jnp.transpose(out, (0, 1, 4, 2, 3, 5)).reshape(B, S, H, Dv)
+    return out.astype(q.dtype)
+
+
+def _naive_causal_attention(q, k, v, *, scale, segment_ids=None, window=0):
+    B, S, H, Dk = q.shape
+    KV = k.shape[2]
+    rep = H // KV
+    qr = q.reshape(B, S, KV, rep, Dk)
+    s = jnp.einsum("bqgrd,bkgd->bgrqk", qr, k,
+                   preferred_element_type=jnp.float32) * scale
+    i, j = jnp.arange(S)[:, None], jnp.arange(S)[None, :]
+    mask = i >= j
+    if window:
+        mask &= (i - j) < window
+    mask = mask[None, None, None]
+    if segment_ids is not None:
+        mask = mask & (segment_ids[:, None, None, :, None]
+                       == segment_ids[:, None, None, None, :])
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgrqk,bkgd->bqgrd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, S, H, v.shape[-1]).astype(q.dtype)
+
+
+def write_cache(cache, new, index):
+    """Write `new` (B,1,...) into ring-buffer `cache` (B,CL,...) at
+    slot = index % CL. `index` may be a scalar (lockstep decode) or (B,)
+    (continuous-batching engine with per-slot positions)."""
+    CL = cache.shape[1]
+    slot = jnp.mod(index, CL)
+    if jnp.ndim(slot) == 0:
+        start = (0, slot) + (0,) * (cache.ndim - 2)
+        return jax.lax.dynamic_update_slice(cache, new.astype(cache.dtype), start)
+    onehot = (jnp.arange(CL)[None] == slot[:, None]).astype(cache.dtype)
+    onehot = onehot.reshape(onehot.shape + (1,) * (cache.ndim - 2))
+    return cache * (1 - onehot) + new.astype(cache.dtype) * onehot
+
+
+def decode_attention(q, k_cache, v_cache, cache_index, *, scale, ring: bool):
+    """q: (B,H,Dk); caches: (B,CL,KV,D). One-token flash-decode reference.
+
+    ring=True: the cache is a full ring buffer (all slots valid).
+    ring=False: slots >= cache_index are masked out. cache_index may be a
+    scalar or per-slot (B,).
+    """
+    B, H, Dk = q.shape
+    CL, KV = k_cache.shape[1], k_cache.shape[2]
+    rep = H // KV
+    qr = q.reshape(B, KV, rep, Dk)
+    s = jnp.einsum("bgrd,bkgd->bgrk", qr, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    if not ring:
+        idx = jnp.reshape(cache_index, (-1, 1))  # scalar -> (1,1); (B,) -> (B,1)
+        valid = jnp.arange(CL)[None] < idx
+        s = jnp.where(valid[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgrk,bkgd->bgrd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, H, v_cache.shape[-1]).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA layer (train/prefill + decode)
+# ---------------------------------------------------------------------------
+
+def _maybe_qk_norm(cfg, p, q, k):
+    if cfg.use_qk_norm:
+        q = rms_norm(q, p["qn"], cfg.norm_eps)
+        k = rms_norm(k, p["kn"], cfg.norm_eps)
+    return q, k
+
+
+def _use_flash_kernel(cfg, S, segment_ids, window) -> bool:
+    return (cfg.use_pallas and segment_ids is None and window == 0
+            and S % 128 == 0)
+
+
+def gqa_forward(p, x, positions, cfg: ModelConfig, segment_ids=None,
+                return_kv: bool = False):
+    """Full-sequence causal GQA. x: (B,S,d)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    q, k = _maybe_qk_norm(cfg, p, q, k)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = constrain(q, ("batch", "seq", "heads", None))
+    k = constrain(k, ("batch", "seq", "kv_heads", None))
+    window = cfg.sliding_window if cfg.attention_variant == "sliding_window" else 0
+    S = x.shape[1]
+    if _use_flash_kernel(cfg, S, segment_ids, window):
+        from repro.kernels import ops as kops
+        out = kops.flash_attention(
+            jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2),
+            jnp.swapaxes(v, 1, 2), scale=1.0 / np.sqrt(cfg.d_head))
+        out = jnp.swapaxes(out, 1, 2)
+    else:
+        out = blocked_causal_attention(
+            q, k, v, scale=1.0 / np.sqrt(cfg.d_head),
+            segment_ids=segment_ids, window=window)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def gqa_decode(p, x, positions, cache_k, cache_v, cache_index, cfg: ModelConfig,
+               ring: bool):
+    """One-token decode. x: (B,1,d); caches (B,CL,KV,Dk). Returns y, new caches."""
+    B = x.shape[0]
+    CL = cache_k.shape[1]
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    q, k = _maybe_qk_norm(cfg, p, q, k)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    cache_k = write_cache(cache_k, k, cache_index)
+    cache_v = write_cache(cache_v, v, cache_index)
+    if cfg.use_pallas and CL % 64 == 0:
+        from repro.kernels import ops as kops
+        lengths = jnp.full((B,), CL, jnp.int32) if ring else \
+            jnp.broadcast_to(jnp.asarray(cache_index + 1, jnp.int32), (B,))
+        y = kops.flash_decode(q[:, 0], cache_k, cache_v, lengths,
+                              scale=1.0 / np.sqrt(cfg.d_head),
+                              block_k=min(256, CL))
+    else:
+        y = decode_attention(q[:, 0], cache_k, cache_v, cache_index + 1,
+                             scale=1.0 / np.sqrt(cfg.d_head), ring=ring)
+    y = jnp.einsum("bhk,hkd->bd", y, p["wo"])[:, None]
+    return y, (cache_k, cache_v)
+
+
+# ---------------------------------------------------------------------------
+# MLA layer (DeepSeek-V3): naive expansion for train/prefill, absorbed decode
+# ---------------------------------------------------------------------------
+
+def mla_forward(p, x, positions, cfg: ModelConfig, segment_ids=None,
+                return_kv: bool = False):
+    B, S, _ = x.shape
+    nope, rope = cfg.qk_nope_dim, cfg.qk_rope_dim
+    q = jnp.einsum("bsd,dr->bsr", x, p["wq_a"])
+    q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", q, p["wq_b"])  # (B,S,H,nope+rope)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"])
+    c_kv, k_rope = kv[..., :cfg.kv_lora_rank], kv[..., cfg.kv_lora_rank:]
+    c_kv = rms_norm(c_kv, p["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)  # shared 1-head rope
+
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, p["wk_b"])
+    v = jnp.einsum("bsr,rhk->bshk", c_kv, p["wv_b"])
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None], (B, S, cfg.n_heads, rope))],
+        axis=-1)
+    q_full = constrain(q_full, ("batch", "seq", "heads", None))
+    k_full = constrain(k_full, ("batch", "seq", "heads", None))
+    out = blocked_causal_attention(
+        q_full, k_full, v, scale=1.0 / np.sqrt(nope + rope),
+        segment_ids=segment_ids)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    if return_kv:
+        return y, (c_kv, k_rope)
+    return y
+
+
+def mla_decode(p, x, positions, cache_ckv, cache_krope, cache_index,
+               cfg: ModelConfig, ring: bool):
+    """Absorbed MLA decode: scores in latent space, cache stays compressed."""
+    B = x.shape[0]
+    CL = cache_ckv.shape[1]
+    nope, rope = cfg.qk_nope_dim, cfg.qk_rope_dim
+    q = jnp.einsum("bsd,dr->bsr", x, p["wq_a"])
+    q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", q, p["wq_b"])  # (B,1,H,nope+rope)
+    q_nope, q_rope = q[:, 0, :, :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)[:, 0]  # (B,H,rope)
+
+    kv = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"])
+    c_kv = rms_norm(kv[..., :cfg.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(kv[..., cfg.kv_lora_rank:], positions, cfg.rope_theta)
+    cache_ckv = write_cache(cache_ckv, c_kv, cache_index)
+    cache_krope = write_cache(cache_krope, k_rope, cache_index)
+
+    # absorb W_uk into q: (B,H,nope) x (r,H,nope) -> (B,H,r)
+    q_latent = jnp.einsum("bhk,rhk->bhr", q_nope, p["wk_b"])
+    s = jnp.einsum("bhr,bkr->bhk", q_latent, cache_ckv,
+                   preferred_element_type=jnp.float32)
+    s += jnp.einsum("bhp,bkp->bhk", q_rope, cache_krope,
+                    preferred_element_type=jnp.float32)
+    s *= 1.0 / np.sqrt(nope + rope)
+    if not ring:
+        idx = jnp.reshape(cache_index + 1, (-1, 1, 1))
+        valid = jnp.arange(CL)[None, None] < idx
+        s = jnp.where(valid, s, NEG_INF)
+    pw = jax.nn.softmax(s, axis=-1)
+    o_latent = jnp.einsum("bhk,bkr->bhr", pw.astype(cache_ckv.dtype), cache_ckv,
+                          preferred_element_type=jnp.float32).astype(x.dtype)
+    o = jnp.einsum("bhr,rhk->bhk", o_latent, p["wv_b"])
+    y = jnp.einsum("bhk,hkd->bd", o, p["wo"])[:, None]
+    return y, (cache_ckv, cache_krope)

@@ -1,0 +1,89 @@
+"""Core layers: parameter definition/initialization, RMSNorm, RoPE, SwiGLU."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sharding import Annotated
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]
+    dtype: Any
+    scale: float = 0.02  # stddev for normal init; 0.0 -> zeros; -1.0 -> ones
+
+    def abstract(self) -> Annotated:
+        return Annotated(jax.ShapeDtypeStruct(self.shape, self.dtype), self.logical)
+
+    def init(self, key) -> Annotated:
+        if self.scale == 0.0:
+            v = jnp.zeros(self.shape, self.dtype)
+        elif self.scale == -1.0:
+            v = jnp.ones(self.shape, self.dtype)
+        else:
+            v = (jax.random.normal(key, self.shape, jnp.float32) * self.scale).astype(self.dtype)
+        return Annotated(v, self.logical)
+
+
+def build_params(defs, key=None, abstract: bool = False):
+    """Nested dict of ParamDef -> nested dict of Annotated."""
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    if abstract:
+        vals = [d.abstract() for d in leaves]
+    else:
+        keys = jax.random.split(key, len(leaves))
+        vals = [d.init(k) for d, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+# ---------------------------------------------------------------------------
+# numerics
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(jnp.square(x), axis=-1, keepdims=True) + eps)
+    return (x * scale.astype(jnp.float32)).astype(dt)
+
+
+def rope_frequencies(d: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, d, 2, dtype=np.float32) / d))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., seq, heads, d_head) or (..., seq, d); positions: (..., seq)."""
+    d = x.shape[-1]
+    freqs = jnp.asarray(rope_frequencies(d, theta))  # (d/2,)
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # (..., seq, d/2)
+    if x.ndim == angles.ndim + 1:  # heads dimension present
+        angles = angles[..., None, :]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("...f,fd->...d", h, w_down)
+
+
+def ffn_defs(d_model: int, d_ff: int, n_layers_stack: int, dtype,
+             prefix_dims: Tuple[int, ...] = (), prefix_logical=()) -> Dict[str, ParamDef]:
+    Ld = (n_layers_stack,) + tuple(prefix_dims)
+    Ll = ("layers",) + tuple(prefix_logical)
+    out_scale = 0.02 / np.sqrt(2 * max(n_layers_stack, 1))
+    return {
+        "gate": ParamDef(Ld + (d_model, d_ff), Ll + ("p_embed", "p_mlp"), dtype),
+        "up": ParamDef(Ld + (d_model, d_ff), Ll + ("p_embed", "p_mlp"), dtype),
+        "down": ParamDef(Ld + (d_ff, d_model), Ll + ("p_mlp", "p_embed"), dtype, out_scale),
+    }

@@ -1,0 +1,322 @@
+"""The composable decoder LM: one definition covering all 10 assigned
+architectures (dense GQA, MLA+MoE, pure-SSM, hybrid, VLM/audio prefix).
+
+Layers with identical structure are stacked and scanned (`lax.scan`), which
+keeps the HLO size O(1) in depth — essential for compiling 61-layer models
+on the 512-device dry-run mesh. Heterogeneous stacks (DeepSeek's 3 dense +
+58 MoE layers) become consecutive scan *groups*.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, effective_cache_len
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import ParamDef, build_params, ffn_defs, rms_norm, swiglu
+from repro.shardctx import constrain
+
+
+# ---------------------------------------------------------------------------
+# parameter definitions
+# ---------------------------------------------------------------------------
+
+def layer_groups(cfg: ModelConfig) -> List[Tuple[str, int]]:
+    """[(ffn_kind, n_layers)] — ffn_kind in {dense, moe, none}."""
+    if cfg.n_experts:
+        if cfg.n_dense_layers:
+            return [("dense", cfg.n_dense_layers),
+                    ("moe", cfg.n_layers - cfg.n_dense_layers)]
+        return [("moe", cfg.n_layers)]
+    if cfg.d_ff == 0:
+        return [("none", cfg.n_layers)]
+    return [("dense", cfg.n_layers)]
+
+
+def _group_defs(cfg: ModelConfig, kind: str, count: int) -> Dict[str, Any]:
+    d, dt = cfg.d_model, cfg.dtype
+    g: Dict[str, Any] = {
+        "norm1": ParamDef((count, d), ("layers", "p_embed"), dt, -1.0),
+    }
+    if cfg.has_attention:
+        g["attn"] = attn.attention_defs(cfg, count)
+    if cfg.has_ssm:
+        g["ssm"] = ssm_mod.ssm_defs(cfg, count)
+    if cfg.hybrid_parallel:
+        # Hymba: per-branch output norms fused by averaging [arXiv:2411.13676]
+        g["hyb_norm_a"] = ParamDef((count, d), ("layers", "p_embed"), dt, -1.0)
+        g["hyb_norm_s"] = ParamDef((count, d), ("layers", "p_embed"), dt, -1.0)
+    if kind == "dense":
+        ff = cfg.dense_d_ff if (cfg.n_experts and cfg.dense_d_ff) else cfg.d_ff
+        g["norm2"] = ParamDef((count, d), ("layers", "p_embed"), dt, -1.0)
+        g["ffn"] = ffn_defs(d, ff, count, dt)
+    elif kind == "moe":
+        g["norm2"] = ParamDef((count, d), ("layers", "p_embed"), dt, -1.0)
+        g["moe"] = moe_mod.moe_defs(cfg, count)
+    return g
+
+
+def param_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    d, dt, V = cfg.d_model, cfg.dtype, cfg.vocab_size
+    defs: Dict[str, Any] = {
+        "embed": ParamDef((V, d), ("p_embed_vocab", "p_embed"), dt),
+        "final_norm": ParamDef((d,), ("p_embed",), dt, -1.0),
+        "groups": [
+            _group_defs(cfg, kind, count) for kind, count in layer_groups(cfg)
+        ],
+    }
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = ParamDef((d, V), ("p_embed", "p_vocab"), dt)
+    if cfg.use_value_head:
+        defs["value_head"] = ParamDef((d, 1), ("p_embed", None), jnp.float32, 0.0)
+    if cfg.modality in ("vision", "audio"):
+        # learned projector from the (stubbed) frontend embedding space
+        defs["mm_proj"] = ParamDef((d, d), ("p_embed", None), dt)
+    if cfg.use_mtp:
+        defs["mtp"] = {
+            "proj": ParamDef((2 * d, d), ("p_embed", "p_embed"), dt),
+            "norm_h": ParamDef((d,), ("p_embed",), dt, -1.0),
+            "norm_e": ParamDef((d,), ("p_embed",), dt, -1.0),
+            "layer": _group_defs(cfg, "dense", 1),
+        }
+    return defs
+
+
+def init_params(cfg: ModelConfig, key=None, abstract: bool = False):
+    """Annotated param tree (Annotated leaves carry logical axes)."""
+    return build_params(param_defs(cfg), key=key, abstract=abstract)
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _layer_forward(cfg: ModelConfig, kind: str, h, lp, positions, segment_ids,
+                   return_kv: bool):
+    """One decoder layer; h: (B,S,d). Returns (h, aux, kv_for_cache)."""
+    aux = jnp.zeros((), jnp.float32)
+    x = rms_norm(h, lp["norm1"], cfg.norm_eps)
+    kv = None
+    if cfg.hybrid_parallel:
+        a, kv_a = attn.gqa_forward(lp["attn"], x, positions, cfg,
+                                   segment_ids, return_kv=True)
+        s, st = ssm_mod.ssm_forward(lp["ssm"], x, cfg, return_state=True)
+        mix = 0.5 * (rms_norm(a, lp["hyb_norm_a"], cfg.norm_eps)
+                     + rms_norm(s, lp["hyb_norm_s"], cfg.norm_eps))
+        h = h + mix
+        kv = {"k": kv_a[0], "v": kv_a[1], "conv": st[0], "ssd": st[1]}
+    elif cfg.arch_type == "ssm":
+        s, st = ssm_mod.ssm_forward(lp["ssm"], x, cfg, return_state=True)
+        h = h + s
+        kv = {"conv": st[0], "ssd": st[1]}
+    else:
+        fwd = attn.mla_forward if cfg.use_mla else attn.gqa_forward
+        a, kv_a = fwd(lp["attn"], x, positions, cfg, segment_ids, return_kv=True)
+        h = h + a
+        if cfg.use_mla:
+            kv = {"c_kv": kv_a[0], "k_rope": kv_a[1]}
+        else:
+            kv = {"k": kv_a[0], "v": kv_a[1]}
+    h = constrain(h, ("batch", "seq", "embed"))
+
+    if kind == "dense":
+        x = rms_norm(h, lp["norm2"], cfg.norm_eps)
+        f = lp["ffn"]
+        h = h + swiglu(x, f["gate"], f["up"], f["down"])
+    elif kind == "moe":
+        x = rms_norm(h, lp["norm2"], cfg.norm_eps)
+        mo, aux = moe_mod.moe_apply(lp["moe"], x, cfg)
+        h = h + mo
+    h = constrain(h, ("batch", "seq", "embed"))
+    return h, aux, (kv if return_kv else None)
+
+
+def forward(params, tokens, positions, cfg: ModelConfig, *,
+            segment_ids=None, prefix_embeds=None, return_cache: bool = False,
+            return_hidden: bool = False):
+    """Full-sequence forward.
+
+    tokens: (B,S) int32; positions: (B,S) int32.
+    Returns dict(logits, values?, aux_loss, cache?, hidden?).
+    The multimodal prefix (if any) is prepended; its rows are stripped from
+    logits/values so downstream shapes match `tokens`.
+    """
+    B, S = tokens.shape
+    h = jnp.take(params["embed"], tokens, axis=0)
+    n_prefix = 0
+    if prefix_embeds is not None:
+        n_prefix = prefix_embeds.shape[1]
+        pe = jnp.einsum("bpd,de->bpe", prefix_embeds.astype(cfg.dtype),
+                        params["mm_proj"])
+        h = jnp.concatenate([pe, h], axis=1)
+        positions = jnp.concatenate(
+            [jnp.broadcast_to(jnp.arange(n_prefix, dtype=positions.dtype)[None],
+                              (B, n_prefix)),
+             positions + n_prefix], axis=1)
+        if segment_ids is not None:
+            segment_ids = jnp.concatenate(
+                [jnp.zeros((B, n_prefix), segment_ids.dtype), segment_ids], axis=1)
+    h = constrain(h, ("batch", "seq", "embed"))
+
+    total_aux = jnp.zeros((), jnp.float32)
+    caches = []
+    for gi, (kind, count) in enumerate(layer_groups(cfg)):
+        gp = params["groups"][gi]
+
+        def scan_body(carry, lp, _kind=kind):
+            hh, aux_acc = carry
+            hh, aux, kv = _layer_forward(cfg, _kind, hh, lp, positions,
+                                         segment_ids, return_cache)
+            return (hh, aux_acc + aux), kv
+
+        if cfg.remat:
+            # activation checkpointing: save only the per-layer residual
+            # stream; recompute attention/FFN internals in the backward pass
+            scan_body = jax.checkpoint(
+                scan_body,
+                policy=jax.checkpoint_policies.nothing_saveable)
+        (h, total_aux), kvs = jax.lax.scan(scan_body, (h, total_aux), gp,
+                                           unroll=True if cfg.scan_unroll else 1)
+        if return_cache:
+            caches.append(kvs)
+
+    hidden = h
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", h, head)
+    logits = constrain(logits, ("batch", "seq", "vocab"))
+    out = {"aux_loss": total_aux, "n_prefix": n_prefix}
+    out["logits"] = logits[:, n_prefix:]
+    if cfg.use_value_head:
+        values = jnp.einsum("bsd,dv->bsv", h.astype(jnp.float32),
+                            params["value_head"])[..., 0]
+        out["values"] = values[:, n_prefix:]
+    if cfg.use_mtp:
+        out["mtp_logits"] = _mtp_forward(params, cfg, hidden, tokens, positions,
+                                         n_prefix, head)
+    if return_cache:
+        out["cache"] = _stack_group_caches(cfg, caches)
+    if return_hidden:
+        out["hidden"] = hidden[:, n_prefix:]
+    return out
+
+
+def _mtp_forward(params, cfg, hidden, tokens, positions, n_prefix, head):
+    """DeepSeek-V3 MTP: predict token t+2 from [norm(h_t); norm(emb_{t+1})]
+    through one extra layer. Returns logits (B, S-1, V) for targets t+2."""
+    mp = params["mtp"]
+    h = hidden[:, n_prefix:]
+    B, S, d = h.shape
+    h_t = rms_norm(h[:, :-1], mp["norm_h"], cfg.norm_eps)
+    e_next = rms_norm(jnp.take(params["embed"], tokens[:, 1:], axis=0),
+                      mp["norm_e"], cfg.norm_eps)
+    x = jnp.einsum("bse,ed->bsd", jnp.concatenate([h_t, e_next], axis=-1),
+                   mp["proj"])
+    lp = jax.tree.map(lambda a: a[0], mp["layer"])  # single stacked layer
+    x, _, _ = _layer_forward(cfg, "dense", x, lp, positions[:, 1:], None, False)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return jnp.einsum("bsd,dv->bsv", x, head)
+
+
+def _stack_group_caches(cfg: ModelConfig, caches: List[Dict[str, Any]]):
+    """Concat per-group scan outputs into the unified (L, ...) cache tree,
+    sharded per CACHE_LOGICAL (without this, a prefill cache whose kv_heads
+    don't divide the TP axis is replicated across it — 425 GB/dev for
+    musicgen's 32k MHA prefill; see EXPERIMENTS.md §Perf)."""
+    from repro.configs.base import CACHE_LOGICAL
+    keys = caches[0].keys()
+    return {
+        k: constrain(jnp.concatenate([c[k] for c in caches], axis=0),
+                     CACHE_LOGICAL[k])
+        for k in keys
+    }
+
+
+# ---------------------------------------------------------------------------
+# decode (one token against the cache)
+# ---------------------------------------------------------------------------
+
+def decode_step(params, tokens, positions, cache, cache_index,
+                cfg: ModelConfig, *, ring: Optional[bool] = None):
+    """tokens: (B,1); cache: stacked (L,...) tree; cache_index: scalar or (B,).
+    Returns (logits (B,1,V), values (B,1)?, new_cache)."""
+    B = tokens.shape[0]
+    if ring is None:
+        has_kv = "k" in cache or "c_kv" in cache
+        if has_kv:
+            cl = cache["k"].shape[2] if "k" in cache else cache["c_kv"].shape[2]
+            ring = bool(cfg.attention_variant == "sliding_window")
+        else:
+            ring = False
+    h = jnp.take(params["embed"], tokens, axis=0)
+    h = constrain(h, ("batch", "seq", "embed"))
+
+    offset = 0
+    new_cache = {k: [] for k in cache}
+    for gi, (kind, count) in enumerate(layer_groups(cfg)):
+        gp = params["groups"][gi]
+        cache_slice = {k: jax.lax.slice_in_dim(v, offset, offset + count, axis=0)
+                       for k, v in cache.items()}
+
+        def scan_body(h, inp, _kind=kind):
+            lp, cs = inp
+            x = rms_norm(h, lp["norm1"], cfg.norm_eps)
+            ncs = {}
+            if cfg.hybrid_parallel:
+                a, (nk, nv) = attn.gqa_decode(
+                    lp["attn"], x, positions, cs["k"], cs["v"], cache_index,
+                    cfg, ring)
+                s, (ncv, nss) = ssm_mod.ssm_decode(
+                    lp["ssm"], x, cs["conv"], cs["ssd"], cfg)
+                mix = 0.5 * (rms_norm(a, lp["hyb_norm_a"], cfg.norm_eps)
+                             + rms_norm(s, lp["hyb_norm_s"], cfg.norm_eps))
+                h = h + mix
+                ncs = {"k": nk, "v": nv, "conv": ncv, "ssd": nss}
+            elif cfg.arch_type == "ssm":
+                s, (ncv, nss) = ssm_mod.ssm_decode(
+                    lp["ssm"], x, cs["conv"], cs["ssd"], cfg)
+                h = h + s
+                ncs = {"conv": ncv, "ssd": nss}
+            elif cfg.use_mla:
+                a, (nck, nkr) = attn.mla_decode(
+                    lp["attn"], x, positions, cs["c_kv"], cs["k_rope"],
+                    cache_index, cfg, ring)
+                h = h + a
+                ncs = {"c_kv": nck, "k_rope": nkr}
+            else:
+                a, (nk, nv) = attn.gqa_decode(
+                    lp["attn"], x, positions, cs["k"], cs["v"], cache_index,
+                    cfg, ring)
+                h = h + a
+                ncs = {"k": nk, "v": nv}
+
+            if _kind == "dense":
+                x = rms_norm(h, lp["norm2"], cfg.norm_eps)
+                f = lp["ffn"]
+                h = h + swiglu(x, f["gate"], f["up"], f["down"])
+            elif _kind == "moe":
+                x = rms_norm(h, lp["norm2"], cfg.norm_eps)
+                mo, _ = moe_mod.moe_apply(lp["moe"], x, cfg)
+                h = h + mo
+            return h, ncs
+
+        h, kvs = jax.lax.scan(scan_body, h, (gp, cache_slice),
+                              unroll=True if cfg.scan_unroll else 1)
+        for k in cache:
+            new_cache[k].append(kvs[k])
+        offset += count
+
+    new_cache = {k: jnp.concatenate(v, axis=0) for k, v in new_cache.items()}
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", h, head)
+    out = {"logits": logits, "cache": new_cache}
+    if cfg.use_value_head:
+        out["values"] = jnp.einsum(
+            "bsd,dv->bsv", h.astype(jnp.float32), params["value_head"])[..., 0]
+    return out

@@ -1,0 +1,187 @@
+"""Mamba2 / SSD (state-space duality) block. [arXiv:2405.21060]
+
+Chunked SSD for train/prefill (the jnp twin of the Pallas ssd_scan kernel)
+and an O(1)-state recurrent step for decode. Used standalone (mamba2) and as
+the SSM branch of Hymba hybrid layers.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ParamDef, rms_norm
+from repro.shardctx import constrain
+
+
+def ssm_defs(cfg: ModelConfig, n_stack: int) -> Dict[str, ParamDef]:
+    d, dt = cfg.d_model, cfg.dtype
+    di, G, N, H = cfg.d_inner, cfg.ssm_n_groups, cfg.ssm_state, cfg.n_ssm_heads
+    conv_ch = di + 2 * G * N
+    L, Ll = (n_stack,), ("layers",)
+    out_scale = 0.02 / np.sqrt(2 * cfg.n_layers)
+    return {
+        # in_proj emits [z (di), xBC (di + 2GN), dt (H)]
+        "in_proj": ParamDef(L + (d, 2 * di + 2 * G * N + H),
+                            Ll + ("p_embed", "p_inner"), dt),
+        "conv_w": ParamDef(L + (cfg.d_conv, conv_ch), Ll + ("p_conv", "p_inner"), dt),
+        "conv_b": ParamDef(L + (conv_ch,), Ll + ("p_inner",), dt, 0.0),
+        "A_log": ParamDef(L + (H,), Ll + ("p_none",), jnp.float32, -1.0),
+        "D": ParamDef(L + (H,), Ll + ("p_none",), jnp.float32, -1.0),
+        "dt_bias": ParamDef(L + (H,), Ll + ("p_none",), jnp.float32, 0.0),
+        "gate_norm": ParamDef(L + (di,), Ll + ("p_inner",), dt, -1.0),
+        "out_proj": ParamDef(L + (di, d), Ll + ("p_inner", "p_embed"), dt, out_scale),
+    }
+
+
+def _segsum(x):
+    """x: (..., Q). Lower-triangular pairwise cumulative sums:
+    out[..., i, j] = sum_{k=j+1..i} x[..., k]  (i >= j), -inf above diag."""
+    Q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    i, j = jnp.arange(Q)[:, None], jnp.arange(Q)[None, :]
+    return jnp.where(i >= j, out, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int):
+    """Chunked SSD. x: (b,l,h,p); dt: (b,l,h); A: (h,) (negative);
+    B,C: (b,l,g,n). Returns y: (b,l,h,p) and final state (b,h,p,n)."""
+    b, l, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    if l % chunk:
+        pad = chunk - l % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    L = x.shape[1]
+    nc = L // chunk
+    rep = h // g
+
+    xd = (x * dt[..., None]).astype(jnp.float32)        # fold dt into x
+    dA = dt * A[None, None, :]                          # (b,L,h)
+
+    def cview(t, trailing):
+        return t.reshape((b, nc, chunk) + trailing)
+
+    xc = cview(xd, (h, p))
+    dAc = cview(dA, (h,)).transpose(0, 3, 1, 2)         # (b,h,nc,Q)
+    Bc = cview(B.astype(jnp.float32), (g, n))
+    Cc = cview(C.astype(jnp.float32), (g, n))
+    Bh = jnp.repeat(Bc, rep, axis=3)                    # (b,nc,Q,h,n)
+    Ch = jnp.repeat(Cc, rep, axis=3)
+
+    A_cum = jnp.cumsum(dAc, axis=-1)                    # (b,h,nc,Q)
+
+    # --- intra-chunk (diagonal blocks) ---
+    Lmat = jnp.exp(_segsum(dAc))                        # (b,h,nc,Q,Q)
+    Y_diag = jnp.einsum("bcqhn,bcshn,bhcqs,bcshp->bcqhp", Ch, Bh, Lmat, xc)
+
+    # --- chunk states ---
+    decay_states = jnp.exp(A_cum[..., -1:] - A_cum)     # (b,h,nc,Q)
+    states = jnp.einsum("bcqhn,bhcq,bcqhp->bchpn", Bh, decay_states, xc)
+
+    # --- inter-chunk recurrence (sequential scan over chunks) ---
+    chunk_decay = jnp.exp(A_cum[..., -1])               # (b,h,nc)
+
+    def step(carry, inp):
+        st, dec = inp                                   # (b,h,p,n), (b,h)
+        new = carry * dec[..., None, None] + st
+        return new, carry                               # emit state *before* chunk
+
+    st0 = jnp.zeros((b, h, p, n), jnp.float32)
+    final_state, prev_states = jax.lax.scan(
+        step, st0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(2, 0, 1)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (b,nc,h,p,n)
+
+    decay_out = jnp.exp(A_cum)                          # (b,h,nc,Q)
+    Y_off = jnp.einsum("bcqhn,bchpn,bhcq->bcqhp", Ch, prev_states, decay_out)
+
+    y = (Y_diag + Y_off).reshape(b, L, h, p)[:, :l]
+    return y.astype(x.dtype), final_state
+
+
+def _causal_conv(xBC, w, bias):
+    """Depthwise causal conv. xBC: (b,l,ch); w: (k,ch)."""
+    k = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (k - 1, 0), (0, 0)))
+    # sum_{i} x[t-k+1+i] * w[i]
+    out = sum(pad[:, i:i + xBC.shape[1]] * w[i] for i in range(k))
+    return out + bias
+
+
+def ssm_forward(p, x, cfg: ModelConfig, return_state: bool = False):
+    """Full-sequence Mamba2 block. x: (B,S,d) -> (B,S,d)."""
+    di, G, N, H = cfg.d_inner, cfg.ssm_n_groups, cfg.ssm_state, cfg.n_ssm_heads
+    P = cfg.ssm_head_dim
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z, xBC, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * G * N], axis=-1)
+    xBC_pre = xBC
+    xBC = _causal_conv(xBC, p["conv_w"], p["conv_b"])
+    xBC = jax.nn.silu(xBC.astype(jnp.float32)).astype(x.dtype)
+    xs, B, C = jnp.split(xBC, [di, di + G * N], axis=-1)
+    xs = constrain(xs, ("batch", "seq", "mlp"))
+    b, S = x.shape[0], x.shape[1]
+    xs = xs.reshape(b, S, H, P)
+    B = B.reshape(b, S, G, N)
+    C = C.reshape(b, S, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    if cfg.use_pallas and S % cfg.ssm_chunk == 0:
+        from repro.kernels import ops as kops
+        y, state = kops.ssd_scan(xs, dt, A, B, C, chunk=cfg.ssm_chunk)
+        y = y.astype(jnp.float32)
+        state = jnp.swapaxes(state, -1, -2)  # kernel emits (b,h,n,p)
+    else:
+        y, state = ssd_chunked(xs, dt, A, B, C, cfg.ssm_chunk)
+    y = y + xs.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(b, S, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                 p["gate_norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    if return_state:
+        # conv state = last (d_conv-1) pre-conv inputs (pad if S too short)
+        k = cfg.d_conv
+        pre = jnp.pad(xBC_pre, ((0, 0), (max(0, k - 1 - S), 0), (0, 0)))
+        return out, (pre[:, -(k - 1):], state)
+    return out
+
+
+def ssm_decode(p, x, conv_state, ssd_state, cfg: ModelConfig):
+    """One-token recurrent step. x: (B,1,d); conv_state: (B,k-1,ch);
+    ssd_state: (B,H,P,N) fp32. Returns y (B,1,d), (conv_state, ssd_state)."""
+    di, G, N, H = cfg.d_inner, cfg.ssm_n_groups, cfg.ssm_state, cfg.n_ssm_heads
+    P = cfg.ssm_head_dim
+    b = x.shape[0]
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"])[:, 0]
+    z, xBC, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * G * N], axis=-1)
+    # conv over [state ; new]
+    window = jnp.concatenate([conv_state, xBC[:, None]], axis=1)  # (b,k,ch)
+    conv_out = jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
+    conv_state = window[:, 1:]
+    xBC = jax.nn.silu(conv_out.astype(jnp.float32)).astype(x.dtype)
+    xs, B, C = jnp.split(xBC, [di, di + G * N], axis=-1)
+    xs = xs.reshape(b, H, P)
+    B = B.reshape(b, G, N)
+    C = C.reshape(b, G, N)
+    rep = H // G
+    Bh = jnp.repeat(B, rep, axis=1).astype(jnp.float32)  # (b,H,N)
+    Ch = jnp.repeat(C, rep, axis=1).astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (b,H)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A[None])                                   # (b,H)
+    dx = (dt[..., None] * xs.astype(jnp.float32))                # (b,H,P)
+    ssd_state = ssd_state * dA[..., None, None] + \
+        jnp.einsum("bhp,bhn->bhpn", dx, Bh)
+    y = jnp.einsum("bhpn,bhn->bhp", ssd_state, Ch)               # (b,H,P)
+    y = y + xs.astype(jnp.float32) * p["D"][None, :, None]
+    y = y.reshape(b, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                 p["gate_norm"], cfg.norm_eps)
+    out = jnp.einsum("be,ed->bd", y, p["out_proj"])[:, None]
+    return out, (conv_state, ssd_state)

@@ -1,0 +1,75 @@
+"""Adam (Kingma, 2014) in pure JAX with fp32 moments over a bf16/f32 param
+tree. Moments inherit the parameter sharding (ZeRO-style: the FSDP rules
+already shard every large parameter, so optimizer state is sharded the same
+way for free)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamConfig:
+    lr: float = 1e-6  # paper: Adam, lr 1e-6
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: float = 1.0
+
+
+def adam_init(params) -> AdamState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamState(step=jnp.zeros((), jnp.int32),
+                     m=jax.tree.map(zeros, params),
+                     v=jax.tree.map(zeros, params))
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def adam_update(params, grads, state: AdamState, cfg: AdamConfig, lr=None):
+    """Returns (new_params, new_state, grad_norm). `lr` (traced scalar from
+    a schedule) overrides cfg.lr when given."""
+    lr = cfg.lr if lr is None else lr
+    gnorm = global_norm(grads)
+    if cfg.grad_clip > 0:
+        scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+    step = state.step + 1
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mhat = m / b1c
+        vhat = v / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        newp = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return newp, m, v
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state.m)
+    flat_v = tdef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, AdamState(step, new_m, new_v), gnorm

@@ -1,0 +1,31 @@
+"""Learning-rate schedules (pure jnp, traceable inside train_step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def constant(lr: float):
+    def fn(step):
+        return jnp.full((), lr, jnp.float32)
+    return fn
+
+
+def warmup_cosine(lr: float, warmup_steps: int, total_steps: int,
+                  final_ratio: float = 0.1):
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = lr * step / max(warmup_steps, 1)
+        frac = jnp.clip((step - warmup_steps)
+                        / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = lr * (final_ratio + (1 - final_ratio)
+                    * 0.5 * (1 + jnp.cos(np.pi * frac)))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return fn
+
+
+def warmup_constant(lr: float, warmup_steps: int):
+    def fn(step):
+        step = step.astype(jnp.float32)
+        return lr * jnp.minimum(1.0, step / max(warmup_steps, 1))
+    return fn

@@ -1,0 +1,151 @@
+"""Three-term roofline analysis from a compiled dry-run artifact.
+
+  compute    = HLO_FLOPs   / (peak FLOP/s per chip)
+  memory     = HLO bytes   / (HBM bandwidth per chip)
+  collective = bytes moved by all-gather/all-reduce/reduce-scatter/
+               all-to-all/collective-permute / (ICI link bandwidth)
+
+XLA's cost_analysis() is per-device for SPMD programs; collective bytes are
+not in cost_analysis, so they are summed from the (post-SPMD) HLO text.
+Hardware constants: TPU v5e.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+# TPU v5e
+PEAK_FLOPS = 197e12   # bf16 FLOP/s per chip
+HBM_BW = 819e9        # bytes/s per chip
+ICI_BW = 50e9         # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s+((?:\([^)]*\))|(?:[a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind output bytes (per device) from HLO text.
+    '-done' ops are skipped so async pairs are not double counted."""
+    out = {k: 0 for k in _COLLECTIVES}
+    for m in _OP_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        if m.group(0).rstrip("(").endswith("-done"):
+            continue
+        out[kind] += _shape_bytes(shape_str)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    name: str
+    flops: float            # per device
+    bytes_accessed: float   # per device
+    coll_bytes: float       # per device
+    coll_breakdown: Dict[str, int]
+    n_devices: int
+    model_flops: Optional[float] = None   # 6*N*D (global, useful work)
+    bytes_per_device: Optional[float] = None  # peak memory (argument+temp)
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_accessed / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> Optional[float]:
+        if not self.model_flops:
+            return None
+        return self.model_flops / max(self.flops * self.n_devices, 1.0)
+
+    def row(self) -> Dict:
+        return {
+            "name": self.name,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "hlo_gflops_per_dev": self.flops / 1e9,
+            "hlo_gbytes_per_dev": self.bytes_accessed / 1e9,
+            "coll_gbytes_per_dev": self.coll_bytes / 1e9,
+            "coll_breakdown": {k: v for k, v in self.coll_breakdown.items() if v},
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "mem_gb_per_dev": (self.bytes_per_device or 0) / 1e9,
+        }
+
+
+def analyze(name: str, compiled, n_devices: int,
+            model_flops: Optional[float] = None) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    bytes_accessed = float(cost.get("bytes accessed", 0.0))
+    try:
+        hlo = compiled.as_text()
+    except Exception:
+        hlo = ""
+    coll = collective_bytes(hlo)
+    mem = None
+    try:
+        ma = compiled.memory_analysis()
+        mem = float(getattr(ma, "argument_size_in_bytes", 0)
+                    + getattr(ma, "output_size_in_bytes", 0)
+                    + getattr(ma, "temp_size_in_bytes", 0))
+    except Exception:
+        pass
+    return Roofline(
+        name=name, flops=flops, bytes_accessed=bytes_accessed,
+        coll_bytes=float(sum(coll.values())), coll_breakdown=coll,
+        n_devices=n_devices, model_flops=model_flops,
+        bytes_per_device=mem,
+    )
+
+
+def model_flops_estimate(cfg, shape) -> float:
+    """6*N*D for training, 2*N*D for inference forward (N = active params,
+    D = tokens processed)."""
+    n_active = cfg.param_count(active_only=True)
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len
+    return 2.0 * n_active * shape.global_batch  # decode: one token per seq

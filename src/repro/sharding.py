@@ -1,0 +1,136 @@
+"""Logical-axis sharding rules (MaxText-style) with divisibility fallback.
+
+Every parameter and activation in the model zoo is annotated with *logical*
+axis names. A rules table maps logical axes to mesh axes; `logical_to_spec`
+drops a mesh axis whenever the dimension is not divisible by the mesh axis
+size (GQA kv_heads=8 on a model axis of 16, batch=1 on data=16, ...), so one
+rule set covers all 10 architectures and all 4 input shapes.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[str, Tuple[str, ...], None]
+
+# Default rule set: FSDP over "data" (+"pod"), tensor parallel over "model".
+# Tuple values mean the dimension is sharded over multiple mesh axes.
+DEFAULT_RULES: Dict[str, MeshAxes] = {
+    # activations
+    "batch": ("pod", "data"),
+    "seq": None,
+    # KV-cache length: flash-decode style sequence parallelism. Falls back
+    # onto whichever axis the batch didn't consume; without this, archs
+    # whose kv_heads don't divide the model axis replicate the whole cache
+    # across it (16x memory + traffic; see EXPERIMENTS.md §Perf-2)
+    "cache_seq": ("data", "model"),
+    "embed": None,             # activation d_model stays replicated across TP
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "vocab": "model",
+    "experts": "model",        # expert parallelism
+    "expert_capacity": None,
+    "prefix": None,
+    # parameters: FSDP shards the non-TP dim over data, TP over model
+    "p_embed": "data",
+    "p_vocab": "model",
+    "p_embed_vocab": "model",  # embedding table's vocab dim (gather operand)
+    "p_heads": "model",
+    "p_kv_heads": "model",
+    "p_head_dim": None,
+    "p_mlp": "model",
+    "p_experts": "model",
+    "p_lora": None,
+    "p_inner": "model",        # SSM d_inner
+    "p_conv": None,
+    "p_state": None,
+    "p_none": None,
+}
+
+
+def _axis_sizes(mesh: Mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def logical_to_spec(
+    logical: Sequence[Optional[str]],
+    dims: Sequence[int],
+    mesh: Mesh,
+    rules: Optional[Dict[str, MeshAxes]] = None,
+) -> P:
+    """Map logical axis names (+ concrete dims) to a PartitionSpec.
+
+    A mesh axis is used only if (a) it exists in the mesh, (b) the dim is
+    divisible by its size (after stacking with earlier axes of the same
+    dim), and (c) it has not been consumed by an earlier dimension.
+    """
+    rules = dict(DEFAULT_RULES, **(rules or {}))
+    sizes = _axis_sizes(mesh)
+    used: set = set()
+    out = []
+    for name, dim in zip(logical, dims):
+        entry: MeshAxes = rules.get(name) if name else None
+        if entry is None:
+            out.append(None)
+            continue
+        axes = (entry,) if isinstance(entry, str) else tuple(entry)
+        picked = []
+        shard = 1
+        for ax in axes:
+            if ax not in sizes or ax in used:
+                continue
+            if dim % (shard * sizes[ax]) != 0:
+                continue
+            picked.append(ax)
+            shard *= sizes[ax]
+        used.update(picked)
+        if not picked:
+            out.append(None)
+        elif len(picked) == 1:
+            out.append(picked[0])
+        else:
+            out.append(tuple(picked))
+    return P(*out)
+
+
+class Annotated:
+    """A ShapeDtypeStruct (or array) tagged with logical axis names."""
+
+    __slots__ = ("value", "logical")
+
+    def __init__(self, value, logical: Sequence[Optional[str]]):
+        if len(logical) != len(value.shape):
+            raise ValueError(
+                f"logical axes {logical} do not match shape {value.shape}")
+        self.value = value
+        self.logical = tuple(logical)
+
+
+def spec_for(ann: Annotated, mesh: Mesh, rules=None) -> P:
+    return logical_to_spec(ann.logical, ann.value.shape, mesh, rules)
+
+
+def tree_specs(tree, mesh: Mesh, rules=None):
+    """Pytree of Annotated -> pytree of PartitionSpec (same structure)."""
+    return jax.tree.map(
+        lambda a: spec_for(a, mesh, rules),
+        tree,
+        is_leaf=lambda x: isinstance(x, Annotated),
+    )
+
+
+def tree_values(tree):
+    return jax.tree.map(
+        lambda a: a.value, tree, is_leaf=lambda x: isinstance(x, Annotated))
+
+
+def tree_shardings(tree, mesh: Mesh, rules=None):
+    return jax.tree.map(
+        lambda a: NamedSharding(mesh, spec_for(a, mesh, rules)),
+        tree,
+        is_leaf=lambda x: isinstance(x, Annotated),
+    )

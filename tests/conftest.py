@@ -1,0 +1,22 @@
+import jax
+import pytest
+
+from repro.configs.tiny import config as tiny_config
+from repro.data.math_task import MathTask
+from repro.models import model as M
+from repro.sharding import tree_values
+
+
+@pytest.fixture(scope="session")
+def task():
+    return MathTask(max_operand=5, ops="+")
+
+
+@pytest.fixture(scope="session")
+def tiny_cfg(task):
+    return tiny_config(vocab_size=task.tok.vocab_size)
+
+
+@pytest.fixture(scope="session")
+def tiny_params(tiny_cfg):
+    return tree_values(M.init_params(tiny_cfg, jax.random.PRNGKey(0)))

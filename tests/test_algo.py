@@ -1,0 +1,98 @@
+"""RL algorithm invariants (Eq. 4-6), incl. hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.algo import RLConfig, ess, reinforce_loss, token_logprobs
+
+
+def test_ess_on_policy_is_one():
+    w = jnp.ones((4, 16))
+    mask = jnp.ones((4, 16))
+    assert float(ess(w, mask)) == pytest.approx(1.0, abs=1e-6)
+
+
+@given(st.lists(st.floats(0.01, 100.0), min_size=2, max_size=64))
+@settings(max_examples=50, deadline=None)
+def test_ess_bounded_unit_interval(ws):
+    w = jnp.asarray(ws)[None]
+    mask = jnp.ones_like(w)
+    v = float(ess(w, mask))
+    assert 0.0 < v <= 1.0 + 1e-6
+
+
+@given(st.floats(0.01, 100.0))
+@settings(max_examples=20, deadline=None)
+def test_ess_constant_weights_is_one(c):
+    """ESS is scale-invariant: constant weights == on-policy."""
+    w = jnp.full((1, 32), c)
+    assert float(ess(w, jnp.ones_like(w))) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_ess_degenerate_single_heavy_weight():
+    w = jnp.asarray([[1000.0] + [1e-6] * 31])
+    v = float(ess(w, jnp.ones_like(w)))
+    assert v < 0.05  # one dominant sample -> ESS ~ 1/N
+
+
+def test_token_logprobs_alignment():
+    """token_logprobs[t] must be the logprob of tokens[t] given prefix."""
+    V = 8
+    logits = jax.random.normal(jax.random.PRNGKey(0), (1, 5, V))
+    tokens = jnp.asarray([[3, 1, 4, 1, 5]])
+    lp = token_logprobs(logits, tokens)
+    full = jax.nn.log_softmax(logits, axis=-1)
+    assert float(lp[0, 0]) == 0.0
+    for t in range(1, 5):
+        assert float(lp[0, t]) == pytest.approx(
+            float(full[0, t - 1, tokens[0, t]]), abs=1e-6)
+
+
+def _fake_batch(key, B=2, S=16, V=11, lag_shift=0.0):
+    ks = jax.random.split(key, 4)
+    logits = jax.random.normal(ks[0], (B, S, V))
+    tokens = jax.random.randint(ks[1], (B, S), 0, V)
+    mask = jnp.ones((B, S)).at[:, :4].set(0.0)
+    beh = token_logprobs(logits, tokens) + lag_shift
+    return logits, {
+        "tokens": tokens, "loss_mask": mask,
+        "behavior_logprobs": beh,
+        "rewards": jnp.ones((B, S)) * 0.5,
+    }
+
+
+def test_reinforce_on_policy_ess_one():
+    logits, batch = _fake_batch(jax.random.PRNGKey(1))
+    _, m = reinforce_loss(logits, None, batch, RLConfig())
+    assert float(m["ess"]) == pytest.approx(1.0, abs=1e-5)
+    assert float(m["mean_is_weight"]) == pytest.approx(1.0, abs=1e-5)
+    assert float(m["clip_frac"]) == 0.0
+
+
+def test_reinforce_off_policy_ess_below_one():
+    key = jax.random.PRNGKey(2)
+    logits, batch = _fake_batch(key)
+    noise = 0.5 * jax.random.normal(key, batch["behavior_logprobs"].shape)
+    batch["behavior_logprobs"] = batch["behavior_logprobs"] + noise
+    _, m = reinforce_loss(logits, None, batch, RLConfig())
+    assert float(m["ess"]) < 0.99
+
+
+@given(st.floats(1.0, 10.0))
+@settings(max_examples=10, deadline=None)
+def test_is_clamp_bounds_clipfrac(c):
+    key = jax.random.PRNGKey(3)
+    logits, batch = _fake_batch(key)
+    batch["behavior_logprobs"] = batch["behavior_logprobs"] - 5.0  # huge ratios
+    _, m = reinforce_loss(logits, None, batch, RLConfig(is_clamp=c))
+    assert float(m["clip_frac"]) == pytest.approx(1.0)
+
+
+def test_value_baseline_reduces_to_advantage():
+    logits, batch = _fake_batch(jax.random.PRNGKey(4))
+    values = jnp.full(batch["rewards"].shape, 0.5)  # perfect baseline
+    loss_v, m_v = reinforce_loss(logits, values, batch, RLConfig(value_coef=0.0))
+    # zero advantage everywhere -> zero policy gradient loss
+    assert float(m_v["pg_loss"]) == pytest.approx(0.0, abs=1e-6)

@@ -1,0 +1,46 @@
+"""Dry-run smoke: one cheap (arch, shape) must lower+compile on the
+512-device production mesh, in a subprocess (XLA device count is locked at
+first jax init, so the 512-device flag cannot be set in this process)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.dryrun
+def test_dryrun_single_combo_subprocess(tmp_path):
+    out = os.path.join(tmp_path, "dr.json")
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "granite-3-2b", "--shape", "decode_32k", "--out", out],
+        env=env, capture_output=True, text=True, timeout=420)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    rec = json.load(open(out))[0]
+    assert rec["ok"]
+    assert rec["bottleneck"] in ("compute", "memory", "collective")
+    assert rec["mesh"] == "16x16"
+    assert rec["t_compute_s"] > 0
+
+
+@pytest.mark.dryrun
+def test_dryrun_disaggregated_subprocess():
+    """Paper topology: train_step on the trainer submesh + serve_step on the
+    generator submesh must both lower."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    script = (
+        "import os, json;"
+        "os.environ['XLA_FLAGS']='--xla_force_host_platform_device_count=512';"
+        "from repro.launch.dryrun import run_disaggregated;"
+        "r = run_disaggregated('granite-3-2b');"
+        "print(json.dumps({'ok': r['ok'], 'err': r.get('error','')}))"
+    )
+    proc = subprocess.run([sys.executable, "-c", script], env=env,
+                          capture_output=True, text=True, timeout=420)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    rec = json.loads(proc.stdout.strip().splitlines()[-1])
+    assert rec["ok"], rec["err"]

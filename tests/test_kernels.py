@@ -1,0 +1,104 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("B,H,KV,S,D", [
+    (1, 4, 4, 128, 64),    # MHA
+    (2, 8, 2, 256, 64),    # GQA 4:1
+    (1, 8, 1, 128, 128),   # MQA
+    (2, 4, 4, 192, 32),    # S not a multiple of 128 -> smaller blocks
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, H, KV, S, D, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, H, S, D), dtype)
+    k = jax.random.normal(ks[1], (B, KV, S, D), dtype)
+    v = jax.random.normal(ks[2], (B, KV, S, D), dtype)
+    bq = 64 if S % 64 == 0 else S
+    out = ops.flash_attention(q, k, v, scale=D ** -0.5, block_q=bq, block_k=bq)
+    expected = ref.flash_attention_ref(q, k, v, scale=D ** -0.5)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expected, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("B,H,KV,CL,D,block", [
+    (2, 8, 2, 128, 64, 32),
+    (1, 4, 4, 256, 64, 64),
+    (3, 8, 1, 64, 128, 64),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_decode_sweep(B, H, KV, CL, D, block, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, H, D), dtype)
+    kc = jax.random.normal(ks[1], (B, CL, KV, D), dtype)
+    vc = jax.random.normal(ks[2], (B, CL, KV, D), dtype)
+    lengths = jnp.arange(1, B + 1) * (CL // (B + 1)) + 1
+    out = ops.flash_decode(q, kc, vc, lengths, scale=D ** -0.5, block_k=block)
+    expected = ref.flash_decode_ref(q, kc, vc, lengths, scale=D ** -0.5)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expected, np.float32), **_tol(dtype))
+
+
+def test_flash_decode_full_ring():
+    """lengths == CL must attend to every slot (ring-buffer mode)."""
+    B, H, KV, CL, D = 1, 4, 2, 64, 32
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, H, D))
+    kc = jax.random.normal(ks[1], (B, CL, KV, D))
+    vc = jax.random.normal(ks[2], (B, CL, KV, D))
+    out = ops.flash_decode(q, kc, vc, jnp.full((B,), CL), scale=D ** -0.5,
+                           block_k=32)
+    expected = ref.flash_decode_ref(q, kc, vc, jnp.full((B,), CL),
+                                    scale=D ** -0.5)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("b,l,h,p,g,n,chunk", [
+    (1, 64, 2, 16, 1, 8, 16),
+    (2, 128, 4, 32, 2, 16, 32),
+    (1, 96, 6, 16, 3, 8, 32),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_scan_sweep(b, l, h, p, g, n, chunk, dtype):
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (b, l, h, p), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, l, h))).astype(jnp.float32)
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)))
+    B = jax.random.normal(ks[3], (b, l, g, n), dtype)
+    C = jax.random.normal(ks[4], (b, l, g, n), dtype)
+    out, st = ops.ssd_scan(x, dt, A, B, C, chunk=chunk)
+    expected, st_ref = ref.ssd_scan_ref(
+        x.astype(jnp.float32), dt, A, B.astype(jnp.float32),
+        C.astype(jnp.float32), chunk=chunk)
+    tol = dict(atol=5e-2, rtol=5e-2) if dtype == jnp.bfloat16 \
+        else dict(atol=1e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expected, np.float32), **tol)
+    np.testing.assert_allclose(np.asarray(st, np.float32),
+                               np.asarray(st_ref, np.float32), **tol)
+
+
+def test_ssd_scan_state_carries_across_chunks():
+    """A signal in chunk 0 must influence outputs in the last chunk."""
+    b, l, h, p, g, n, chunk = 1, 64, 1, 8, 1, 8, 16
+    ks = jax.random.split(KEY, 5)
+    x = jnp.zeros((b, l, h, p)).at[0, 3].set(1.0)
+    dt = jnp.full((b, l, h), 0.05)
+    A = -jnp.ones((h,)) * 0.01  # slow decay
+    B = jnp.ones((b, l, g, n))
+    C = jnp.ones((b, l, g, n))
+    y, _ = ops.ssd_scan(x, dt, A, B, C, chunk=chunk)
+    assert float(jnp.abs(y[0, -1]).max()) > 1e-4

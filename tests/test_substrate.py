@@ -1,0 +1,144 @@
+"""Optimizer, checkpointing, tokenizer/task, sharding rules."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import checkpoint
+from repro.data.math_task import MathTask
+from repro.data.tokenizer import CharTokenizer
+from repro.optim.adam import AdamConfig, adam_init, adam_update
+from repro.sharding import logical_to_spec
+
+
+# ---------------------------------------------------------------------------
+# Adam
+# ---------------------------------------------------------------------------
+
+def test_adam_minimizes_quadratic():
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = adam_init(params)
+    cfg = AdamConfig(lr=0.1, grad_clip=0.0)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, state, _ = adam_update(params, grads, state, cfg)
+    assert float(jnp.abs(params["w"]).max()) < 0.05
+
+
+def test_adam_first_step_is_lr_sized():
+    """Bias correction: |delta| == lr on step 1 regardless of grad scale."""
+    for g in (0.01, 1.0, 100.0):
+        params = {"w": jnp.zeros(())}
+        state = adam_init(params)
+        cfg = AdamConfig(lr=0.5, grad_clip=0.0)
+        new, _, _ = adam_update(params, {"w": jnp.asarray(g)}, state, cfg)
+        assert float(jnp.abs(new["w"])) == pytest.approx(0.5, rel=1e-3)
+
+
+def test_adam_grad_clip():
+    params = {"w": jnp.zeros((4,))}
+    state = adam_init(params)
+    cfg = AdamConfig(lr=1.0, grad_clip=1.0)
+    _, _, gnorm = adam_update(params, {"w": jnp.full((4,), 100.0)}, state, cfg)
+    assert float(gnorm) == pytest.approx(200.0)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": {"b": jnp.arange(6).reshape(2, 3).astype(jnp.float32)},
+            "c": [jnp.ones(4), jnp.zeros(2)]}
+    path = os.path.join(tmp_path, "ck.npz")
+    checkpoint.save(path, tree)
+    loaded = checkpoint.load(path, tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(loaded)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# tokenizer / task
+# ---------------------------------------------------------------------------
+
+def test_tokenizer_roundtrip():
+    tok = CharTokenizer()
+    s = "12+(3*4)= 0"
+    assert tok.decode(tok.encode(s, bos=True)) == s
+
+
+def test_math_task_reward():
+    task = MathTask(max_operand=9, ops="+")
+    prob = task.sample()
+    good = task.tok.encode(str(prob.answer)) + [task.tok.EOS]
+    bad = task.tok.encode(str(prob.answer + 1)) + [task.tok.EOS]
+    assert task.reward(prob, good, max_new_tokens=16) == 1.0
+    assert task.reward(prob, bad, max_new_tokens=16) == 0.0
+
+
+def test_math_task_soft_length_penalty():
+    task = MathTask()
+    prob = task.sample()
+    long_completion = task.tok.encode(str(prob.answer)) + \
+        [task.tok.stoi[" "]] * 14
+    r = task.reward(prob, long_completion, max_new_tokens=16)
+    assert r < 1.0  # penalized for approaching the limit
+
+
+# ---------------------------------------------------------------------------
+# sharding rules (stub mesh: logical_to_spec only reads axis_names + shape)
+# ---------------------------------------------------------------------------
+
+class _StubMesh:
+    def __init__(self, shape, names):
+        self.axis_names = names
+        self.devices = np.empty(shape)
+
+
+MESH = _StubMesh((16, 16), ("data", "model"))
+POD = _StubMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def test_spec_basic_tp():
+    spec = logical_to_spec(("p_embed", "p_mlp"), (4096, 14336), MESH)
+    assert spec == jax.sharding.PartitionSpec("data", "model")
+
+
+def test_spec_divisibility_fallback():
+    # 8 kv heads cannot shard over model=16 -> replicated
+    spec = logical_to_spec(("p_kv_heads",), (8,), MESH)
+    assert spec == jax.sharding.PartitionSpec(None)
+
+
+def test_spec_axis_used_once():
+    # batch takes data; cache_seq picks up the model axis (flash-decode
+    # sequence parallelism, §Perf-2) but cannot reuse data
+    spec = logical_to_spec(("batch", "cache_seq"), (128, 32768), MESH)
+    assert spec == jax.sharding.PartitionSpec("data", "model")
+    # batch=1 cannot use data; cache_seq takes both axes
+    spec = logical_to_spec(("batch", "cache_seq"), (1, 524288), MESH)
+    assert spec == jax.sharding.PartitionSpec(None, ("data", "model"))
+
+
+def test_spec_multi_axis_batch():
+    spec = logical_to_spec(("batch", "seq"), (256, 4096), POD)
+    assert spec == jax.sharding.PartitionSpec(("pod", "data"), None)
+
+
+@given(st.integers(1, 4096), st.integers(1, 4096))
+@settings(max_examples=60, deadline=None)
+def test_spec_never_invalid(d1, d2):
+    """Property: any produced spec keeps dims divisible by shard counts."""
+    sizes = dict(zip(MESH.axis_names, MESH.devices.shape))
+    spec = logical_to_spec(("p_embed", "p_mlp"), (d1, d2), MESH)
+    for dim, entry in zip((d1, d2), spec):
+        if entry is None:
+            continue
+        axes = (entry,) if isinstance(entry, str) else entry
+        total = 1
+        for a in axes:
+            total *= sizes[a]
+        assert dim % total == 0
