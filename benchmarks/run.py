@@ -19,12 +19,15 @@ def main() -> None:
                     help="substring filter on benchmark group name")
     ap.add_argument("--full", action="store_true",
                     help="long variants (learning curves at full length)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI subset: engine hot path + analytic groups only")
     args = ap.parse_args()
     if args.full:
         os.environ["BENCH_FAST"] = "0"
 
     # imports after BENCH_FAST is settled
     from benchmarks import figures
+    from benchmarks.engine_bench import engine_benchmarks
     from benchmarks.kernels_bench import kernel_benchmarks
     from benchmarks.roofline_bench import roofline_rows
 
@@ -39,7 +42,12 @@ def main() -> None:
         "ablation": figures.ablation_update_every,
         "kernels": kernel_benchmarks,
         "roofline": roofline_rows,
+        "engine": engine_benchmarks,
     }
+    if args.smoke:
+        # fast, deterministic-cost groups so per-PR CI can catch tokens/sec
+        # regressions in the generation hot path
+        groups = {k: groups[k] for k in ("engine", "fig8", "fig9")}
 
     print("name,us_per_call,derived")
     failed = []
@@ -62,4 +70,6 @@ def main() -> None:
 
 
 if __name__ == "__main__":
+    # support `python benchmarks/run.py` as well as `python -m benchmarks.run`
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
     main()

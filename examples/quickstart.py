@@ -25,7 +25,11 @@ def main():
 
     pipeline = PipelineRL(
         cfg, params, task,
-        EngineConfig(n_slots=16, max_len=16),       # H slots, token budget
+        # H slots, per-sequence token budget. prefill_chunk: admitted
+        # prompts enter the KV cache in batched chunk-sized forwards
+        # (ceil((P-1)/chunk) model calls per prompt) instead of one decode
+        # step per prompt token; 0 restores the legacy forcing loop.
+        EngineConfig(n_slots=16, max_len=16, prefill_chunk=8),
         PipelineConfig(batch_size=8, n_opt_steps=10,
                        n_chips=8, train_chips=4,    # T of N chips train
                        pack_rows=3, pack_seq=64),

@@ -75,6 +75,10 @@ class ModelConfig:
     # route attention/SSD through the Pallas TPU kernels (interpret mode on
     # CPU); falls back to the jnp path when a shape doesn't fit the kernel
     use_pallas: bool = False
+    # Pallas interpret mode: None = auto (interpret off-TPU, compiled on
+    # TPU); True/False forces it. Plumbed into every kernel call so TPU
+    # runs never hit an interpret-mode kernel by accident.
+    pallas_interpret: Optional[bool] = None
     source: str = ""
 
     @property

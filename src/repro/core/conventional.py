@@ -49,6 +49,10 @@ class ConventionalRL:
             # --- generation phase: mu <- pi, drain B*G sequences ---------
             self.engine.set_weights(self.trainer.params, self.trainer.version)
             self.engine.refill(self.time)
+            # chunked-prefill admission is batched prefill FLOPs on the
+            # fleet (the legacy forcing loop charges decode steps instead)
+            self.time += hw.prefill_time(
+                self.engine.last_admit_prefill_tokens, cc.n_chips)
             rollouts = []
             while self.engine.n_active > 0:
                 h = self.engine.n_active

@@ -102,11 +102,21 @@ class PipelineRL:
 
     def run(self, n_opt_steps: Optional[int] = None) -> List[Dict]:
         n = n_opt_steps or self.pc.n_opt_steps
-        self.engine.refill(self.actor_time)
+        self._refill()
         while self.trainer.version < n:
             self._actor_tick()
             self._trainer_tick()
         return self.log
+
+    def _refill(self):
+        """Admit prompts; chunked prefill is costed as batched prefill
+        FLOPs on the generation chips (legacy forcing loops cost decode
+        steps inside _actor_tick instead)."""
+        admitted = self.engine.refill(self.actor_time)
+        if admitted:
+            self.actor_time += self.hw.prefill_time(
+                self.engine.last_admit_prefill_tokens, max(self.gen_chips, 1))
+        return admitted
 
     # ------------------------------------------------------------------
     def _actor_tick(self):
@@ -121,7 +131,7 @@ class PipelineRL:
         for r in finished:
             r.finished_at = self.actor_time
         self.queue.put(finished)
-        self.engine.refill(self.actor_time)
+        self._refill()
 
     def _trainer_tick(self):
         B = self.pc.batch_size

@@ -35,11 +35,57 @@ class EngineConfig:
     temperature: float = 1.0
     eos_id: int = 2
     pad_id: int = 0
+    # chunked-prefill admission (DESIGN.md §2): newly admitted prompts run
+    # through batched `prefill_chunk`-token forwards that write K/V (and
+    # SSM state) straight into the slot cache — ceil((P-1)/chunk) model
+    # invocations per prompt instead of P-1 one-token decode steps. 0
+    # falls back to the legacy token-at-a-time forcing loop. The effective
+    # chunk is reduced to the largest divisor of max_len if needed so
+    # chunk boundaries never cross the cache end.
+    prefill_chunk: int = 16
+    # Pallas interpret-mode override threaded into every kernel the engine
+    # compiles (None = auto: interpret off-TPU, compiled on TPU)
+    interpret: Optional[bool] = None
 
 
 def _zero_cache(cfg: ModelConfig, n_slots: int, max_len: int):
     specs = kv_cache_specs(cfg, n_slots, max_len)
     return {k: jnp.zeros(v.shape, v.dtype) for k, v in specs.items()}
+
+
+def _admit_impl(st: Dict[str, Any], new_tokens, new_plen, new_ncached,
+                admit_mask, cfg: ModelConfig):
+    """Device-side admission: scatter fresh prompt rows into engine state.
+
+    Replaces the old host round trip (five full-state np copies per
+    admission) — the only host->device traffic is the (H,T) prompt buffer
+    and three (H,) vectors; everything else is donated and updated in
+    place. admit_mask: (H,) bool, True where a new prompt enters.
+    """
+    m = admit_mask
+    tokens = jnp.where(m[:, None], new_tokens, st["tokens"])
+    lp = jnp.where(m[:, None], 0.0, st["lp"])
+    n_cached = jnp.where(m, new_ncached, st["n_cached"])
+    prompt_len = jnp.where(m, new_plen, st["prompt_len"])
+    active = st["active"] | m
+    cache = dict(st["cache"])
+    # zero recurrent state of refilled slots (attention cache is masked by
+    # cache_index, but SSM state carries over unless cleared)
+    if "ssd" in cache:
+        keep = (~m).astype(cache["ssd"].dtype)[None, :, None, None, None]
+        cache["ssd"] = cache["ssd"] * keep
+        keep_c = (~m).astype(cache["conv"].dtype)[None, :, None, None]
+        cache["conv"] = cache["conv"] * keep_c
+    return dict(st, tokens=tokens, lp=lp, n_cached=n_cached,
+                prompt_len=prompt_len, active=active, cache=cache)
+
+
+def _prefill_impl(params, st: Dict[str, Any], offset, admit_mask,
+                  cfg: ModelConfig, chunk: int):
+    """One chunked-prefill step over the slot state (cache update only)."""
+    cache = M.prefill_chunk(params, st["tokens"], st["prompt_len"], offset,
+                            admit_mask, st["cache"], cfg, chunk=chunk)
+    return dict(st, cache=cache)
 
 
 def _engine_step(params, st: Dict[str, Any], cfg: ModelConfig,
@@ -87,6 +133,8 @@ class GenerationEngine:
 
     def __init__(self, cfg: ModelConfig, params, ec: EngineConfig,
                  prompt_source: Callable[[], Problem], seed: int = 0):
+        if ec.interpret is not None:
+            cfg = dataclasses.replace(cfg, pallas_interpret=ec.interpret)
         self.cfg, self.ec = cfg, ec
         self.params = params      # behavior weights μ
         self.version = 0          # trainer version of μ
@@ -106,8 +154,36 @@ class GenerationEngine:
         self.ver_buf = np.zeros((H, T), np.int32)
         self.started_at = np.zeros(H, np.float64)
         self.tokens_generated = 0
+        # host mirrors of the scheduling scalars — the step/refill hot loop
+        # never reads engine state back from device except `finished`
+        self._host_active = np.zeros(H, bool)
+        self._host_ncached = np.zeros(H, np.int64)
+        self._host_prompt_len = np.ones(H, np.int64)
+        # chunked prefill: effective chunk must divide T so chunk windows
+        # never cross the cache end, and the attention cache must be
+        # full-length (ring-buffer caches fall back to the legacy loop)
+        chunk = max(int(ec.prefill_chunk), 0)
+        if chunk:
+            chunk = min(chunk, T)
+            while T % chunk:
+                chunk -= 1
+        if chunk and cfg.has_attention:
+            cl = (self.state["cache"]["k"].shape[2] if "k" in self.state["cache"]
+                  else self.state["cache"]["c_kv"].shape[2])
+            if cl != T:
+                chunk = 0
+        self.prefill_chunk_size = chunk
+        self.prefill_invocations = 0       # chunked-prefill model calls
+        self.prefill_tokens = 0            # prompt tokens admitted via prefill
+        self.last_admit_prefill_tokens = 0
         self._step = jax.jit(functools.partial(_engine_step, cfg=cfg, ec=ec))
         self._recompute = jax.jit(functools.partial(self._recompute_impl, cfg=cfg))
+        self._admit = jax.jit(functools.partial(_admit_impl, cfg=cfg),
+                              donate_argnums=(0,))
+        if chunk:
+            self._prefill = jax.jit(
+                functools.partial(_prefill_impl, cfg=cfg, chunk=chunk),
+                donate_argnums=(1,))
 
     # ----- weights -----------------------------------------------------
     def set_weights(self, params, version: int, recompute_kv: bool = False):
@@ -138,17 +214,22 @@ class GenerationEngine:
     def refill(self, now: float = 0.0) -> int:
         """Fill inactive slots with fresh prompts. The prompt source may
         return None to decline (serving: empty request queue) — those slots
-        stay inactive. Returns #admitted."""
-        active = np.asarray(self.state["active"])
-        free = np.where(~active)[0]
+        stay inactive. Returns #admitted.
+
+        Admission is device-side: a jitted, donated `admit` scatters the
+        new prompt rows into tokens/n_cached/prompt_len/lp/active (no full
+        engine-state round trip through host numpy), then chunked prefill
+        writes the prompts' K/V into the slot cache in ceil((P-1)/chunk)
+        batched forwards (prefill_chunk=0: legacy token-at-a-time loop).
+        """
+        self.last_admit_prefill_tokens = 0
+        free = np.where(~self._host_active)[0]
         if free.size == 0:
             return 0
         H, T = self.ec.n_slots, self.ec.max_len
-        tokens = np.asarray(self.state["tokens"]).copy()
-        n_cached = np.asarray(self.state["n_cached"]).copy()
-        prompt_len = np.asarray(self.state["prompt_len"]).copy()
-        lp = np.asarray(self.state["lp"]).copy()
-        act = active.copy()
+        new_tokens = np.full((H, T), self.ec.pad_id, np.int32)
+        new_plen = np.zeros(H, np.int32)
+        mask = np.zeros(H, bool)
         admitted = []
         for s in free:
             prob = self.prompt_source()
@@ -156,61 +237,72 @@ class GenerationEngine:
                 continue
             admitted.append(s)
             pl = min(len(prob.prompt_ids), T - 2)
-            tokens[s] = self.ec.pad_id
-            tokens[s, :pl] = prob.prompt_ids[:pl]
-            lp[s] = 0.0
-            n_cached[s] = 0
-            prompt_len[s] = pl
-            act[s] = True
+            new_tokens[s, :pl] = prob.prompt_ids[:pl]
+            new_plen[s] = pl
+            mask[s] = True
             self.problems[s] = prob
             self.ver_buf[s] = 0
             self.started_at[s] = now
         if not admitted:
             return 0
-        st = self.state
-        st["tokens"] = jnp.asarray(tokens)
-        st["n_cached"] = jnp.asarray(n_cached)
-        st["prompt_len"] = jnp.asarray(prompt_len)
-        st["lp"] = jnp.asarray(lp)
-        st["active"] = jnp.asarray(act)
-        # zero recurrent state of refilled slots (attention cache is masked
-        # by cache_index, but SSM state carries over unless cleared)
-        if "ssd" in st["cache"]:
-            mask = jnp.asarray(
-                ~np.isin(np.arange(self.ec.n_slots), np.asarray(admitted)),
-                st["cache"]["ssd"].dtype)
-            st["cache"]["ssd"] = st["cache"]["ssd"] * mask[None, :, None, None, None]
-            st["cache"]["conv"] = st["cache"]["conv"] * mask[None, :, None, None].astype(st["cache"]["conv"].dtype)
+        chunk = self.prefill_chunk_size
+        # chunked path: the cache is prefilled below, so decode resumes at
+        # the LAST prompt token (n_cached = P-1); legacy path starts at 0
+        # and forces the prompt token by token
+        target_nc = (np.maximum(new_plen - 1, 0) if chunk
+                     else np.zeros(H, np.int32))
+        self.state = self._admit(self.state, jnp.asarray(new_tokens),
+                                 jnp.asarray(new_plen),
+                                 jnp.asarray(target_nc.astype(np.int32)),
+                                 jnp.asarray(mask))
+        self._host_active[mask] = True
+        self._host_prompt_len[mask] = new_plen[mask]
+        self._host_ncached[mask] = target_nc[mask]
+        if chunk:
+            n_pre = int(new_plen.max()) - 1   # tokens to prefill (max row)
+            for off in range(0, max(n_pre, 0), chunk):
+                self.state = self._prefill(self.params, self.state, off,
+                                           jnp.asarray(mask))
+                self.prefill_invocations += 1
+            self.last_admit_prefill_tokens = int(
+                np.maximum(new_plen[mask] - 1, 0).sum())
+            self.prefill_tokens += self.last_admit_prefill_tokens
         return len(admitted)
 
     @property
     def n_active(self) -> int:
-        return int(np.asarray(self.state["active"]).sum())
+        return int(self._host_active.sum())
 
     # ----- stepping -----------------------------------------------------
     def step(self, task: Optional[MathTask] = None,
              now: float = 0.0) -> List[Rollout]:
         """Generate one token on every active slot; returns rollouts that
         finished this step."""
-        prev_active = np.asarray(self.state["active"])
-        prev_ncached = np.asarray(self.state["n_cached"])
+        prev_active = self._host_active.copy()
+        prev_ncached = self._host_ncached.copy()
         self.state, finished = self._step(self.params, self.state)
         finished = np.asarray(finished)
-        # record weight version for tokens written this step
-        wrote = prev_active & (prev_ncached + 1 < self.ec.max_len)
-        self.ver_buf[wrote, prev_ncached[wrote] + 1] = self.version
+        # record weight version for tokens written this step — only tokens
+        # actually *sampled* under μ; prompt-forced tokens keep version 0
+        # so token-lag stats can't be diluted by the prompt mask convention
+        nxt = prev_ncached + 1
+        wrote = (prev_active & (nxt < self.ec.max_len)
+                 & (nxt >= self._host_prompt_len))
+        self.ver_buf[wrote, nxt[wrote]] = self.version
         self.tokens_generated += int(prev_active.sum())
+        # advance host mirrors (device does n_cached+1 on active slots)
+        self._host_ncached[prev_active] += 1
+        self._host_active[finished] = False
 
         done: List[Rollout] = []
         if finished.any():
             tokens = np.asarray(self.state["tokens"])
             lp = np.asarray(self.state["lp"])
-            n_cached = np.asarray(self.state["n_cached"])
             for s in np.where(finished)[0]:
-                L = int(n_cached[s]) + 1  # includes the just-sampled token
+                L = int(self._host_ncached[s]) + 1  # incl. just-sampled token
                 L = min(L, self.ec.max_len)
                 prob = self.problems[s]
-                pl = int(np.asarray(self.state["prompt_len"])[s])
+                pl = int(self._host_prompt_len[s])
                 completion = tokens[s, pl:L]
                 reward = 0.0
                 if task is not None and prob is not None:

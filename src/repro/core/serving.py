@@ -101,7 +101,12 @@ class Server:
         """Admit waiting requests, decode one token for every in-flight
         request; returns requests completed this step."""
         self._source.last_admitted = []
+        inv0 = self.engine.prefill_invocations
         self.engine.refill(self.clock)
+        # each chunked-prefill forward costs ~one engine step on the
+        # step-denominated clock (the legacy forcing loop pays per-token
+        # decode steps instead, so admission is never free)
+        self.clock += dt * (self.engine.prefill_invocations - inv0)
         for req in self._source.last_admitted:
             self.in_flight[req.rid] = req
         rollouts = self.engine.step(None, now=self.clock)
@@ -133,4 +138,7 @@ class Server:
             "p99_latency": float(np.percentile(lat, 99)) if lat else 0.0,
             "mean_admission_wait": float(np.mean(wait)) if wait else 0.0,
             "tokens_generated": self.engine.tokens_generated,
+            # chunked-prefill admission path (DESIGN.md §2)
+            "prefill_tokens": self.engine.prefill_tokens,
+            "prefill_invocations": self.engine.prefill_invocations,
         }

@@ -25,6 +25,11 @@ class HardwareModel:
     u_max: float = 0.5   # generation-kernel utilization ceiling (Fig. 8)
     h_sat: int = 256     # batch where utilization saturates
     tau: float = 4.92    # training flashes per token (Appendix A.4)
+    # amortized flashes per *prompt* token admitted via chunked prefill: a
+    # batched many-token forward runs compute-bound like training, so it
+    # costs ~1 flash/token (the Eq. 9 definition of a flash) instead of a
+    # full decode step per token
+    prefill_flash: float = 1.0
 
     def U(self, h):
         """Utilization at per-chip batch h (0 at h=0)."""
@@ -41,6 +46,15 @@ class HardwareModel:
 
     def train_time(self, n_tokens: int, n_chips: int) -> float:
         return n_tokens * self.tau / max(n_chips, 1)
+
+    def prefill_time(self, n_tokens: int, n_chips: int) -> float:
+        """Wall-time (flashes) to admit `n_tokens` prompt tokens through
+        the batched chunked-prefill path. Costed as compute-bound prefill
+        FLOPs — NOT as `prompt_len` decode steps of the whole H batch,
+        which is what the legacy forcing loop effectively charged."""
+        if n_tokens <= 0:
+            return 0.0
+        return n_tokens * self.prefill_flash / max(n_chips, 1)
 
 
 # ---------------------------------------------------------------------------

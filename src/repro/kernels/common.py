@@ -1,0 +1,16 @@
+"""Shared helpers for the Pallas kernels."""
+from __future__ import annotations
+
+import jax
+import jax.experimental.pallas.tpu as pltpu
+
+# MemorySpace was named TPUMemorySpace before jax 0.5
+MEMSPACE = getattr(pltpu, "MemorySpace", None) or pltpu.TPUMemorySpace
+
+
+def default_interpret(interpret: bool | None) -> bool:
+    """Resolve the interpret flag: None = interpret mode off-TPU (kernel
+    bodies execute in Python for correctness validation), compiled on TPU."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret

@@ -3,10 +3,16 @@ ring-buffer) KV cache — the generation engine's hot loop.
 
 TPU adaptation of vLLM's paged-attention CUDA kernel: instead of gather-
 paged KV blocks, the cache is a contiguous per-slot ring buffer (static
-shapes, see DESIGN.md) and the kernel streams KV *blocks* HBM->VMEM along
-the sequential trailing grid axis with online-softmax accumulation in VMEM
-scratch. Invalid slots (>= cache length) are masked, so one kernel serves
-both the growing-cache and the full-ring cases.
+shapes, see DESIGN.md §1) and the kernel streams KV *blocks* HBM->VMEM
+along the sequential trailing grid axis with online-softmax accumulation in
+VMEM scratch. Invalid slots (>= cache length) are masked, so one kernel
+serves both the growing-cache and the full-ring cases.
+
+The kernel is *length-aware*: the per-slot valid length lives in SMEM and
+KV blocks entirely beyond it skip the QK^T / PV dots via `pl.when` — in a
+continuous-batching engine most slots are far from the cache capacity, so
+the common case touches only `ceil(len/block_k)` blocks' worth of MXU work
+instead of `CL/block_k`.
 
 grid = (batch, kv_heads, n_kv_blocks); all `rep` q-heads of a kv head are
 processed together as a (rep, d) tile — MXU-friendly and it amortizes the
@@ -21,6 +27,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels.common import MEMSPACE as _MEMSPACE, default_interpret
+
 NEG_INF = -1e30
 
 
@@ -34,22 +42,26 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    q = q_ref[0, 0].astype(jnp.float32)                 # (rep, d)
-    k = k_ref[0, 0].astype(jnp.float32)                 # (bk, d)
-    v = v_ref[0, 0].astype(jnp.float32)                 # (bk, dv)
-    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                            preferred_element_type=jnp.float32) * scale
-    valid = (ki * block_k + jax.lax.broadcasted_iota(
-        jnp.int32, (q.shape[0], block_k), 1)) < len_ref[0]
-    s = jnp.where(valid, s, NEG_INF)
-    m_prev, l_prev = m_ref[...], l_ref[...]
-    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
-    p = jnp.exp(s - m_new)
-    corr = jnp.exp(m_prev - m_new)
-    l_ref[...] = l_prev * corr + p.sum(axis=-1, keepdims=True)
-    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
-        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
-    m_ref[...] = m_new
+    # length-aware skip: blocks whose first slot is already past this
+    # sequence's valid length contribute nothing — don't issue the dots
+    @pl.when(ki * block_k < len_ref[0])
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)                 # (rep, d)
+        k = k_ref[0, 0].astype(jnp.float32)                 # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)                 # (bk, dv)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        valid = (ki * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (q.shape[0], block_k), 1)) < len_ref[0]
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_prev * corr + p.sum(axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
 
     @pl.when(ki == n_kv_blocks - 1)
     def _finalize():
@@ -58,9 +70,14 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
 
 
 def flash_decode(q, k_cache, v_cache, lengths, *, scale: float,
-                 block_k: int = 256, interpret: bool = True):
+                 block_k: int = 256, interpret: bool | None = None):
     """q: (B,H,Dk); caches: (B,CL,KV,D); lengths: (B,) valid cache length
-    per slot (pass CL for a full ring buffer). Returns (B,H,Dv)."""
+    per slot (pass CL for a full ring buffer). Returns (B,H,Dv).
+
+    interpret=None resolves to interpret mode off-TPU and compiled mode on
+    TPU (callers may force either; see kernels.ops for the jitted wrapper).
+    """
+    interpret = default_interpret(interpret)
     B, H, Dk = q.shape
     CL, KV = k_cache.shape[1], k_cache.shape[2]
     Dv = v_cache.shape[-1]
@@ -81,7 +98,7 @@ def flash_decode(q, k_cache, v_cache, lengths, *, scale: float,
         grid=(B, KV, nk),
         in_specs=[
             pl.BlockSpec((1,), lambda b, h, ki: (b,),
-                         memory_space=pltpu.MemorySpace.SMEM),
+                         memory_space=_MEMSPACE.SMEM),
             pl.BlockSpec((1, 1, rep, Dk), lambda b, h, ki: (b, h, 0, 0)),
             pl.BlockSpec((1, 1, block_k, Dk), lambda b, h, ki: (b, h, ki, 0)),
             pl.BlockSpec((1, 1, block_k, Dv), lambda b, h, ki: (b, h, ki, 0)),

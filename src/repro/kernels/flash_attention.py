@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels.common import default_interpret
+
 NEG_INF = -1e30
 
 
@@ -72,9 +74,10 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
 
 def flash_attention(q, k, v, *, scale: float, causal: bool = True,
                     block_q: int = 128, block_k: int = 128,
-                    interpret: bool = True):
+                    interpret: bool | None = None):
     """q: (B,H,S,Dk); k,v: (B,KV,S,Dk/Dv) — GQA folded via h // rep.
-    Returns (B,H,S,Dv)."""
+    Returns (B,H,S,Dv). interpret=None: interpret off-TPU, compiled on TPU."""
+    interpret = default_interpret(interpret)
     B, H, S, Dk = q.shape
     KV, Dv = k.shape[1], v.shape[-1]
     rep = H // KV

@@ -10,13 +10,12 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.common import default_interpret
 from repro.kernels.decode_attention import flash_decode as _flash_decode
 from repro.kernels.flash_attention import flash_attention as _flash_attention
 from repro.kernels.ssd_scan import ssd_scan as _ssd_scan
 
 
-def _default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 @functools.partial(jax.jit, static_argnames=("scale", "causal", "block_q",
@@ -24,8 +23,7 @@ def _default_interpret() -> bool:
 def flash_attention(q, k, v, *, scale: float, causal: bool = True,
                     block_q: int = 128, block_k: int = 128,
                     interpret: bool | None = None):
-    if interpret is None:
-        interpret = _default_interpret()
+    interpret = default_interpret(interpret)
     return _flash_attention(q, k, v, scale=scale, causal=causal,
                             block_q=block_q, block_k=block_k,
                             interpret=interpret)
@@ -34,8 +32,7 @@ def flash_attention(q, k, v, *, scale: float, causal: bool = True,
 @functools.partial(jax.jit, static_argnames=("scale", "block_k", "interpret"))
 def flash_decode(q, k_cache, v_cache, lengths, *, scale: float,
                  block_k: int = 256, interpret: bool | None = None):
-    if interpret is None:
-        interpret = _default_interpret()
+    interpret = default_interpret(interpret)
     return _flash_decode(q, k_cache, v_cache, lengths, scale=scale,
                          block_k=block_k, interpret=interpret)
 
@@ -43,6 +40,5 @@ def flash_decode(q, k_cache, v_cache, lengths, *, scale: float,
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
 def ssd_scan(x, dt, A, B, C, *, chunk: int = 64,
              interpret: bool | None = None):
-    if interpret is None:
-        interpret = _default_interpret()
+    interpret = default_interpret(interpret)
     return _ssd_scan(x, dt, A, B, C, chunk=chunk, interpret=interpret)

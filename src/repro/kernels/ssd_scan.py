@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels.common import MEMSPACE as _MEMSPACE, default_interpret
+
 
 def _ssd_kernel(a_ref, x_ref, dt_ref, b_ref, c_ref, y_ref, fstate_ref,
                 state_ref, *, chunk: int, n_chunks: int):
@@ -65,10 +67,12 @@ def _ssd_kernel(a_ref, x_ref, dt_ref, b_ref, c_ref, y_ref, fstate_ref,
         fstate_ref[0, 0] = state_ref[...]
 
 
-def ssd_scan(x, dt, A, B, C, *, chunk: int = 64, interpret: bool = True):
+def ssd_scan(x, dt, A, B, C, *, chunk: int = 64,
+             interpret: bool | None = None):
     """x: (b,l,h,p); dt: (b,l,h) (softplus'd); A: (h,) negative;
     B,C: (b,l,g,n). Returns (y (b,l,h,p), final_state (b,h,n,p))
-    (no D skip / gating — see ops.py)."""
+    (no D skip / gating — see ops.py). interpret=None: auto by backend."""
+    interpret = default_interpret(interpret)
     bsz, l, h, p = x.shape
     g, n = B.shape[2], B.shape[3]
     rep = h // g
@@ -81,7 +85,7 @@ def ssd_scan(x, dt, A, B, C, *, chunk: int = 64, interpret: bool = True):
         grid=(bsz, h, nc),
         in_specs=[
             pl.BlockSpec((1,), lambda b_, h_, c_: (h_,),
-                         memory_space=pltpu.MemorySpace.SMEM),
+                         memory_space=_MEMSPACE.SMEM),
             pl.BlockSpec((1, chunk, 1, p), lambda b_, h_, c_: (b_, c_, h_, 0)),
             pl.BlockSpec((1, chunk, 1), lambda b_, h_, c_: (b_, c_, h_)),
             pl.BlockSpec((1, chunk, 1, n), lambda b_, h_, c_, _r=rep: (b_, c_, h_ // _r, 0)),

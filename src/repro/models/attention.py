@@ -229,7 +229,8 @@ def gqa_forward(p, x, positions, cfg: ModelConfig, segment_ids=None,
         from repro.kernels import ops as kops
         out = kops.flash_attention(
             jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2),
-            jnp.swapaxes(v, 1, 2), scale=1.0 / np.sqrt(cfg.d_head))
+            jnp.swapaxes(v, 1, 2), scale=1.0 / np.sqrt(cfg.d_head),
+            interpret=cfg.pallas_interpret)
         out = jnp.swapaxes(out, 1, 2)
     else:
         out = blocked_causal_attention(
@@ -260,7 +261,8 @@ def gqa_decode(p, x, positions, cache_k, cache_v, cache_index, cfg: ModelConfig,
             jnp.broadcast_to(jnp.asarray(cache_index + 1, jnp.int32), (B,))
         y = kops.flash_decode(q[:, 0], cache_k, cache_v, lengths,
                               scale=1.0 / np.sqrt(cfg.d_head),
-                              block_k=min(256, CL))
+                              block_k=min(256, CL),
+                              interpret=cfg.pallas_interpret)
     else:
         y = decode_attention(q[:, 0], cache_k, cache_v, cache_index + 1,
                              scale=1.0 / np.sqrt(cfg.d_head), ring=ring)
@@ -338,4 +340,101 @@ def mla_decode(p, x, positions, cache_ckv, cache_krope, cache_index,
                           preferred_element_type=jnp.float32).astype(x.dtype)
     o = jnp.einsum("bhr,rhk->bhk", o_latent, p["wv_b"])
     y = jnp.einsum("bhk,hkd->bd", o, p["wo"])[:, None]
+    return y, (cache_ckv, cache_krope)
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill: a C-token query block against the slot cache
+# ---------------------------------------------------------------------------
+
+def write_cache_chunk(cache, new, offset, write_mask=None):
+    """Write `new` (B,C,...) into `cache` (B,CL,...) at [offset, offset+C).
+
+    Rows where write_mask is False keep their existing cache contents — the
+    engine prefills all H slots in lockstep, but only newly admitted slots
+    may be touched (the others hold live K/V of in-progress sequences).
+    The caller pre-clamps `offset` to CL-C so the slice never shifts.
+    """
+    C = new.shape[1]
+    merged = new.astype(cache.dtype)
+    if write_mask is not None:
+        old = jax.lax.dynamic_slice_in_dim(cache, offset, C, axis=1)
+        m = write_mask.reshape((-1,) + (1,) * (cache.ndim - 1))
+        merged = jnp.where(m, merged, old)
+    return jax.lax.dynamic_update_slice_in_dim(cache, merged, offset, axis=1)
+
+
+def chunk_attention(q, k_cache, v_cache, positions, *, scale):
+    """q: (B,C,H,Dk); caches: (B,CL,KV,D); positions: (B,C) absolute query
+    positions. Chunked-prefill attention: query i attends to cache slots
+    j <= positions[b,i] — the already-written prefix chunks plus causal
+    intra-chunk structure (this chunk's K/V sit at their absolute slots)."""
+    B, C, H, Dk = q.shape
+    CL, KV = k_cache.shape[1], k_cache.shape[2]
+    rep = H // KV
+    qr = q.reshape(B, C, KV, rep, Dk)
+    s = jnp.einsum("bqgrd,bkgd->bgrqk", qr, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    valid = jnp.arange(CL)[None, None] <= positions[:, :, None]   # (B,C,CL)
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgrqk,bkgd->bqgrd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, C, H, v_cache.shape[-1]).astype(q.dtype)
+
+
+def gqa_prefill_chunk(p, x, positions, cache_k, cache_v, offset, write_mask,
+                      cfg: ModelConfig):
+    """One GQA layer over a C-token prompt chunk. x: (B,C,d). Writes the
+    chunk's K/V into the slot cache (masked to admitted rows) and attends
+    against the cache prefix. Returns y (B,C,d), (cache_k, cache_v)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    q, k = _maybe_qk_norm(cfg, p, q, k)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    cache_k = write_cache_chunk(cache_k, k, offset, write_mask)
+    cache_v = write_cache_chunk(cache_v, v, offset, write_mask)
+    y = chunk_attention(q, cache_k, cache_v, positions,
+                        scale=1.0 / np.sqrt(cfg.d_head))
+    y = jnp.einsum("bshk,hkd->bsd", y, p["wo"])
+    return y, (cache_k, cache_v)
+
+
+def mla_prefill_chunk(p, x, positions, cache_ckv, cache_krope, offset,
+                      write_mask, cfg: ModelConfig):
+    """One absorbed-MLA layer over a C-token prompt chunk: scores in latent
+    space against the compressed cache (same math as mla_decode, C queries).
+    Returns y (B,C,d), (cache_ckv, cache_krope)."""
+    B, C, _ = x.shape
+    CL = cache_ckv.shape[1]
+    nope, rope = cfg.qk_nope_dim, cfg.qk_rope_dim
+    q = jnp.einsum("bsd,dr->bsr", x, p["wq_a"])
+    q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", q, p["wq_b"])   # (B,C,H,nope+rope)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"])
+    c_kv = rms_norm(kv[..., :cfg.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(kv[..., cfg.kv_lora_rank:], positions, cfg.rope_theta)
+    cache_ckv = write_cache_chunk(cache_ckv, c_kv, offset, write_mask)
+    cache_krope = write_cache_chunk(cache_krope, k_rope, offset, write_mask)
+
+    # absorb W_uk into q: (B,C,H,nope) x (r,H,nope) -> (B,C,H,r)
+    q_latent = jnp.einsum("bqhk,rhk->bqhr", q_nope, p["wk_b"])
+    s = jnp.einsum("bqhr,bkr->bhqk", q_latent, cache_ckv,
+                   preferred_element_type=jnp.float32)
+    s += jnp.einsum("bqhp,bkp->bhqk", q_rope, cache_krope,
+                    preferred_element_type=jnp.float32)
+    s *= 1.0 / np.sqrt(nope + rope)
+    valid = jnp.arange(CL)[None, None] <= positions[:, :, None]   # (B,C,CL)
+    s = jnp.where(valid[:, None], s, NEG_INF)
+    pw = jax.nn.softmax(s, axis=-1)
+    o_latent = jnp.einsum("bhqk,bkr->bqhr", pw.astype(cache_ckv.dtype),
+                          cache_ckv,
+                          preferred_element_type=jnp.float32).astype(x.dtype)
+    o = jnp.einsum("bqhr,rhk->bqhk", o_latent, p["wv_b"])
+    y = jnp.einsum("bqhk,hkd->bqd", o, p["wo"])
     return y, (cache_ckv, cache_krope)

@@ -241,18 +241,49 @@ def _stack_group_caches(cfg: ModelConfig, caches: List[Dict[str, Any]]):
 # decode (one token against the cache)
 # ---------------------------------------------------------------------------
 
+def _cached_layer_step(cfg: ModelConfig, kind: str, h, lp, attn_fn, ssm_fn):
+    """Shared layer wiring for the cache-carrying paths (decode_step and
+    prefill_chunk): norm1 -> attention/SSM branch(es) -> residual -> FFN.
+
+    attn_fn(attn_params, x) / ssm_fn(ssm_params, x) run the path-specific
+    primitive and return (branch_out, new_cache_entries)."""
+    x = rms_norm(h, lp["norm1"], cfg.norm_eps)
+    if cfg.hybrid_parallel:
+        a, ncs_a = attn_fn(lp["attn"], x)
+        s, ncs_s = ssm_fn(lp["ssm"], x)
+        mix = 0.5 * (rms_norm(a, lp["hyb_norm_a"], cfg.norm_eps)
+                     + rms_norm(s, lp["hyb_norm_s"], cfg.norm_eps))
+        h = h + mix
+        ncs = {**ncs_a, **ncs_s}
+    elif cfg.arch_type == "ssm":
+        s, ncs = ssm_fn(lp["ssm"], x)
+        h = h + s
+    else:
+        a, ncs = attn_fn(lp["attn"], x)
+        h = h + a
+
+    if kind == "dense":
+        x = rms_norm(h, lp["norm2"], cfg.norm_eps)
+        f = lp["ffn"]
+        h = h + swiglu(x, f["gate"], f["up"], f["down"])
+    elif kind == "moe":
+        x = rms_norm(h, lp["norm2"], cfg.norm_eps)
+        mo, _ = moe_mod.moe_apply(lp["moe"], x, cfg)
+        h = h + mo
+    return h, ncs
+
+
 def decode_step(params, tokens, positions, cache, cache_index,
                 cfg: ModelConfig, *, ring: Optional[bool] = None):
     """tokens: (B,1); cache: stacked (L,...) tree; cache_index: scalar or (B,).
     Returns (logits (B,1,V), values (B,1)?, new_cache)."""
     B = tokens.shape[0]
     if ring is None:
+        # ring addressing applies only to attention caches, and is on
+        # exactly when the sliding-window variant allocated a ring buffer
+        # (effective_cache_len < full sequence); SSM state has no cache.
         has_kv = "k" in cache or "c_kv" in cache
-        if has_kv:
-            cl = cache["k"].shape[2] if "k" in cache else cache["c_kv"].shape[2]
-            ring = bool(cfg.attention_variant == "sliding_window")
-        else:
-            ring = False
+        ring = has_kv and cfg.attention_variant == "sliding_window"
     h = jnp.take(params["embed"], tokens, axis=0)
     h = constrain(h, ("batch", "seq", "embed"))
 
@@ -265,45 +296,24 @@ def decode_step(params, tokens, positions, cache, cache_index,
 
         def scan_body(h, inp, _kind=kind):
             lp, cs = inp
-            x = rms_norm(h, lp["norm1"], cfg.norm_eps)
-            ncs = {}
-            if cfg.hybrid_parallel:
-                a, (nk, nv) = attn.gqa_decode(
-                    lp["attn"], x, positions, cs["k"], cs["v"], cache_index,
-                    cfg, ring)
-                s, (ncv, nss) = ssm_mod.ssm_decode(
-                    lp["ssm"], x, cs["conv"], cs["ssd"], cfg)
-                mix = 0.5 * (rms_norm(a, lp["hyb_norm_a"], cfg.norm_eps)
-                             + rms_norm(s, lp["hyb_norm_s"], cfg.norm_eps))
-                h = h + mix
-                ncs = {"k": nk, "v": nv, "conv": ncv, "ssd": nss}
-            elif cfg.arch_type == "ssm":
-                s, (ncv, nss) = ssm_mod.ssm_decode(
-                    lp["ssm"], x, cs["conv"], cs["ssd"], cfg)
-                h = h + s
-                ncs = {"conv": ncv, "ssd": nss}
-            elif cfg.use_mla:
-                a, (nck, nkr) = attn.mla_decode(
-                    lp["attn"], x, positions, cs["c_kv"], cs["k_rope"],
-                    cache_index, cfg, ring)
-                h = h + a
-                ncs = {"c_kv": nck, "k_rope": nkr}
-            else:
-                a, (nk, nv) = attn.gqa_decode(
-                    lp["attn"], x, positions, cs["k"], cs["v"], cache_index,
-                    cfg, ring)
-                h = h + a
-                ncs = {"k": nk, "v": nv}
 
-            if _kind == "dense":
-                x = rms_norm(h, lp["norm2"], cfg.norm_eps)
-                f = lp["ffn"]
-                h = h + swiglu(x, f["gate"], f["up"], f["down"])
-            elif _kind == "moe":
-                x = rms_norm(h, lp["norm2"], cfg.norm_eps)
-                mo, _ = moe_mod.moe_apply(lp["moe"], x, cfg)
-                h = h + mo
-            return h, ncs
+            def attn_fn(pa, x):
+                if cfg.use_mla:
+                    a, (nck, nkr) = attn.mla_decode(
+                        pa, x, positions, cs["c_kv"], cs["k_rope"],
+                        cache_index, cfg, ring)
+                    return a, {"c_kv": nck, "k_rope": nkr}
+                a, (nk, nv) = attn.gqa_decode(
+                    pa, x, positions, cs["k"], cs["v"], cache_index,
+                    cfg, ring)
+                return a, {"k": nk, "v": nv}
+
+            def ssm_fn(ps, x):
+                s, (ncv, nss) = ssm_mod.ssm_decode(
+                    ps, x, cs["conv"], cs["ssd"], cfg)
+                return s, {"conv": ncv, "ssd": nss}
+
+            return _cached_layer_step(cfg, _kind, h, lp, attn_fn, ssm_fn)
 
         h, kvs = jax.lax.scan(scan_body, h, (gp, cache_slice),
                               unroll=True if cfg.scan_unroll else 1)
@@ -320,3 +330,89 @@ def decode_step(params, tokens, positions, cache, cache_index,
         out["values"] = jnp.einsum(
             "bsd,dv->bsv", h.astype(jnp.float32), params["value_head"])[..., 0]
     return out
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill (batched prompt admission against the slot cache)
+# ---------------------------------------------------------------------------
+
+def _merge_state(new, old, mask):
+    """Keep `old` rows where mask is False. mask: (B,)."""
+    m = mask.reshape((-1,) + (1,) * (old.ndim - 1))
+    return jnp.where(m, new.astype(old.dtype), old)
+
+
+def prefill_chunk(params, tokens, prompt_len, offset, admit_mask, cache,
+                  cfg: ModelConfig, *, chunk: int):
+    """One fixed-size chunk of chunked-prefill admission (DESIGN.md §2).
+
+    Runs `chunk` prompt tokens (positions [offset, offset+chunk)) of every
+    slot through the full layer stack and writes their K/V (MLA latent /
+    SSM state) straight into the slot cache via dynamic_update_slice, so
+    admitting a prompt of length P costs ceil((P-1)/chunk) batched forwards
+    instead of P-1 one-token decode steps.
+
+    tokens: (B,T) slot token buffer; prompt_len: (B,); offset: scalar chunk
+    start — the host guarantees offset + chunk <= T and offset % chunk == 0;
+    admit_mask: (B,) bool, True for slots admitted this refill (other rows
+    participate in compute for static shapes but their cache/state is
+    untouched). Per row, only tokens at positions < prompt_len-1 enter the
+    recurrent state; attention cache entries beyond that are dead (masked
+    by n_cached and overwritten in place by later decode steps). No logits
+    are computed: the first completion token is sampled by the normal
+    decode step at n_cached = prompt_len-1.
+
+    Returns the updated cache tree.
+    """
+    B, T = tokens.shape
+    offset = jnp.asarray(offset, jnp.int32)
+    toks = jax.lax.dynamic_slice_in_dim(tokens, offset, chunk, axis=1)
+    positions = jnp.broadcast_to(
+        (offset + jnp.arange(chunk, dtype=jnp.int32))[None], (B, chunk))
+    # tokens folded into recurrent state: absolute position < prompt_len-1
+    tok_mask = (positions < (prompt_len[:, None] - 1)).astype(jnp.float32)
+
+    h = jnp.take(params["embed"], toks, axis=0)
+    h = constrain(h, ("batch", "seq", "embed"))
+
+    lg = layer_groups(cfg)
+    off_layers = 0
+    new_cache = {k: [] for k in cache}
+    for gi, (kind, count) in enumerate(lg):
+        gp = params["groups"][gi]
+        cache_slice = {k: jax.lax.slice_in_dim(v, off_layers,
+                                               off_layers + count, axis=0)
+                       for k, v in cache.items()}
+
+        def scan_body(h, inp, _kind=kind):
+            lp, cs = inp
+
+            def attn_fn(pa, x):
+                if cfg.use_mla:
+                    a, (nck, nkr) = attn.mla_prefill_chunk(
+                        pa, x, positions, cs["c_kv"], cs["k_rope"],
+                        offset, admit_mask, cfg)
+                    return a, {"c_kv": nck, "k_rope": nkr}
+                a, (nk, nv) = attn.gqa_prefill_chunk(
+                    pa, x, positions, cs["k"], cs["v"], offset,
+                    admit_mask, cfg)
+                return a, {"k": nk, "v": nv}
+
+            def ssm_fn(ps, x):
+                s, (ncv, nss) = ssm_mod.ssm_forward(
+                    ps, x, cfg, return_state=True,
+                    initial_state=(cs["conv"], cs["ssd"]),
+                    token_mask=tok_mask)
+                # only admitted rows may advance recurrent state
+                return s, {"conv": _merge_state(ncv, cs["conv"], admit_mask),
+                           "ssd": _merge_state(nss, cs["ssd"], admit_mask)}
+
+            return _cached_layer_step(cfg, _kind, h, lp, attn_fn, ssm_fn)
+
+        h, kvs = jax.lax.scan(scan_body, h, (gp, cache_slice),
+                              unroll=True if cfg.scan_unroll else 1)
+        for k in cache:
+            new_cache[k].append(kvs[k])
+        off_layers += count
+
+    return {k: jnp.concatenate(v, axis=0) for k, v in new_cache.items()}

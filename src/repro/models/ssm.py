@@ -47,9 +47,11 @@ def _segsum(x):
     return jnp.where(i >= j, out, -jnp.inf)
 
 
-def ssd_chunked(x, dt, A, B, C, chunk: int):
+def ssd_chunked(x, dt, A, B, C, chunk: int, initial_state=None):
     """Chunked SSD. x: (b,l,h,p); dt: (b,l,h); A: (h,) (negative);
-    B,C: (b,l,g,n). Returns y: (b,l,h,p) and final state (b,h,p,n)."""
+    B,C: (b,l,g,n). Returns y: (b,l,h,p) and final state (b,h,p,n).
+    `initial_state` (b,h,p,n) f32 seeds the inter-chunk recurrence —
+    the chunked-prefill path feeds the previous chunk's state here."""
     b, l, h, p = x.shape
     g, n = B.shape[2], B.shape[3]
     if l % chunk:
@@ -93,7 +95,10 @@ def ssd_chunked(x, dt, A, B, C, chunk: int):
         new = carry * dec[..., None, None] + st
         return new, carry                               # emit state *before* chunk
 
-    st0 = jnp.zeros((b, h, p, n), jnp.float32)
+    if initial_state is None:
+        st0 = jnp.zeros((b, h, p, n), jnp.float32)
+    else:
+        st0 = initial_state.astype(jnp.float32)
     final_state, prev_states = jax.lax.scan(
         step, st0,
         (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(2, 0, 1)))
@@ -106,23 +111,43 @@ def ssd_chunked(x, dt, A, B, C, chunk: int):
     return y.astype(x.dtype), final_state
 
 
-def _causal_conv(xBC, w, bias):
-    """Depthwise causal conv. xBC: (b,l,ch); w: (k,ch)."""
+def _causal_conv(xBC, w, bias, left=None):
+    """Depthwise causal conv. xBC: (b,l,ch); w: (k,ch). `left` (b,k-1,ch)
+    supplies the pre-conv inputs preceding this chunk (zero-padded when
+    absent — the start-of-sequence case)."""
     k = w.shape[0]
-    pad = jnp.pad(xBC, ((0, 0), (k - 1, 0), (0, 0)))
+    if left is None:
+        pad = jnp.pad(xBC, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        pad = jnp.concatenate([left.astype(xBC.dtype), xBC], axis=1)
     # sum_{i} x[t-k+1+i] * w[i]
     out = sum(pad[:, i:i + xBC.shape[1]] * w[i] for i in range(k))
     return out + bias
 
 
-def ssm_forward(p, x, cfg: ModelConfig, return_state: bool = False):
-    """Full-sequence Mamba2 block. x: (B,S,d) -> (B,S,d)."""
+def ssm_forward(p, x, cfg: ModelConfig, return_state: bool = False,
+                initial_state=None, token_mask=None):
+    """Full-sequence Mamba2 block. x: (B,S,d) -> (B,S,d).
+
+    initial_state=(conv_state (B,k-1,ch), ssd_state (B,H,P,N)) resumes the
+    recurrence mid-sequence — the chunked-prefill path processes a prompt
+    in fixed-size chunks by threading the state between calls.
+
+    token_mask (B,S) marks which chunk positions belong to the sequence
+    (must be a contiguous prefix per row). Masked-out tokens contribute
+    nothing to the SSD state (their dt is zeroed, so decay=1 and input=0)
+    and the returned conv state is gathered at each row's last valid
+    position — rows whose prompt ended in an earlier chunk pass through
+    with both states unchanged."""
     di, G, N, H = cfg.d_inner, cfg.ssm_n_groups, cfg.ssm_state, cfg.n_ssm_heads
     P = cfg.ssm_head_dim
+    conv_left = ssd_init = None
+    if initial_state is not None:
+        conv_left, ssd_init = initial_state
     zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"])
     z, xBC, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * G * N], axis=-1)
     xBC_pre = xBC
-    xBC = _causal_conv(xBC, p["conv_w"], p["conv_b"])
+    xBC = _causal_conv(xBC, p["conv_w"], p["conv_b"], left=conv_left)
     xBC = jax.nn.silu(xBC.astype(jnp.float32)).astype(x.dtype)
     xs, B, C = jnp.split(xBC, [di, di + G * N], axis=-1)
     xs = constrain(xs, ("batch", "seq", "mlp"))
@@ -131,23 +156,48 @@ def ssm_forward(p, x, cfg: ModelConfig, return_state: bool = False):
     B = B.reshape(b, S, G, N)
     C = C.reshape(b, S, G, N)
     dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    if token_mask is not None:
+        # masked tokens: dt=0 => decay exp(0)=1 and input dt*x=0, i.e. a
+        # structural no-op on the SSD recurrence
+        dt = dt * token_mask[..., None]
     A = -jnp.exp(p["A_log"])
-    if cfg.use_pallas and S % cfg.ssm_chunk == 0:
+    if (cfg.use_pallas and S % cfg.ssm_chunk == 0 and ssd_init is None
+            and token_mask is None):
         from repro.kernels import ops as kops
-        y, state = kops.ssd_scan(xs, dt, A, B, C, chunk=cfg.ssm_chunk)
+        y, state = kops.ssd_scan(xs, dt, A, B, C, chunk=cfg.ssm_chunk,
+                                 interpret=cfg.pallas_interpret)
         y = y.astype(jnp.float32)
         state = jnp.swapaxes(state, -1, -2)  # kernel emits (b,h,n,p)
     else:
-        y, state = ssd_chunked(xs, dt, A, B, C, cfg.ssm_chunk)
+        y, state = ssd_chunked(xs, dt, A, B, C, cfg.ssm_chunk,
+                               initial_state=ssd_init)
     y = y + xs.astype(jnp.float32) * p["D"][None, None, :, None]
     y = y.reshape(b, S, di).astype(x.dtype)
     y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
                  p["gate_norm"], cfg.norm_eps)
     out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
     if return_state:
-        # conv state = last (d_conv-1) pre-conv inputs (pad if S too short)
+        # conv state = last (d_conv-1) pre-conv inputs (prepend the carried
+        # left context, or zero-pad, so short chunks still have k-1 rows)
         k = cfg.d_conv
-        pre = jnp.pad(xBC_pre, ((0, 0), (max(0, k - 1 - S), 0), (0, 0)))
+        if conv_left is not None:
+            pre = jnp.concatenate(
+                [conv_left.astype(xBC_pre.dtype), xBC_pre], axis=1)
+        else:
+            pre = jnp.pad(xBC_pre, ((0, 0), (max(0, k - 1 - S), 0), (0, 0)))
+        if token_mask is not None:
+            # per-row: gather the k-1 inputs ending at the last valid
+            # position. rel = #valid tokens this chunk; indices rel+arange
+            # into [left ; chunk] land exactly on the old conv state when
+            # rel == 0, so finished rows pass through unchanged. The gather
+            # needs exactly k-1 left-context rows: zero-pad when no state
+            # was carried (start of sequence).
+            if conv_left is None:
+                pre = jnp.pad(xBC_pre, ((0, 0), (k - 1, 0), (0, 0)))
+            rel = token_mask.sum(axis=1).astype(jnp.int32)         # (B,)
+            idx = rel[:, None] + jnp.arange(k - 1, dtype=jnp.int32)[None]
+            conv_new = jnp.take_along_axis(pre, idx[:, :, None], axis=1)
+            return out, (conv_new, state)
         return out, (pre[:, -(k - 1):], state)
     return out
 

@@ -1,6 +1,7 @@
 """Online sequence packing: roundtrip, isolation and budget properties."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests need it; CPU image may lack it
 from hypothesis import given, settings, strategies as st
 
 from repro.data.packing import Rollout, pack

@@ -127,7 +127,10 @@ def test_ssm_state_reset_on_refill():
     big = smoke_config(get_config("mamba2-2.7b"))
     cfg = dataclasses.replace(big, vocab_size=task.tok.vocab_size)
     params = tree_values(M.init_params(cfg, jax.random.PRNGKey(0)))
-    ec = EngineConfig(n_slots=2, max_len=12)
+    # legacy admission path: state must be zero right after refill (the
+    # chunked path immediately prefills the new prompt into the state —
+    # covered by test_prefill.py)
+    ec = EngineConfig(n_slots=2, max_len=12, prefill_chunk=0)
     eng = GenerationEngine(cfg, params, ec, task.sample, seed=6)
     eng.refill()
     _drain(eng, task)

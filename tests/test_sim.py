@@ -1,5 +1,6 @@
 """Appendix-A analytical model: paper case-study numbers and invariants."""
 import pytest
+pytest.importorskip("hypothesis")  # property tests need it; CPU image may lack it
 from hypothesis import given, settings, strategies as st
 
 from repro.core.sim import (

@@ -5,6 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests need it; CPU image may lack it
 from hypothesis import given, settings, strategies as st
 
 from repro.checkpoint import checkpoint
