@@ -9,10 +9,15 @@ fewer model invocations per admitted prompt, transfers to TPU):
   - time-to-first-token for a freshly admitted batch (refill + steps)
   - end-to-end tokens/sec running a full admitted batch to completion
 
+plus a ring-buffer (sliding-window) variant: chunked admission over a
+CL=32 ring cache — the long-context serve path that used to fall back to
+the legacy loop.
+
     PYTHONPATH=src python -m benchmarks.run --only engine
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from typing import List, Tuple
 
@@ -28,6 +33,7 @@ PROMPT_LEN = 48
 N_SLOTS = 8
 MAX_LEN = 96
 CHUNK = 16
+RING_WINDOW = 32
 
 
 def _source(vocab: int, n: int):
@@ -38,9 +44,12 @@ def _source(vocab: int, n: int):
     return lambda: next(it, None)
 
 
-def _bench(chunk: int):
+def _bench(chunk: int, ring: bool = False):
     """Returns (ttft_s, invocations_to_first_sample, tokens_per_sec)."""
     task, cfg, params = tiny_setup(d_model=64, n_layers=2)
+    if ring:
+        cfg = dataclasses.replace(cfg, attention_variant="sliding_window",
+                                  sliding_window=RING_WINDOW)
     ec = EngineConfig(n_slots=N_SLOTS, max_len=MAX_LEN, prefill_chunk=chunk,
                       temperature=1.0, eos_id=-1)   # no early EOS: fixed work
     eng = GenerationEngine(cfg, params, ec,
@@ -86,6 +95,12 @@ def engine_benchmarks() -> List[Row]:
                  f"ttft_x={sp_ttft:.2f};tok_s_x={sp_tps:.2f};"
                  f"invocations {results['legacy'][1]}->"
                  f"{results['chunked'][1]}"))
+    # ring-buffer (sliding-window) cache: chunked admission over CL=32
+    ttft, inv, tps = _bench(CHUNK, ring=True)
+    rows.append(("engine/ttft_chunked_ring", ttft * 1e6,
+                 f"invocations_to_first_sample={inv};window={RING_WINDOW}"))
+    rows.append(("engine/tokens_per_sec_chunked_ring", 1e6 / max(tps, 1e-9),
+                 f"tok_s={tps:.1f}"))
     return rows
 
 

@@ -25,6 +25,7 @@ import numpy as np
 from repro.configs.base import ModelConfig, kv_cache_specs
 from repro.data.math_task import MathTask, Problem
 from repro.data.packing import Rollout
+from repro.models import attention as attn
 from repro.models import model as M
 
 
@@ -40,8 +41,10 @@ class EngineConfig:
     # SSM state) straight into the slot cache — ceil((P-1)/chunk) model
     # invocations per prompt instead of P-1 one-token decode steps. 0
     # falls back to the legacy token-at-a-time forcing loop. The effective
-    # chunk is reduced to the largest divisor of max_len if needed so
-    # chunk boundaries never cross the cache end.
+    # chunk is reduced to the largest common divisor of max_len and the
+    # attention cache length, so chunk windows never cross the cache end
+    # and ring-buffer (sliding-window) writes stay contiguous — ring
+    # caches take the chunked path like everything else.
     prefill_chunk: int = 16
     # Pallas interpret-mode override threaded into every kernel the engine
     # compiles (None = auto: interpret off-TPU, compiled on TPU)
@@ -89,15 +92,20 @@ def _prefill_impl(params, st: Dict[str, Any], offset, admit_mask,
 
 
 def _engine_step(params, st: Dict[str, Any], cfg: ModelConfig,
-                 ec: EngineConfig):
+                 ec: EngineConfig, kv_len_hint: Optional[int] = None):
     """One token for every active slot. st: tokens (H,T), n_cached (H,),
-    prompt_len (H,), active (H,) bool, cache, lp (H,T), key."""
+    prompt_len (H,), active (H,) bool, cache, lp (H,T), key.
+
+    kv_len_hint (static): host-mirrored bound on the valid cache length,
+    bucketed to the flash-decode block size so jit sees few values; shrinks
+    the decode kernel's KV grid (grid-level early exit)."""
     H, T = st["tokens"].shape
     idx = jnp.arange(H)
     cur_tok = st["tokens"][idx, st["n_cached"]][:, None]          # (H,1)
     positions = st["n_cached"][:, None]                           # (H,1)
     out = M.decode_step(params, cur_tok, positions, st["cache"],
-                        st["n_cached"], cfg, ring=False)
+                        st["n_cached"], cfg, ring=False,
+                        kv_len_hint=kv_len_hint)
     logits = out["logits"][:, 0] / jnp.maximum(ec.temperature, 1e-6)
     logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
 
@@ -159,24 +167,35 @@ class GenerationEngine:
         self._host_active = np.zeros(H, bool)
         self._host_ncached = np.zeros(H, np.int64)
         self._host_prompt_len = np.ones(H, np.int64)
-        # chunked prefill: effective chunk must divide T so chunk windows
-        # never cross the cache end, and the attention cache must be
-        # full-length (ring-buffer caches fall back to the legacy loop)
+        # attention cache length (None for attention-free archs); a ring
+        # buffer when < T (sliding-window long-context decode)
+        self._cache_len: Optional[int] = None
+        if cfg.has_attention:
+            self._cache_len = (
+                self.state["cache"]["k"].shape[2]
+                if "k" in self.state["cache"]
+                else self.state["cache"]["c_kv"].shape[2])
+        # the decode-length hint only matters when gqa_decode actually
+        # takes the flash-decode kernel path; computing it otherwise would
+        # re-trace the jitted step once per hint bucket for no benefit
+        self._use_decode_hint = (self._cache_len is not None
+                                 and attn.uses_flash_decode(
+                                     cfg, self._cache_len))
+        # chunked prefill: the effective chunk must divide T (chunk windows
+        # never cross the token buffer end) and the cache length (modular
+        # ring writes stay contiguous — DESIGN.md §2 chunk geometry)
         chunk = max(int(ec.prefill_chunk), 0)
         if chunk:
-            chunk = min(chunk, T)
-            while T % chunk:
+            cl = self._cache_len or T
+            chunk = min(chunk, T, cl)
+            while T % chunk or cl % chunk:
                 chunk -= 1
-        if chunk and cfg.has_attention:
-            cl = (self.state["cache"]["k"].shape[2] if "k" in self.state["cache"]
-                  else self.state["cache"]["c_kv"].shape[2])
-            if cl != T:
-                chunk = 0
         self.prefill_chunk_size = chunk
         self.prefill_invocations = 0       # chunked-prefill model calls
         self.prefill_tokens = 0            # prompt tokens admitted via prefill
         self.last_admit_prefill_tokens = 0
-        self._step = jax.jit(functools.partial(_engine_step, cfg=cfg, ec=ec))
+        self._step = jax.jit(functools.partial(_engine_step, cfg=cfg, ec=ec),
+                             static_argnames=("kv_len_hint",))
         self._recompute = jax.jit(functools.partial(self._recompute_impl, cfg=cfg))
         self._admit = jax.jit(functools.partial(_admit_impl, cfg=cfg),
                               donate_argnums=(0,))
@@ -207,6 +226,8 @@ class GenerationEngine:
             if k in out["cache"]:
                 if k in ("conv", "ssd"):
                     continue  # recurrent state recompute not supported here
+                if out["cache"][k].shape != new[k].shape:
+                    continue  # ring cache (CL < T): keep the stale window
                 new[k] = out["cache"][k].astype(new[k].dtype)
         return new
 
@@ -280,7 +301,21 @@ class GenerationEngine:
         finished this step."""
         prev_active = self._host_active.copy()
         prev_ncached = self._host_ncached.copy()
-        self.state, finished = self._step(self.params, self.state)
+        # grid-level early exit for flash-decode: bound the valid cache
+        # length from the host mirrors, rounded up to the kernel's block
+        # size so jit sees at most CL/block distinct static values. Only
+        # active slots count — an idle slot's stale high count would pin
+        # the hint at capacity; inactive rows' (possibly truncated)
+        # attention outputs are discarded by the `active` gating anyway.
+        hint = None
+        if self._use_decode_hint:
+            cl = self._cache_len
+            blk = attn.decode_block_k(cl)
+            cur = (int(self._host_ncached[self._host_active].max()) + 1
+                   if self._host_active.any() else 1)
+            hint = int(min(cl, -(-cur // blk) * blk))
+        self.state, finished = self._step(self.params, self.state,
+                                          kv_len_hint=hint)
         finished = np.asarray(finished)
         # record weight version for tokens written this step — only tokens
         # actually *sampled* under μ; prompt-forced tokens keep version 0

@@ -1,3 +1,11 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels for the generation hot paths (DESIGN.md §5):
+
+- `flash_attention`   — full-sequence causal GQA (train / whole-prompt)
+- `flash_decode`      — one-token decode vs the (ring) slot cache
+- `prefill_attention` — chunked-prefill: a prompt chunk vs cache + itself
+- `ssd_scan`          — Mamba2 SSD chunked scan
+
+Call through the jit'd wrappers in `kernels.ops`; pure-jnp oracles live in
+`kernels.ref`. Off-TPU the kernels run in interpret mode (see
+`kernels.common.default_interpret`).
+"""

@@ -8,11 +8,17 @@ along the sequential trailing grid axis with online-softmax accumulation in
 VMEM scratch. Invalid slots (>= cache length) are masked, so one kernel
 serves both the growing-cache and the full-ring cases.
 
-The kernel is *length-aware*: the per-slot valid length lives in SMEM and
-KV blocks entirely beyond it skip the QK^T / PV dots via `pl.when` — in a
-continuous-batching engine most slots are far from the cache capacity, so
-the common case touches only `ceil(len/block_k)` blocks' worth of MXU work
-instead of `CL/block_k`.
+The kernel is *length-aware* at two levels:
+
+- **grid-level** — a static `max_len_hint` (the host-mirrored
+  `max(lengths)` over the batch, rounded up to `block_k`) shrinks the
+  trailing grid axis itself, so blocks beyond the hint are never fetched
+  from HBM at all (the `pl.when` variant still paid the DMA);
+- **block-level** — the per-slot valid length lives in SMEM and KV blocks
+  entirely beyond it skip the QK^T / PV dots via `pl.when` — in a
+  continuous-batching engine most slots are far from the cache capacity,
+  so the common case touches only `ceil(len/block_k)` blocks' worth of
+  MXU work instead of `CL/block_k`.
 
 grid = (batch, kv_heads, n_kv_blocks); all `rep` q-heads of a kv head are
 processed together as a (rep, d) tile — MXU-friendly and it amortizes the
@@ -70,9 +76,17 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
 
 
 def flash_decode(q, k_cache, v_cache, lengths, *, scale: float,
-                 block_k: int = 256, interpret: bool | None = None):
+                 block_k: int = 256, max_len_hint: int | None = None,
+                 interpret: bool | None = None):
     """q: (B,H,Dk); caches: (B,CL,KV,D); lengths: (B,) valid cache length
     per slot (pass CL for a full ring buffer). Returns (B,H,Dv).
+
+    max_len_hint: optional *static* upper bound on max(lengths) — the grid's
+    trailing KV axis shrinks to ceil(hint/block_k) blocks, so cache blocks
+    beyond the hint are never even fetched. The caller must guarantee
+    hint >= max(lengths) (the generation engine derives it from its host
+    length mirrors, rounded up to block_k so jit sees few distinct values);
+    a violation silently truncates attention. None keeps the full grid.
 
     interpret=None resolves to interpret mode off-TPU and compiled mode on
     TPU (callers may force either; see kernels.ops for the jitted wrapper).
@@ -85,6 +99,8 @@ def flash_decode(q, k_cache, v_cache, lengths, *, scale: float,
     block_k = min(block_k, CL)
     assert CL % block_k == 0, (CL, block_k)
     nk = CL // block_k
+    if max_len_hint is not None:
+        nk = max(1, min(nk, -(-int(max_len_hint) // block_k)))
 
     qr = q.reshape(B, KV, rep, Dk)
     kr = jnp.swapaxes(k_cache, 1, 2)                    # (B,KV,CL,D)

@@ -1,7 +1,12 @@
-"""jit'd public wrappers for the Pallas kernels.
+"""jit'd public wrappers for the Pallas kernels — the only entry points the
+model layer calls (DESIGN.md §5 "Kernel catalog" documents each kernel's
+grid/block layout, masking rules, and early-exit behavior).
 
 `interpret` defaults to True off-TPU (kernel bodies execute in Python on
-CPU for correctness validation) and False on real TPU backends.
+CPU for correctness validation) and False on real TPU backends; the model
+threads `ModelConfig.pallas_interpret` (set from `EngineConfig.interpret`
+by the generation engine) into every call so TPU runs never hit an
+interpret-mode kernel by accident.
 """
 from __future__ import annotations
 
@@ -13,9 +18,10 @@ import jax.numpy as jnp
 from repro.kernels.common import default_interpret
 from repro.kernels.decode_attention import flash_decode as _flash_decode
 from repro.kernels.flash_attention import flash_attention as _flash_attention
+from repro.kernels.prefill_attention import (
+    prefill_attention as _prefill_attention,
+)
 from repro.kernels.ssd_scan import ssd_scan as _ssd_scan
-
-
 
 
 @functools.partial(jax.jit, static_argnames=("scale", "causal", "block_q",
@@ -23,22 +29,73 @@ from repro.kernels.ssd_scan import ssd_scan as _ssd_scan
 def flash_attention(q, k, v, *, scale: float, causal: bool = True,
                     block_q: int = 128, block_k: int = 128,
                     interpret: bool | None = None):
+    """Full-sequence (train / whole-prompt prefill) flash attention.
+
+    q: (B,H,S,Dk); k,v: (B,KV,S,Dk/Dv) with GQA folded via H = KV*rep.
+    Returns (B,H,S,Dv). Online-softmax over KV blocks; causal=True skips
+    fully-masked blocks above the diagonal. S must divide by both block
+    sizes (the model layer falls back to the jnp blocked path otherwise).
+    """
     interpret = default_interpret(interpret)
     return _flash_attention(q, k, v, scale=scale, causal=causal,
                             block_q=block_q, block_k=block_k,
                             interpret=interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("scale", "block_k", "interpret"))
+@functools.partial(jax.jit, static_argnames=("scale", "block_k",
+                                             "max_len_hint", "interpret"))
 def flash_decode(q, k_cache, v_cache, lengths, *, scale: float,
-                 block_k: int = 256, interpret: bool | None = None):
+                 block_k: int = 256, max_len_hint: int | None = None,
+                 interpret: bool | None = None):
+    """One-token decode attention against the (possibly ring-buffer) slot
+    cache — the generation engine's per-step hot loop.
+
+    q: (B,H,Dk); caches: (B,CL,KV,D); lengths: (B,) count of valid cache
+    slots per sequence (CL for a warm ring buffer). Slots >= lengths[b]
+    are masked, so the positional-validity invariant of DESIGN.md §1 holds
+    without ever zeroing retired slots. max_len_hint (static, must be
+    >= max(lengths)) shrinks the KV grid axis itself — blocks beyond the
+    hint are never fetched; per-slot `pl.when` skips handle the rest.
+    """
     interpret = default_interpret(interpret)
     return _flash_decode(q, k_cache, v_cache, lengths, scale=scale,
-                         block_k=block_k, interpret=interpret)
+                         block_k=block_k, max_len_hint=max_len_hint,
+                         interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "block_k", "interpret"))
+def prefill_attention(q, k_chunk, v_chunk, k_cache, v_cache, offset, *,
+                      scale: float, block_k: int = 128,
+                      interpret: bool | None = None):
+    """Chunked-prefill attention: a C-token prompt chunk (Q) against the
+    slot cache prefix plus the chunk's own K/V — the admission hot path.
+
+    q: (B,C,H,Dk); k_chunk/v_chunk: (B,C,KV,D); caches: (B,CL,KV,D) in
+    their PRE-chunk state (attend-then-write); offset: scalar absolute
+    position of the chunk's first token. Cache slots are masked by the
+    ring rule p_j = offset-1 - ((offset-1-j) mod CL), valid iff p_j >= 0
+    and qp - p_j < CL — which degenerates to j < offset on a full-length
+    cache; intra-chunk attention is causal. MLA absorbed prefill reuses
+    the kernel with KV=1 and latent+rope dims concatenated.
+
+    Part of the chunked-prefill equivalence law (DESIGN.md §2): admission
+    through this kernel must match the sequential decode loop bit-for-bit
+    in fp32 on the resulting cache, and within fp32 tolerance on logits.
+    """
+    interpret = default_interpret(interpret)
+    return _prefill_attention(q, k_chunk, v_chunk, k_cache, v_cache, offset,
+                              scale=scale, block_k=block_k,
+                              interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
 def ssd_scan(x, dt, A, B, C, *, chunk: int = 64,
              interpret: bool | None = None):
+    """Mamba2 SSD chunked scan: intra-chunk attention-form + inter-chunk
+    state recurrence. x: (b,l,h,p); dt: (b,l,h); A: (h,); B,C: (b,l,g,n).
+    Returns (y (b,l,h,p), final_state (b,h,p,n) fp32). The recurrence is
+    reassociated across chunks, so results match the sequential scan to
+    fp32 tolerance (not bitwise) — the equivalence tests account for this.
+    """
     interpret = default_interpret(interpret)
     return _ssd_scan(x, dt, A, B, C, chunk=chunk, interpret=interpret)

@@ -7,6 +7,7 @@ import jax.numpy as jnp
 
 from repro.models.attention import (
     _naive_causal_attention,
+    chunk_attention as _chunk_ref,
     decode_attention as _decode_ref,
 )
 from repro.models.ssm import ssd_chunked
@@ -27,6 +28,14 @@ def flash_decode_ref(q, k_cache, v_cache, lengths, *, scale: float):
     """Matches kernels.flash_decode (lengths == CL means full ring)."""
     return _decode_ref(q, k_cache, v_cache, jnp.asarray(lengths),
                        scale=scale, ring=False)
+
+
+def prefill_attention_ref(q, k_chunk, v_chunk, k_cache, v_cache, offset, *,
+                          scale: float):
+    """Matches kernels.prefill_attention (two-source chunk-vs-cache
+    attention with ring addressing; caches in their pre-chunk state)."""
+    return _chunk_ref(q, k_chunk, v_chunk, k_cache, v_cache,
+                      jnp.asarray(offset, jnp.int32), scale=scale)
 
 
 def ssd_scan_ref(x, dt, A, B, C, *, chunk: int = 64):

@@ -173,6 +173,18 @@ def write_cache(cache, new, index):
     return cache * (1 - onehot) + new.astype(cache.dtype) * onehot
 
 
+def decode_block_k(cache_len: int) -> int:
+    """flash_decode KV block size for a given cache length — shared with
+    the engine's kv_len_hint bucketing so the two layers cannot desync."""
+    return min(256, cache_len)
+
+
+def uses_flash_decode(cfg: ModelConfig, cache_len: int) -> bool:
+    """True when decode attention takes the Pallas flash-decode kernel
+    (GQA only; MLA decodes through the absorbed jnp path)."""
+    return cfg.use_pallas and not cfg.use_mla and cache_len % 64 == 0
+
+
 def decode_attention(q, k_cache, v_cache, cache_index, *, scale, ring: bool):
     """q: (B,H,Dk); caches: (B,CL,KV,D). One-token flash-decode reference.
 
@@ -243,8 +255,12 @@ def gqa_forward(p, x, positions, cfg: ModelConfig, segment_ids=None,
 
 
 def gqa_decode(p, x, positions, cache_k, cache_v, cache_index, cfg: ModelConfig,
-               ring: bool):
-    """One-token decode. x: (B,1,d); caches (B,CL,KV,Dk). Returns y, new caches."""
+               ring: bool, kv_len_hint=None):
+    """One-token decode. x: (B,1,d); caches (B,CL,KV,Dk). Returns y, new caches.
+
+    kv_len_hint: optional static upper bound on the valid cache length
+    across the batch (host-mirrored by the engine); shrinks the flash-decode
+    KV grid instead of relying on per-block `pl.when` skips alone."""
     B = x.shape[0]
     CL = cache_k.shape[1]
     q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
@@ -255,13 +271,17 @@ def gqa_decode(p, x, positions, cache_k, cache_v, cache_index, cfg: ModelConfig,
     k = apply_rope(k, positions, cfg.rope_theta)
     cache_k = write_cache(cache_k, k, cache_index)
     cache_v = write_cache(cache_v, v, cache_index)
-    if cfg.use_pallas and CL % 64 == 0:
+    if uses_flash_decode(cfg, CL):
         from repro.kernels import ops as kops
+        # clamp to CL: once a ring cache has wrapped (cache_index >= CL)
+        # every slot is valid, and the clamp keeps the early-exit tight
         lengths = jnp.full((B,), CL, jnp.int32) if ring else \
-            jnp.broadcast_to(jnp.asarray(cache_index + 1, jnp.int32), (B,))
+            jnp.broadcast_to(jnp.minimum(
+                jnp.asarray(cache_index + 1, jnp.int32), CL), (B,))
         y = kops.flash_decode(q[:, 0], cache_k, cache_v, lengths,
                               scale=1.0 / np.sqrt(cfg.d_head),
-                              block_k=min(256, CL),
+                              block_k=decode_block_k(CL),
+                              max_len_hint=kv_len_hint,
                               interpret=cfg.pallas_interpret)
     else:
         y = decode_attention(q[:, 0], cache_k, cache_v, cache_index + 1,
@@ -344,60 +364,102 @@ def mla_decode(p, x, positions, cache_ckv, cache_krope, cache_index,
 
 
 # ---------------------------------------------------------------------------
-# chunked prefill: a C-token query block against the slot cache
+# chunked prefill: a C-token query block against the slot cache + itself
 # ---------------------------------------------------------------------------
 
 def write_cache_chunk(cache, new, offset, write_mask=None):
     """Write `new` (B,C,...) into `cache` (B,CL,...) at [offset, offset+C).
 
-    Rows where write_mask is False keep their existing cache contents — the
-    engine prefills all H slots in lockstep, but only newly admitted slots
-    may be touched (the others hold live K/V of in-progress sequences).
-    The caller pre-clamps `offset` to CL-C so the slice never shifts.
+    write_mask may be (B,) — only admitted rows may be touched (the others
+    hold live K/V of in-progress sequences) — or (B,C) to additionally
+    restrict which chunk positions are written (ring-buffer caches must
+    not write garbage beyond a row's prompt: once the ring wraps, stale
+    high-position garbage would alias into low slots that count-based
+    decode masking treats as valid). The caller passes `offset` already
+    reduced mod CL; chunk size divides CL so the slice never shifts.
     """
     C = new.shape[1]
     merged = new.astype(cache.dtype)
     if write_mask is not None:
         old = jax.lax.dynamic_slice_in_dim(cache, offset, C, axis=1)
-        m = write_mask.reshape((-1,) + (1,) * (cache.ndim - 1))
-        merged = jnp.where(m, merged, old)
+        shape = write_mask.shape + (1,) * (cache.ndim - write_mask.ndim)
+        merged = jnp.where(write_mask.reshape(shape), merged, old)
     return jax.lax.dynamic_update_slice_in_dim(cache, merged, offset, axis=1)
 
 
-def chunk_attention(q, k_cache, v_cache, positions, *, scale):
-    """q: (B,C,H,Dk); caches: (B,CL,KV,D); positions: (B,C) absolute query
-    positions. Chunked-prefill attention: query i attends to cache slots
-    j <= positions[b,i] — the already-written prefix chunks plus causal
-    intra-chunk structure (this chunk's K/V sit at their absolute slots)."""
+def chunk_attention(q, k_chunk, v_chunk, k_cache, v_cache, offset, *, scale):
+    """Two-source chunked-prefill attention (jnp twin of the Pallas
+    `kernels.prefill_attention` kernel — see its docstring for the mask
+    derivation). q: (B,C,H,Dk); k_chunk/v_chunk: (B,C,KV,D); caches:
+    (B,CL,KV,D) in their PRE-chunk state; offset: scalar absolute position
+    of the chunk's first token.
+
+    Query i (absolute position qp = offset+i) attends to (1) cache slots j
+    holding absolute position p_j = offset-1 - ((offset-1-j) mod CL) with
+    p_j >= 0 and qp - p_j < CL (ring addressing; degenerates to j < offset
+    on a full-length cache), and (2) the chunk's own keys causally."""
     B, C, H, Dk = q.shape
     CL, KV = k_cache.shape[1], k_cache.shape[2]
+    Dv = v_cache.shape[-1]
     rep = H // KV
     qr = q.reshape(B, C, KV, rep, Dk)
-    s = jnp.einsum("bqgrd,bkgd->bgrqk", qr, k_cache,
-                   preferred_element_type=jnp.float32) * scale
-    valid = jnp.arange(CL)[None, None] <= positions[:, :, None]   # (B,C,CL)
-    s = jnp.where(valid[:, None, None], s, NEG_INF)
-    p = jax.nn.softmax(s, axis=-1)
-    out = jnp.einsum("bgrqk,bkgd->bqgrd", p.astype(v_cache.dtype), v_cache,
-                     preferred_element_type=jnp.float32)
-    return out.reshape(B, C, H, v_cache.shape[-1]).astype(q.dtype)
+    qp = offset + jnp.arange(C)                                   # (C,)
+    j = jnp.arange(CL)
+    p_j = (offset - 1) - jnp.mod(offset - 1 - j, CL)              # (CL,)
+    valid = (p_j[None] >= 0) & (qp[:, None] - p_j[None] < CL)     # (C,CL)
+    s_cache = jnp.einsum("bqgrd,bkgd->bgrqk", qr, k_cache,
+                         preferred_element_type=jnp.float32) * scale
+    s_cache = jnp.where(valid[None, None, None], s_cache, NEG_INF)
+    s_chunk = jnp.einsum("bqgrd,bkgd->bgrqk", qr, k_chunk,
+                         preferred_element_type=jnp.float32) * scale
+    causal = jnp.arange(C)[:, None] >= jnp.arange(C)[None, :]     # (C,C)
+    s_chunk = jnp.where(causal[None, None, None], s_chunk, NEG_INF)
+    p = jax.nn.softmax(jnp.concatenate([s_cache, s_chunk], axis=-1), axis=-1)
+    out = jnp.einsum("bgrqk,bkgd->bqgrd", p[..., :CL].astype(v_cache.dtype),
+                     v_cache, preferred_element_type=jnp.float32)
+    out += jnp.einsum("bgrqk,bkgd->bqgrd", p[..., CL:].astype(v_chunk.dtype),
+                      v_chunk, preferred_element_type=jnp.float32)
+    return out.reshape(B, C, H, Dv).astype(q.dtype)
+
+
+def _use_prefill_kernel(cfg: ModelConfig, C: int, CL: int) -> bool:
+    return cfg.use_pallas and C <= CL and CL % min(128, CL) == 0
+
+
+def _chunk_attention_any(q, k_chunk, v_chunk, k_cache, v_cache, offset,
+                         cfg: ModelConfig, scale: float):
+    """Route chunk-vs-cache attention through the Pallas prefill kernel
+    when shapes fit, else the jnp twin."""
+    C, CL = q.shape[1], k_cache.shape[1]
+    if _use_prefill_kernel(cfg, C, CL):
+        from repro.kernels import ops as kops
+        return kops.prefill_attention(q, k_chunk, v_chunk, k_cache, v_cache,
+                                      offset, scale=scale,
+                                      block_k=min(128, CL),
+                                      interpret=cfg.pallas_interpret)
+    return chunk_attention(q, k_chunk, v_chunk, k_cache, v_cache, offset,
+                           scale=scale)
 
 
 def gqa_prefill_chunk(p, x, positions, cache_k, cache_v, offset, write_mask,
                       cfg: ModelConfig):
-    """One GQA layer over a C-token prompt chunk. x: (B,C,d). Writes the
-    chunk's K/V into the slot cache (masked to admitted rows) and attends
-    against the cache prefix. Returns y (B,C,d), (cache_k, cache_v)."""
+    """One GQA layer over a C-token prompt chunk. x: (B,C,d). Attends the
+    chunk against the cache prefix plus itself (attend-then-write: on a
+    ring cache the chunk's writes evict exactly the slots leaving the
+    window), then writes the chunk's K/V at [offset mod CL, ...) masked by
+    write_mask (B,) or (B,C). Returns y (B,C,d), (cache_k, cache_v)."""
     q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
     k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
     v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
     q, k = _maybe_qk_norm(cfg, p, q, k)
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
-    cache_k = write_cache_chunk(cache_k, k, offset, write_mask)
-    cache_v = write_cache_chunk(cache_v, v, offset, write_mask)
-    y = chunk_attention(q, cache_k, cache_v, positions,
-                        scale=1.0 / np.sqrt(cfg.d_head))
+    y = _chunk_attention_any(q, k, v, cache_k, cache_v, offset, cfg,
+                             1.0 / np.sqrt(cfg.d_head))
+    CL = cache_k.shape[1]
+    off_w = jnp.mod(offset, CL)
+    cache_k = write_cache_chunk(cache_k, k, off_w, write_mask)
+    cache_v = write_cache_chunk(cache_v, v, off_w, write_mask)
     y = jnp.einsum("bshk,hkd->bsd", y, p["wo"])
     return y, (cache_k, cache_v)
 
@@ -406,7 +468,10 @@ def mla_prefill_chunk(p, x, positions, cache_ckv, cache_krope, offset,
                       write_mask, cfg: ModelConfig):
     """One absorbed-MLA layer over a C-token prompt chunk: scores in latent
     space against the compressed cache (same math as mla_decode, C queries).
-    Returns y (B,C,d), (cache_ckv, cache_krope)."""
+    Routed through the shared prefill-attention primitive by treating the
+    latent as a single KV head with the rope part concatenated onto the key
+    dim (score = q_latent·c_kv + q_rope·k_rope) and the latent itself as
+    the value. Returns y (B,C,d), (cache_ckv, cache_krope)."""
     B, C, _ = x.shape
     CL = cache_ckv.shape[1]
     nope, rope = cfg.qk_nope_dim, cfg.qk_rope_dim
@@ -419,22 +484,19 @@ def mla_prefill_chunk(p, x, positions, cache_ckv, cache_krope, offset,
     kv = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"])
     c_kv = rms_norm(kv[..., :cfg.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
     k_rope = apply_rope(kv[..., cfg.kv_lora_rank:], positions, cfg.rope_theta)
-    cache_ckv = write_cache_chunk(cache_ckv, c_kv, offset, write_mask)
-    cache_krope = write_cache_chunk(cache_krope, k_rope, offset, write_mask)
 
     # absorb W_uk into q: (B,C,H,nope) x (r,H,nope) -> (B,C,H,r)
     q_latent = jnp.einsum("bqhk,rhk->bqhr", q_nope, p["wk_b"])
-    s = jnp.einsum("bqhr,bkr->bhqk", q_latent, cache_ckv,
-                   preferred_element_type=jnp.float32)
-    s += jnp.einsum("bqhp,bkp->bhqk", q_rope, cache_krope,
-                    preferred_element_type=jnp.float32)
-    s *= 1.0 / np.sqrt(nope + rope)
-    valid = jnp.arange(CL)[None, None] <= positions[:, :, None]   # (B,C,CL)
-    s = jnp.where(valid[:, None], s, NEG_INF)
-    pw = jax.nn.softmax(s, axis=-1)
-    o_latent = jnp.einsum("bhqk,bkr->bqhr", pw.astype(cache_ckv.dtype),
-                          cache_ckv,
-                          preferred_element_type=jnp.float32).astype(x.dtype)
-    o = jnp.einsum("bqhr,rhk->bqhk", o_latent, p["wv_b"])
+    q_cat = jnp.concatenate([q_latent, q_rope], axis=-1)     # (B,C,H,r+rope)
+    kh_cat = jnp.concatenate([c_kv, k_rope], axis=-1)[:, :, None]
+    kc_cat = jnp.concatenate([cache_ckv, cache_krope], axis=-1)[:, :, None]
+    o_latent = _chunk_attention_any(
+        q_cat, kh_cat, c_kv[:, :, None], kc_cat, cache_ckv[:, :, None],
+        offset, cfg, 1.0 / np.sqrt(nope + rope))             # (B,C,H,r)
+
+    off_w = jnp.mod(offset, CL)
+    cache_ckv = write_cache_chunk(cache_ckv, c_kv, off_w, write_mask)
+    cache_krope = write_cache_chunk(cache_krope, k_rope, off_w, write_mask)
+    o = jnp.einsum("bqhr,rhk->bqhk", o_latent.astype(x.dtype), p["wv_b"])
     y = jnp.einsum("bqhk,hkd->bqd", o, p["wo"])
     return y, (cache_ckv, cache_krope)

@@ -274,9 +274,16 @@ def _cached_layer_step(cfg: ModelConfig, kind: str, h, lp, attn_fn, ssm_fn):
 
 
 def decode_step(params, tokens, positions, cache, cache_index,
-                cfg: ModelConfig, *, ring: Optional[bool] = None):
+                cfg: ModelConfig, *, ring: Optional[bool] = None,
+                kv_len_hint: Optional[int] = None):
     """tokens: (B,1); cache: stacked (L,...) tree; cache_index: scalar or (B,).
-    Returns (logits (B,1,V), values (B,1)?, new_cache)."""
+    Returns (logits (B,1,V), values (B,1)?, new_cache).
+
+    kv_len_hint: optional static upper bound on the valid cache length
+    across the batch; forwarded to the flash-decode kernel to shrink its
+    KV grid (the generation engine derives it from its host-side length
+    mirrors). Must satisfy kv_len_hint >= max over the batch of
+    min(cache_index+1, CL); None disables the grid-level early exit."""
     B = tokens.shape[0]
     if ring is None:
         # ring addressing applies only to attention caches, and is on
@@ -305,7 +312,7 @@ def decode_step(params, tokens, positions, cache, cache_index,
                     return a, {"c_kv": nck, "k_rope": nkr}
                 a, (nk, nv) = attn.gqa_decode(
                     pa, x, positions, cs["k"], cs["v"], cache_index,
-                    cfg, ring)
+                    cfg, ring, kv_len_hint=kv_len_hint)
                 return a, {"k": nk, "v": nv}
 
             def ssm_fn(ps, x):
@@ -350,17 +357,33 @@ def prefill_chunk(params, tokens, prompt_len, offset, admit_mask, cache,
     slot through the full layer stack and writes their K/V (MLA latent /
     SSM state) straight into the slot cache via dynamic_update_slice, so
     admitting a prompt of length P costs ceil((P-1)/chunk) batched forwards
-    instead of P-1 one-token decode steps.
+    instead of P-1 one-token decode steps. Chunk attention runs through the
+    Pallas prefill kernel (`kernels.prefill_attention`) when shapes fit,
+    and supports ring-buffer (sliding-window) caches: writes land at
+    `position mod CL` and masking follows the ring rule (see
+    `attention.chunk_attention`).
+
+    **Equivalence law** (enforced by `tests/test_prefill.py`): chunked
+    admission must match the sequential decode loop *bit-for-bit in fp32*
+    on the attention caches and `n_cached` — every K/V value written here
+    is the same projection of the same token at the same position the
+    legacy token-at-a-time loop would have written — and within fp32
+    tolerance on SSD state and logits (the chunked scan and the online
+    softmax reassociate their reductions). At ~greedy temperature the two
+    admission paths must produce identical completions.
 
     tokens: (B,T) slot token buffer; prompt_len: (B,); offset: scalar chunk
-    start — the host guarantees offset + chunk <= T and offset % chunk == 0;
-    admit_mask: (B,) bool, True for slots admitted this refill (other rows
-    participate in compute for static shapes but their cache/state is
-    untouched). Per row, only tokens at positions < prompt_len-1 enter the
-    recurrent state; attention cache entries beyond that are dead (masked
-    by n_cached and overwritten in place by later decode steps). No logits
-    are computed: the first completion token is sampled by the normal
-    decode step at n_cached = prompt_len-1.
+    start — the host guarantees offset + chunk <= T, offset % chunk == 0
+    and chunk | CL (ring writes stay contiguous); admit_mask: (B,) bool,
+    True for slots admitted this refill (other rows participate in compute
+    for static shapes but their cache/state is untouched). Attention-cache
+    writes are additionally masked to positions < prompt_len-1 per row: a
+    full-length cache would merely hold dead garbage beyond that (masked
+    by n_cached), but once a ring wraps, garbage at high positions would
+    alias into low slots that count-based decode masking treats as valid.
+    The SSD recurrence gets the same mask via dt=0 no-ops. No logits are
+    computed: the first completion token is sampled by the normal decode
+    step at n_cached = prompt_len-1.
 
     Returns the updated cache tree.
     """
@@ -370,7 +393,10 @@ def prefill_chunk(params, tokens, prompt_len, offset, admit_mask, cache,
     positions = jnp.broadcast_to(
         (offset + jnp.arange(chunk, dtype=jnp.int32))[None], (B, chunk))
     # tokens folded into recurrent state: absolute position < prompt_len-1
-    tok_mask = (positions < (prompt_len[:, None] - 1)).astype(jnp.float32)
+    pos_valid = positions < (prompt_len[:, None] - 1)             # (B,C)
+    tok_mask = pos_valid.astype(jnp.float32)
+    # attention-cache writes: admitted rows, valid prompt positions only
+    kv_write_mask = admit_mask[:, None] & pos_valid               # (B,C)
 
     h = jnp.take(params["embed"], toks, axis=0)
     h = constrain(h, ("batch", "seq", "embed"))
@@ -391,11 +417,11 @@ def prefill_chunk(params, tokens, prompt_len, offset, admit_mask, cache,
                 if cfg.use_mla:
                     a, (nck, nkr) = attn.mla_prefill_chunk(
                         pa, x, positions, cs["c_kv"], cs["k_rope"],
-                        offset, admit_mask, cfg)
+                        offset, kv_write_mask, cfg)
                     return a, {"c_kv": nck, "k_rope": nkr}
                 a, (nk, nv) = attn.gqa_prefill_chunk(
                     pa, x, positions, cs["k"], cs["v"], offset,
-                    admit_mask, cfg)
+                    kv_write_mask, cfg)
                 return a, {"k": nk, "v": nv}
 
             def ssm_fn(ps, x):

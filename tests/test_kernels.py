@@ -66,6 +66,82 @@ def test_flash_decode_full_ring():
                                atol=2e-5, rtol=2e-5)
 
 
+def test_flash_decode_max_len_hint():
+    """A static hint >= max(lengths) shrinks the KV grid without changing
+    the result (grid-level early exit)."""
+    B, H, KV, CL, D, block = 2, 4, 2, 256, 32, 32
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, H, D))
+    kc = jax.random.normal(ks[1], (B, CL, KV, D))
+    vc = jax.random.normal(ks[2], (B, CL, KV, D))
+    lengths = jnp.asarray([37, 70])
+    full = ops.flash_decode(q, kc, vc, lengths, scale=D ** -0.5, block_k=block)
+    for hint in (70, 96, 255):   # any hint >= max(lengths) is exact
+        out = ops.flash_decode(q, kc, vc, lengths, scale=D ** -0.5,
+                               block_k=block, max_len_hint=hint)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(full),
+                                   atol=2e-5, rtol=2e-5, err_msg=str(hint))
+
+
+@pytest.mark.parametrize("B,H,KV,C,CL,D,off,block", [
+    (2, 4, 2, 16, 128, 32, 0, 64),     # first chunk: empty cache
+    (2, 4, 2, 16, 128, 32, 48, 64),    # mid-prompt, full-length cache
+    (1, 8, 1, 8, 64, 64, 64, 32),      # MQA, ring exactly full
+    (1, 4, 4, 8, 32, 16, 72, 16),      # MHA, ring wrapped twice
+    (2, 8, 2, 4, 32, 64, 36, 32),      # chunk straddling the ring window
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_prefill_attention_sweep(B, H, KV, C, CL, D, off, block, dtype):
+    ks = jax.random.split(KEY, 5)
+    q = jax.random.normal(ks[0], (B, C, H, D), dtype)
+    kh = jax.random.normal(ks[1], (B, C, KV, D), dtype)
+    vh = jax.random.normal(ks[2], (B, C, KV, D), dtype)
+    kc = jax.random.normal(ks[3], (B, CL, KV, D), dtype)
+    vc = jax.random.normal(ks[4], (B, CL, KV, D), dtype)
+    out = ops.prefill_attention(q, kh, vh, kc, vc, jnp.int32(off),
+                                scale=D ** -0.5, block_k=block)
+    expected = ref.prefill_attention_ref(q, kh, vh, kc, vc, off,
+                                         scale=D ** -0.5)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expected, np.float32), **_tol(dtype))
+
+
+def test_prefill_attention_matches_sequential_window():
+    """Independent oracle: build the ring cache by sequential writes of an
+    absolute K/V history, then check every chunk query attends exactly the
+    sliding window [qp-CL+1, qp] of that history — the invariant that makes
+    chunked admission equal the per-token decode loop on ring caches."""
+    B, H, KV, D, CL, C = 1, 4, 2, 16, 8, 4
+    rep = H // KV
+    for off in (0, 4, 8, 12, 20):
+        S = off + C
+        ks = jax.random.split(jax.random.fold_in(KEY, off), 3)
+        kfull = jax.random.normal(ks[0], (B, S, KV, D))
+        vfull = jax.random.normal(ks[1], (B, S, KV, D))
+        q = jax.random.normal(ks[2], (B, C, H, D))
+        kc = jnp.zeros((B, CL, KV, D))
+        vc = jnp.zeros((B, CL, KV, D))
+        for p in range(off):            # the sequential decode loop's writes
+            kc = kc.at[:, p % CL].set(kfull[:, p])
+            vc = vc.at[:, p % CL].set(vfull[:, p])
+        out = ops.prefill_attention(q, kfull[:, off:], vfull[:, off:],
+                                    kc, vc, jnp.int32(off), scale=D ** -0.5,
+                                    block_k=CL)
+        exp = np.zeros((B, C, H, D), np.float32)
+        for i in range(C):
+            qp = off + i
+            lo = max(0, qp - CL + 1)
+            keys = np.asarray(kfull[:, lo:qp + 1])
+            vals = np.asarray(vfull[:, lo:qp + 1])
+            qr = np.asarray(q[:, i]).reshape(B, KV, rep, D)
+            s = np.einsum("bgrd,bkgd->bgrk", qr, keys) * D ** -0.5
+            pw = np.exp(s - s.max(-1, keepdims=True))
+            pw /= pw.sum(-1, keepdims=True)
+            exp[:, i] = np.einsum("bgrk,bkgd->bgrd", pw, vals).reshape(B, H, D)
+        np.testing.assert_allclose(np.asarray(out, np.float32), exp,
+                                   atol=2e-5, rtol=2e-5, err_msg=f"off={off}")
+
+
 @pytest.mark.parametrize("b,l,h,p,g,n,chunk", [
     (1, 64, 2, 16, 1, 8, 16),
     (2, 128, 4, 32, 2, 16, 32),

@@ -190,6 +190,172 @@ def test_prefill_does_not_disturb_inflight_slots():
     np.testing.assert_array_equal(k_before[:, :n0], k_after[:, :n0])
 
 
+def _ring_cfg(arch, window=8):
+    """Sliding-window variant: the engine allocates a CL=window ring cache
+    for attention archs (MLA keeps its cheap full-length latent cache)."""
+    cfg, params = _arch_setup(arch)
+    cfg = dataclasses.replace(cfg, attention_variant="sliding_window",
+                              sliding_window=window)
+    return cfg, params
+
+
+def _synthetic_probs(lens):
+    return [Problem([3 + (i + j) % 16 for j in range(n)], 0)
+            for i, n in enumerate(lens)]
+
+
+@pytest.mark.parametrize("arch", ["gqa", "mla", "ssm", "hybrid"])
+def test_ring_prefill_matches_sequential(arch):
+    """Chunked admission over ring-buffer (sliding-window) caches must
+    match the legacy per-token loop — prompts longer than the window wrap
+    the ring during prefill. MLA keeps a full-length cache and SSM has
+    none; both must still admit chunked under the sliding-window variant."""
+    cfg, params = _ring_cfg(arch, window=8)
+    # equal lengths so the legacy twin reaches the same point after P-1
+    # forcing steps (ragged ring lengths: see the test below); P=22 wraps
+    # the CL=8 ring almost three times during prefill
+    probs = _synthetic_probs((22, 22, 22, 22))
+    ecA = EngineConfig(n_slots=4, max_len=24, prefill_chunk=4,
+                       temperature=1e-4)
+    ecB = dataclasses.replace(ecA, prefill_chunk=0)
+    eA = GenerationEngine(cfg, params, ecA, _list_source(probs), seed=11)
+    eB = GenerationEngine(cfg, params, ecB, _list_source(probs), seed=11)
+    if arch in ("gqa", "hybrid"):
+        key = "k"
+        assert eA.state["cache"][key].shape[2] == 8   # a real ring
+    elif arch == "mla":
+        key = "c_kv"
+        assert eA.state["cache"][key].shape[2] == 24  # MLA stays full-length
+    # ring caches no longer force the legacy loop
+    assert eA.prefill_chunk_size == 4
+    assert eA.refill() == 4 and eB.refill() == 4
+    for _ in range(int(eA._host_prompt_len.max()) - 1):
+        eB.step(TASK)
+    np.testing.assert_array_equal(eA._host_ncached, eB._host_ncached)
+    for k in eA.state["cache"]:
+        a = np.asarray(eA.state["cache"][k], np.float32)
+        b = np.asarray(eB.state["cache"][k], np.float32)
+        if k in ("conv", "ssd"):
+            np.testing.assert_allclose(a, b, atol=1e-5, err_msg=k)
+        else:
+            CL = a.shape[2]
+            for s in range(4):
+                m = min(int(eA._host_ncached[s]), CL)  # wrapped => all slots
+                np.testing.assert_allclose(a[:, s, :m], b[:, s, :m],
+                                           atol=1e-5, err_msg=f"{k}[{s}]")
+    outA = sorted(_drain(eA), key=lambda r: r.slot)
+    outB = sorted(_drain(eB), key=lambda r: r.slot)
+    assert len(outA) == len(outB) == 4
+    for rA, rB in zip(outA, outB):
+        np.testing.assert_array_equal(rA.tokens, rB.tokens)
+        np.testing.assert_allclose(rA.behavior_logprobs, rB.behavior_logprobs,
+                                   atol=1e-5)
+
+
+@pytest.mark.parametrize("arch", ["gqa", "hybrid"])
+def test_ring_prefill_ragged_lengths(arch):
+    """Ragged prompt lengths over a ring cache: each slot must produce the
+    same ~greedy rollout as the legacy loop (some slots wrap, some don't)."""
+    cfg, params = _ring_cfg(arch, window=8)
+    probs = _synthetic_probs((4, 9, 14, 21))
+    ec = EngineConfig(n_slots=4, max_len=24, prefill_chunk=4,
+                      temperature=1e-4)
+    eng = GenerationEngine(cfg, params, ec, _list_source(probs), seed=13)
+    eng.refill()
+    np.testing.assert_array_equal(eng._host_ncached, [3, 8, 13, 20])
+    ecB = dataclasses.replace(ec, prefill_chunk=0)
+    engB = GenerationEngine(cfg, params, ecB, _list_source(probs), seed=13)
+    engB.refill()
+    outB = []
+    for _ in range(20):       # short rows may finish while long rows force
+        outB.extend(engB.step(TASK))
+    outB.extend(_drain(engB))
+    outA = sorted(_drain(eng), key=lambda r: r.slot)
+    outB = sorted(outB, key=lambda r: r.slot)
+    assert len(outA) == len(outB) == 4
+    for rA, rB in zip(outA, outB):
+        np.testing.assert_array_equal(rA.tokens, rB.tokens)
+
+
+def test_ring_prefill_wraparound_chunk():
+    """A prompt long enough that prefill chunks straddle the ring boundary:
+    chunks at offset >= CL write low slots while their queries' window
+    still spans the high slots written by earlier chunks."""
+    cfg, params = _ring_cfg("gqa", window=8)
+    pl_ = 19
+    probs = _synthetic_probs((pl_,))
+    ec = EngineConfig(n_slots=1, max_len=32, prefill_chunk=4,
+                      temperature=1e-4)
+    eng = GenerationEngine(cfg, params, ec, _list_source(probs), seed=2)
+    eng.refill()
+    assert eng.prefill_chunk_size == 4
+    assert eng.prefill_invocations == -(-(pl_ - 1) // 4)  # ceil(18/4) = 5
+    assert int(eng._host_ncached[0]) == pl_ - 1
+    ecB = dataclasses.replace(ec, prefill_chunk=0)
+    engB = GenerationEngine(cfg, params, ecB, _list_source(probs), seed=2)
+    engB.refill()
+    for _ in range(pl_ - 1):
+        engB.step(TASK)
+    # the wrapped ring is fully valid: every slot must agree bitwise-ish
+    np.testing.assert_allclose(
+        np.asarray(eng.state["cache"]["k"], np.float32)[:, 0],
+        np.asarray(engB.state["cache"]["k"], np.float32)[:, 0], atol=1e-5)
+    outA, outB = _drain(eng), _drain(engB)
+    np.testing.assert_array_equal(outA[0].tokens, outB[0].tokens)
+
+
+@pytest.mark.parametrize("arch", ["gqa", "mla"])
+@pytest.mark.parametrize("ring", [False, True])
+def test_prefill_kernel_in_engine_matches_jnp(arch, ring):
+    """use_pallas=True must route chunk attention through the Pallas
+    prefill kernel inside a real engine and reproduce the jnp engine's
+    completions (MLA has no ring variant: its cache stays full-length)."""
+    if arch == "mla" and ring:
+        pytest.skip("MLA keeps a full-length latent cache")
+    cfg, params = _ring_cfg(arch, window=8) if ring else _arch_setup(arch)
+    probs = _synthetic_probs((5, 13))
+    ec = EngineConfig(n_slots=2, max_len=16, prefill_chunk=8,
+                      temperature=1e-4)
+    eng = GenerationEngine(cfg, params, ec, _list_source(probs), seed=4)
+    kcfg = dataclasses.replace(cfg, use_pallas=True)
+    engK = GenerationEngine(kcfg, params, ec, _list_source(probs), seed=4)
+    from repro.models.attention import _use_prefill_kernel
+    CL = eng.state["cache"]["k" if arch == "gqa" else "c_kv"].shape[2]
+    assert _use_prefill_kernel(kcfg, engK.prefill_chunk_size, CL)
+    eng.refill(), engK.refill()
+    for k in eng.state["cache"]:
+        np.testing.assert_allclose(
+            np.asarray(eng.state["cache"][k], np.float32),
+            np.asarray(engK.state["cache"][k], np.float32),
+            atol=1e-5, err_msg=k)
+    outA = sorted(_drain(eng), key=lambda r: r.slot)
+    outB = sorted(_drain(engK), key=lambda r: r.slot)
+    assert len(outA) == len(outB) == 2
+    for rA, rB in zip(outA, outB):
+        np.testing.assert_array_equal(rA.tokens, rB.tokens)
+
+
+def test_decode_hint_engine_parity():
+    """With use_pallas and a 64-multiple cache, the engine threads the
+    host-derived kv_len_hint into flash_decode; completions must match the
+    jnp engine exactly."""
+    cfg, params = _arch_setup("gqa")
+    probs = _synthetic_probs((5, 9))
+    ec = EngineConfig(n_slots=2, max_len=64, prefill_chunk=16,
+                      temperature=1e-4)
+    kcfg = dataclasses.replace(cfg, use_pallas=True)
+    engK = GenerationEngine(kcfg, params, ec, _list_source(probs), seed=8)
+    assert engK._use_decode_hint
+    eng = GenerationEngine(cfg, params, ec, _list_source(probs), seed=8)
+    assert not eng._use_decode_hint
+    eng.refill(), engK.refill()
+    outA = sorted(_drain(eng), key=lambda r: r.slot)
+    outB = sorted(_drain(engK), key=lambda r: r.slot)
+    assert len(outA) == len(outB) == 2
+    for rA, rB in zip(outA, outB):
+        np.testing.assert_array_equal(rA.tokens, rB.tokens)
+
+
 def test_ssm_state_after_chunked_refill_matches_fresh_prefill():
     """Chunked admission must leave the SSM state exactly as a from-scratch
     prefill of the new prompt (no leakage from the retired sequence)."""
