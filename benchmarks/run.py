@@ -30,6 +30,7 @@ def main() -> None:
     from benchmarks.engine_bench import engine_benchmarks
     from benchmarks.kernels_bench import kernel_benchmarks
     from benchmarks.roofline_bench import roofline_rows
+    from benchmarks.trainer_bench import trainer_benchmarks
 
     groups = {
         "fig2": figures.fig2_generation,
@@ -43,11 +44,13 @@ def main() -> None:
         "kernels": kernel_benchmarks,
         "roofline": roofline_rows,
         "engine": engine_benchmarks,
+        "trainer": trainer_benchmarks,
     }
     if args.smoke:
         # fast, deterministic-cost groups so per-PR CI can catch tokens/sec
-        # regressions in the generation hot path
-        groups = {k: groups[k] for k in ("engine", "fig8", "fig9")}
+        # regressions in the generation hot path and activation-memory /
+        # step-time regressions in the trainer hot path
+        groups = {k: groups[k] for k in ("engine", "trainer", "fig8", "fig9")}
 
     print("name,us_per_call,derived")
     failed = []

@@ -75,6 +75,12 @@ class ModelConfig:
     # route attention/SSD through the Pallas TPU kernels (interpret mode on
     # CPU); falls back to the jnp path when a shape doesn't fit the kernel
     use_pallas: bool = False
+    # fused linear-cross-entropy trainer loss (DESIGN.md §6): when the
+    # trainer passes loss targets, `forward` skips the (B,S,V) logits
+    # materialization and returns per-token logprob/lse/entropy from the
+    # blockwise Pallas kernel (jnp twin when use_pallas is off). Inference
+    # paths (decode/prefill) are unaffected.
+    fused_loss: bool = False
     # Pallas interpret mode: None = auto (interpret off-TPU, compiled on
     # TPU); True/False forces it. Plumbed into every kernel call so TPU
     # runs never hit an interpret-mode kernel by accident.

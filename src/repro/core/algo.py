@@ -28,6 +28,26 @@ def token_logprobs(logits, tokens):
     return jnp.pad(lp_next, ((0, 0), (1, 0)))
 
 
+def token_stats_from_logits(logits, tokens):
+    """Per-token loss statistics from raw logits — the unfused twin of the
+    `kernels.fused_logprob` model output. Returns a dict with
+    `token_logprobs`, `lse` and `entropy`, each (B,S) f32 aligned with
+    `tokens` like `token_logprobs` (entry t describes the distribution
+    that scored token t; entry 0 is a zero pad)."""
+    l32 = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(l32, axis=-1)              # (B,S)
+    tgt_l = jnp.take_along_axis(l32[:, :-1], tokens[:, 1:, None],
+                                axis=-1)[..., 0]
+    p = jnp.exp(l32 - lse[..., None])   # softmax from the lse already paid
+    ent = lse - jnp.sum(p * l32, axis=-1)
+
+    def shift(x):
+        return jnp.pad(x[:, :-1], ((0, 0), (1, 0)))
+
+    return {"token_logprobs": jnp.pad(tgt_l - lse[:, :-1], ((0, 0), (1, 0))),
+            "lse": shift(lse), "entropy": shift(ent)}
+
+
 def ess(weights, mask) -> jax.Array:
     """Normalized effective sample size (Eq. 6) over masked tokens."""
     w = weights * mask
@@ -38,15 +58,25 @@ def ess(weights, mask) -> jax.Array:
 
 
 def reinforce_loss(
-    logits, values, batch: Dict[str, jax.Array], cfg: RLConfig,
+    outputs, values, batch: Dict[str, jax.Array], cfg: RLConfig,
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """Truncated-IS REINFORCE (Eq. 5) + value MSE.
 
+    outputs: either raw (B,S,V) logits, or a per-token stats dict with
+    `token_logprobs` and `entropy` as produced by the fused-loss model
+    path (`M.forward(..., loss_targets=...)` under `cfg.fused_loss`) or by
+    `token_stats_from_logits` — the loss never needs the full logits, only
+    the sampled token's logprob and (for the metric/bonus) the
+    distribution entropy, which is what makes the fused kernel a drop-in.
     batch: packed train batch (tokens, loss_mask, behavior_logprobs,
     rewards (per-token broadcast), ...). `values` may be None.
     """
     tokens, mask = batch["tokens"], batch["loss_mask"]
-    cur_lp = token_logprobs(logits, tokens)             # (B,S) f32
+    if isinstance(outputs, dict):
+        stats = outputs
+    else:
+        stats = token_stats_from_logits(outputs, tokens)
+    cur_lp = stats["token_logprobs"]                    # (B,S) f32
     beh_lp = batch["behavior_logprobs"]
     rewards = batch["rewards"]
 
@@ -67,11 +97,16 @@ def reinforce_loss(
         / jnp.maximum(mask.sum(), 1.0)
 
     loss = pg + cfg.value_coef * value_loss
+    # entropy bonus: sampled-token surrogate (-p log p of the taken action
+    # only) — identical between the fused and unfused paths since it needs
+    # only cur_lp. The full-distribution entropy is reported as a metric.
     ent = -jnp.sum(jnp.exp(cur_lp) * cur_lp * mask) / jnp.maximum(mask.sum(), 1.0)
     if cfg.entropy_coef:
         loss = loss - cfg.entropy_coef * ent
 
     metrics = {
+        "entropy": jnp.sum(stats["entropy"] * mask)
+            / jnp.maximum(mask.sum(), 1.0),
         "pg_loss": pg,
         "value_loss": value_loss,
         "ess": ess(ratio, mask),

@@ -10,7 +10,7 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.pipeline import _batch_to_device, _lag_stats
+from repro.core.pipeline import _lag_stats
 from repro.core.rollout import EngineConfig, GenerationEngine
 from repro.core.sim import HardwareModel
 from repro.core.trainer import Trainer
@@ -69,7 +69,9 @@ class ConventionalRL:
                 chunk = [rollouts[i] for i in idx]
                 batch = pack(chunk, cc.pack_rows, cc.pack_seq)
                 stats = batch.pop("packing_stats")
-                metrics = self.trainer.step(_batch_to_device(batch))
+                # host batch goes straight in: the trainer stages it with
+                # one jitted donated transfer (DESIGN.md §6)
+                metrics = self.trainer.step(batch)
                 n_tokens = sum(r.length for r in chunk)
                 self.time += hw.train_time(n_tokens, cc.n_chips)
                 max_lag, mean_lag = _lag_stats(chunk, self.trainer.version - 1)

@@ -44,6 +44,9 @@ class PipelineConfig:
 
 
 def _batch_to_device(batch: Dict[str, np.ndarray]) -> Dict[str, jnp.ndarray]:
+    """Per-field host->device copy. Kept for tests/tools; the trainer path
+    now stages packed host batches itself (one jitted donated transfer,
+    see `Trainer.step`)."""
     return {k: jnp.asarray(v) for k, v in batch.items()
             if k != "packing_stats"}
 
@@ -148,7 +151,10 @@ class PipelineRL:
                 rollouts = _apply_group_baseline(rollouts)
             batch = pack(rollouts, self.pc.pack_rows, self.pc.pack_seq)
             stats = batch.pop("packing_stats")
-            metrics = self.trainer.step(_batch_to_device(batch))
+            # host batch goes straight in: the trainer stages it with one
+            # jitted donated transfer; returned metrics are device-resident
+            # and sync only when the log entry below reads them
+            metrics = self.trainer.step(batch)
             n_tokens = sum(r.length for r in rollouts)
             self.trainer_time = start + self.hw.train_time(
                 n_tokens, self.pc.train_chips)

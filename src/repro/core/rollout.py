@@ -84,10 +84,16 @@ def _admit_impl(st: Dict[str, Any], new_tokens, new_plen, new_ncached,
 
 
 def _prefill_impl(params, st: Dict[str, Any], offset, admit_mask,
-                  cfg: ModelConfig, chunk: int):
-    """One chunked-prefill step over the slot state (cache update only)."""
+                  cfg: ModelConfig, chunk: int,
+                  offset_hint: Optional[int] = None):
+    """One chunked-prefill step over the slot state (cache update only).
+
+    offset_hint (static): host-side bound on the valid cache-slot count,
+    bucketed to the prefill kernel's block size; shrinks the kernel's
+    cache-block grid (grid-level early exit, like decode's kv_len_hint)."""
     cache = M.prefill_chunk(params, st["tokens"], st["prompt_len"], offset,
-                            admit_mask, st["cache"], cfg, chunk=chunk)
+                            admit_mask, st["cache"], cfg, chunk=chunk,
+                            offset_hint=offset_hint)
     return dict(st, cache=cache)
 
 
@@ -202,7 +208,12 @@ class GenerationEngine:
         if chunk:
             self._prefill = jax.jit(
                 functools.partial(_prefill_impl, cfg=cfg, chunk=chunk),
-                donate_argnums=(1,))
+                donate_argnums=(1,), static_argnames=("offset_hint",))
+            # hint buckets only matter when the Pallas prefill kernel runs
+            # (each bucket is one extra compile of the chunk forward)
+            self._use_prefill_hint = (self._cache_len is not None
+                                      and attn._use_prefill_kernel(
+                                          cfg, chunk, self._cache_len))
 
     # ----- weights -----------------------------------------------------
     def set_weights(self, params, version: int, recompute_kv: bool = False):
@@ -223,12 +234,32 @@ class GenerationEngine:
         # caches (masked by cache_index), so a full overwrite is safe.
         new = dict(st["cache"])
         for k in ("k", "v", "c_kv", "k_rope", "conv", "ssd"):
-            if k in out["cache"]:
-                if k in ("conv", "ssd"):
-                    continue  # recurrent state recompute not supported here
-                if out["cache"][k].shape != new[k].shape:
-                    continue  # ring cache (CL < T): keep the stale window
-                new[k] = out["cache"][k].astype(new[k].dtype)
+            if k not in out["cache"]:
+                continue
+            if k in ("conv", "ssd"):
+                continue  # recurrent state recompute not supported here
+            full = out["cache"][k]            # (L,H,T,...) full-length
+            if full.shape == new[k].shape:
+                new[k] = full.astype(new[k].dtype)
+                continue
+            # ring cache (CL < T): gather the last CL positions of the
+            # full-length recompute into ring order — slot j must hold the
+            # most recent position p <= n_cached-1 with p ≡ j (mod CL),
+            # exactly what the sequential decode loop would have written
+            # (the §3 ablation then works on sliding-window engines too).
+            # Rows with n_cached <= CL reduce to p_j = j for live slots;
+            # slots beyond a row's frontier clamp to dead positions that
+            # count-based decode masking never reads.
+            CL = new[k].shape[2]
+            nc = st["n_cached"][None, :, None]              # (1,H,1)
+            j = jnp.arange(CL)[None, None]                  # (1,1,CL)
+            p = (nc - 1) - jnp.mod(nc - 1 - j, CL)          # (1,H,CL)
+            p = jnp.clip(p, 0, T - 1)
+            idx = p.reshape(p.shape + (1,) * (full.ndim - 3))
+            new[k] = jnp.take_along_axis(
+                full, jnp.broadcast_to(
+                    idx, full.shape[:2] + (CL,) + full.shape[3:]),
+                axis=2).astype(new[k].dtype)
         return new
 
     # ----- admission ----------------------------------------------------
@@ -282,8 +313,18 @@ class GenerationEngine:
         if chunk:
             n_pre = int(new_plen.max()) - 1   # tokens to prefill (max row)
             for off in range(0, max(n_pre, 0), chunk):
+                # grid-level early exit for the prefill kernel: bound the
+                # valid cache-slot count from the host-known chunk offset,
+                # rounded up to the kernel block so jit sees at most
+                # CL/block distinct static values (DESIGN.md §5)
+                hint = None
+                if self._use_prefill_hint:
+                    cl = self._cache_len
+                    blk = attn.prefill_block_k(cl)
+                    hint = int(min(cl, -(-min(off, cl) // blk) * blk))
                 self.state = self._prefill(self.params, self.state, off,
-                                           jnp.asarray(mask))
+                                           jnp.asarray(mask),
+                                           offset_hint=hint)
                 self.prefill_invocations += 1
             self.last_admit_prefill_tokens = int(
                 np.maximum(new_plen[mask] - 1, 0).sum())

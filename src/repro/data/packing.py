@@ -36,7 +36,14 @@ class Rollout:
 def pack(rollouts: List[Rollout], batch: int, seq: int,
          pad_id: int = 0) -> Dict[str, np.ndarray]:
     """First-fit pack rollouts into (batch, seq) rows. Sequences longer than
-    `seq` are truncated; rows that stay empty are fully masked."""
+    `seq` are truncated; rows that stay empty are fully masked.
+
+    Two phases: a cheap placement pass (first-fit row search over running
+    row occupancy — pure python ints), then one batched copy per row per
+    field — each row's segments are concatenated and written with a single
+    slice assign, instead of 7 separate (T,) scatter assignments per
+    rollout (the old inner loop dominated pack() time at engine-scale
+    rollout counts)."""
     tokens = np.full((batch, seq), pad_id, np.int32)
     segment_ids = np.zeros((batch, seq), np.int32)
     positions = np.zeros((batch, seq), np.int32)
@@ -45,9 +52,10 @@ def pack(rollouts: List[Rollout], batch: int, seq: int,
     rewards = np.zeros((batch, seq), np.float32)   # per-token (broadcast of seq reward)
     versions = np.zeros((batch, seq), np.int32)
     used = np.zeros(batch, np.int32)
-    n_seg = np.zeros(batch, np.int32)
     dropped = 0
 
+    # ---- placement: first-fit row per rollout --------------------------
+    per_row: List[List[Rollout]] = [[] for _ in range(batch)]
     for r in rollouts:
         T = min(r.length, seq)
         row = -1
@@ -58,22 +66,30 @@ def pack(rollouts: List[Rollout], batch: int, seq: int,
         if row < 0:
             dropped += 1
             continue
-        o = used[row]
-        tokens[row, o:o + T] = r.tokens[:T]
-        n_seg[row] += 1
-        segment_ids[row, o:o + T] = n_seg[row]
-        positions[row, o:o + T] = np.arange(T)
+        per_row[row].append(r)
+        used[row] += T
+
+    # ---- one batched copy per row per field ----------------------------
+    for b, rs in enumerate(per_row):
+        if not rs:
+            continue
+        Ts = [min(r.length, seq) for r in rs]
+        n = int(np.sum(Ts))
+        tokens[b, :n] = np.concatenate([r.tokens[:T] for r, T in zip(rs, Ts)])
+        segment_ids[b, :n] = np.repeat(np.arange(1, len(rs) + 1), Ts)
+        positions[b, :n] = np.concatenate([np.arange(T) for T in Ts])
         # loss on completion tokens only (prediction targets are shifted in
         # the trainer; the mask marks *sampled* positions)
-        lm_start = min(r.prompt_len, T)
-        loss_mask[row, o + lm_start:o + T] = 1.0
-        behavior_lp[row, o:o + T] = r.behavior_logprobs[:T]
-        if r.token_rewards is not None:
-            rewards[row, o:o + T] = r.token_rewards[:T]
-        else:
-            rewards[row, o:o + T] = r.reward
-        versions[row, o:o + T] = r.weight_versions[:T]
-        used[row] += T
+        loss_mask[b, :n] = np.concatenate(
+            [(np.arange(T) >= min(r.prompt_len, T)).astype(np.float32)
+             for r, T in zip(rs, Ts)])
+        behavior_lp[b, :n] = np.concatenate(
+            [r.behavior_logprobs[:T] for r, T in zip(rs, Ts)])
+        rewards[b, :n] = np.concatenate(
+            [r.token_rewards[:T] if r.token_rewards is not None
+             else np.full(T, r.reward, np.float32) for r, T in zip(rs, Ts)])
+        versions[b, :n] = np.concatenate(
+            [r.weight_versions[:T] for r, T in zip(rs, Ts)])
 
     return {
         "tokens": tokens,

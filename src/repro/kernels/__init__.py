@@ -4,6 +4,7 @@
 - `flash_decode`      — one-token decode vs the (ring) slot cache
 - `prefill_attention` — chunked-prefill: a prompt chunk vs cache + itself
 - `ssd_scan`          — Mamba2 SSD chunked scan
+- `fused_logprob`     — trainer lm-head + cross-entropy, logits-free
 
 Call through the jit'd wrappers in `kernels.ops`; pure-jnp oracles live in
 `kernels.ref`. Off-TPU the kernels run in interpret mode (see

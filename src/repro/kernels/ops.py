@@ -18,6 +18,7 @@ import jax.numpy as jnp
 from repro.kernels.common import default_interpret
 from repro.kernels.decode_attention import flash_decode as _flash_decode
 from repro.kernels.flash_attention import flash_attention as _flash_attention
+from repro.kernels.fused_logprob import fused_logprob as _fused_logprob
 from repro.kernels.prefill_attention import (
     prefill_attention as _prefill_attention,
 )
@@ -63,9 +64,11 @@ def flash_decode(q, k_cache, v_cache, lengths, *, scale: float,
                          interpret=interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("scale", "block_k", "interpret"))
+@functools.partial(jax.jit, static_argnames=("scale", "block_k",
+                                             "offset_hint", "interpret"))
 def prefill_attention(q, k_chunk, v_chunk, k_cache, v_cache, offset, *,
                       scale: float, block_k: int = 128,
+                      offset_hint: int | None = None,
                       interpret: bool | None = None):
     """Chunked-prefill attention: a C-token prompt chunk (Q) against the
     slot cache prefix plus the chunk's own K/V — the admission hot path.
@@ -78,6 +81,11 @@ def prefill_attention(q, k_chunk, v_chunk, k_cache, v_cache, offset, *,
     cache; intra-chunk attention is causal. MLA absorbed prefill reuses
     the kernel with KV=1 and latent+rope dims concatenated.
 
+    offset_hint (static, >= min(offset, CL)) shrinks the cache-block grid
+    axis itself — like `flash_decode`'s `max_len_hint` — so blocks past
+    the write frontier are never fetched; the engine buckets the host-side
+    chunk offset to block_k so jit sees few distinct values.
+
     Part of the chunked-prefill equivalence law (DESIGN.md §2): admission
     through this kernel must match the sequential decode loop bit-for-bit
     in fp32 on the resulting cache, and within fp32 tolerance on logits.
@@ -85,7 +93,40 @@ def prefill_attention(q, k_chunk, v_chunk, k_cache, v_cache, offset, *,
     interpret = default_interpret(interpret)
     return _prefill_attention(q, k_chunk, v_chunk, k_cache, v_cache, offset,
                               scale=scale, block_k=block_k,
-                              interpret=interpret)
+                              offset_hint=offset_hint, interpret=interpret)
+
+
+def fused_logprob(hidden, head, targets, *, transpose_head: bool = False,
+                  block_n: int | None = None, block_v: int | None = None,
+                  interpret: bool | None = None):
+    """Fused linear-cross-entropy over the lm head — the trainer's loss
+    hot path (DESIGN.md §5-6).
+
+    hidden: (N,D) post-final-norm hidden states; head: (D,V), or (V,D)
+    with transpose_head=True (tied-embedding layout, no transposed copy);
+    targets: (N,) int32. Returns (logprob, lse, entropy), each (N,) f32.
+    Tiles the vocab axis with an online-logsumexp reduction so the
+    (N,V) logits are never materialized, and carries a custom VJP that
+    recomputes per-block softmax from the saved lse so the logits
+    *gradient* is never materialized either (grads reach both hidden and
+    head). Unlike the other wrappers this one is not jit-wrapped: it is
+    always called from inside the already-jitted `train_step` loss, and
+    an extra jit boundary here would only add a dispatch layer.
+
+    block_n/block_v default to MXU-friendly (128, 512) tiles on compiled
+    TPU; interpret mode (the CPU validation/co-sim path) defaults to
+    coarser (256, 2048) blocks — the interpreter pays per-grid-step python
+    dispatch, so fewer/bigger blocks make CPU trainer steps measurably
+    faster with identical masking and numerics. Explicit values win.
+    """
+    interpret = default_interpret(interpret)
+    if block_n is None:
+        block_n = 256 if interpret else 128
+    if block_v is None:
+        block_v = 2048 if interpret else 512
+    return _fused_logprob(hidden, head, targets,
+                          transpose_head=transpose_head, block_n=block_n,
+                          block_v=block_v, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))

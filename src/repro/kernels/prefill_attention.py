@@ -102,6 +102,7 @@ def _prefill_kernel(off_ref, q_ref, kc_ref, vc_ref, kh_ref, vh_ref, o_ref,
 
 def prefill_attention(q, k_chunk, v_chunk, k_cache, v_cache, offset, *,
                       scale: float, block_k: int = 128,
+                      offset_hint: int | None = None,
                       interpret: bool | None = None):
     """q: (B,C,H,Dk); k_chunk/v_chunk: (B,C,KV,Dk/Dv); caches:
     (B,CL,KV,Dk/Dv); offset: scalar int32 absolute position of the chunk's
@@ -111,6 +112,14 @@ def prefill_attention(q, k_chunk, v_chunk, k_cache, v_cache, offset, *,
     module docstring). Requires C <= CL and CL % block_k == 0. MLA absorbed
     prefill reuses this kernel with KV=1, Dk = kv_lora_rank + qk_rope_dim
     (concatenated latent+rope queries/keys) and Dv = kv_lora_rank.
+
+    offset_hint: optional *static* upper bound on the number of valid
+    cache slots, i.e. >= min(offset, CL) — the cache-block grid axis
+    shrinks to ceil(hint/block_k) blocks, so blocks past the write
+    frontier are never even fetched (the `pl.when` skip alone still paid
+    the DMA). The generation engine derives it from the host-side chunk
+    offset, rounded up to block_k so jit sees few distinct values; a
+    violation silently truncates attention. None keeps the full grid.
 
     interpret=None resolves to interpret mode off-TPU and compiled mode on
     TPU (callers may force either; see kernels.ops for the jitted wrapper).
@@ -124,6 +133,9 @@ def prefill_attention(q, k_chunk, v_chunk, k_cache, v_cache, offset, *,
     assert CL % block_k == 0, (CL, block_k)
     assert C <= CL, (C, CL)
     nkb = CL // block_k
+    if offset_hint is not None:
+        # a first chunk (offset 0) touches no cache blocks at all
+        nkb = min(nkb, -(-min(int(offset_hint), CL) // block_k))
     rows = C * rep
 
     qr = q.reshape(B, C, KV, rep, Dk).transpose(0, 2, 1, 3, 4)
@@ -145,9 +157,11 @@ def prefill_attention(q, k_chunk, v_chunk, k_cache, v_cache, offset, *,
                          memory_space=_MEMSPACE.SMEM),
             pl.BlockSpec((1, 1, rows, Dk), lambda b, h, ki: (b, h, 0, 0)),
             pl.BlockSpec((1, 1, block_k, Dk),
-                         lambda b, h, ki, _n=nkb: (b, h, jnp.minimum(ki, _n - 1), 0)),
+                         lambda b, h, ki, _n=max(nkb - 1, 0):
+                             (b, h, jnp.minimum(ki, _n), 0)),
             pl.BlockSpec((1, 1, block_k, Dv),
-                         lambda b, h, ki, _n=nkb: (b, h, jnp.minimum(ki, _n - 1), 0)),
+                         lambda b, h, ki, _n=max(nkb - 1, 0):
+                             (b, h, jnp.minimum(ki, _n), 0)),
             pl.BlockSpec((1, 1, C, Dk), lambda b, h, ki: (b, h, 0, 0)),
             pl.BlockSpec((1, 1, C, Dv), lambda b, h, ki: (b, h, 0, 0)),
         ],

@@ -38,6 +38,28 @@ def prefill_attention_ref(q, k_chunk, v_chunk, k_cache, v_cache, offset, *,
                       jnp.asarray(offset, jnp.int32), scale=scale)
 
 
+def fused_logprob_ref(hidden, head, targets, *, transpose_head: bool = False):
+    """Matches kernels.fused_logprob (blockwise linear-cross-entropy), via
+    the straightforward full-logits computation — the equivalence oracle
+    for value *and* gradient, and the model layer's jnp fallback when the
+    Pallas path is off. hidden: (N,D); head: (D,V) or (V,D) with
+    transpose_head; targets: (N,) int32. Returns (logprob, lse, entropy),
+    each (N,) f32. f32 accumulation like the kernel (the unfused model
+    path materializes logits in *model dtype*, so bf16 runs agree with
+    this twin more tightly than with that path)."""
+    import jax
+
+    eq = "nd,vd->nv" if transpose_head else "nd,dv->nv"
+    logits = jnp.einsum(eq, hidden, head,
+                        preferred_element_type=jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    tgt_l = jnp.take_along_axis(logits, targets[:, None].astype(jnp.int32),
+                                axis=-1)[:, 0]
+    p = jnp.exp(logits - lse[:, None])
+    entropy = lse - jnp.sum(p * logits, axis=-1)
+    return tgt_l - lse, lse, entropy
+
+
 def ssd_scan_ref(x, dt, A, B, C, *, chunk: int = 64):
     """Matches kernels.ssd_scan: returns (y, final_state (b,h,n,p))."""
     y, state = ssd_chunked(x, dt, A, B, C, chunk)

@@ -12,6 +12,7 @@ periodic checkpoints.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 
@@ -48,6 +49,9 @@ def main() -> None:
     ap.add_argument("--d-model", type=int, default=96)
     ap.add_argument("--layers", type=int, default=2)
     ap.add_argument("--max-operand", type=int, default=3)
+    ap.add_argument("--fused-loss", action="store_true",
+                    help="fused lm-head cross-entropy trainer path "
+                         "(DESIGN.md §6: no logits materialization)")
     ap.add_argument("--recompute-kv", action="store_true",
                     help="§5.1 ablation: recompute cache at weight updates")
     ap.add_argument("--seed", type=int, default=0)
@@ -65,6 +69,8 @@ def main() -> None:
     task = MathTask(max_operand=args.max_operand, ops="+")
     cfg = tiny_config(vocab_size=task.tok.vocab_size, d_model=args.d_model,
                       n_layers=args.layers)
+    if args.fused_loss:
+        cfg = dataclasses.replace(cfg, fused_loss=True)
     params = tree_values(M.init_params(cfg, jax.random.PRNGKey(args.seed)))
     schedule = warmup_constant(args.lr, args.warmup) if args.warmup else None
     trainer = Trainer(cfg, params, rl=RLConfig(entropy_coef=0.003),

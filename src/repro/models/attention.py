@@ -422,27 +422,38 @@ def chunk_attention(q, k_chunk, v_chunk, k_cache, v_cache, offset, *, scale):
     return out.reshape(B, C, H, Dv).astype(q.dtype)
 
 
+def prefill_block_k(cache_len: int) -> int:
+    """prefill_attention cache-block size for a given cache length —
+    shared with the engine's offset_hint bucketing so the two layers
+    cannot desync (mirror of `decode_block_k`)."""
+    return min(128, cache_len)
+
+
 def _use_prefill_kernel(cfg: ModelConfig, C: int, CL: int) -> bool:
-    return cfg.use_pallas and C <= CL and CL % min(128, CL) == 0
+    return cfg.use_pallas and C <= CL and CL % prefill_block_k(CL) == 0
 
 
 def _chunk_attention_any(q, k_chunk, v_chunk, k_cache, v_cache, offset,
-                         cfg: ModelConfig, scale: float):
+                         cfg: ModelConfig, scale: float,
+                         offset_hint: Optional[int] = None):
     """Route chunk-vs-cache attention through the Pallas prefill kernel
-    when shapes fit, else the jnp twin."""
+    when shapes fit, else the jnp twin. offset_hint (static, >=
+    min(offset, CL)) shrinks the kernel's cache-block grid — far cache
+    blocks are never launched for early chunks."""
     C, CL = q.shape[1], k_cache.shape[1]
     if _use_prefill_kernel(cfg, C, CL):
         from repro.kernels import ops as kops
         return kops.prefill_attention(q, k_chunk, v_chunk, k_cache, v_cache,
                                       offset, scale=scale,
-                                      block_k=min(128, CL),
+                                      block_k=prefill_block_k(CL),
+                                      offset_hint=offset_hint,
                                       interpret=cfg.pallas_interpret)
     return chunk_attention(q, k_chunk, v_chunk, k_cache, v_cache, offset,
                            scale=scale)
 
 
 def gqa_prefill_chunk(p, x, positions, cache_k, cache_v, offset, write_mask,
-                      cfg: ModelConfig):
+                      cfg: ModelConfig, offset_hint: Optional[int] = None):
     """One GQA layer over a C-token prompt chunk. x: (B,C,d). Attends the
     chunk against the cache prefix plus itself (attend-then-write: on a
     ring cache the chunk's writes evict exactly the slots leaving the
@@ -455,7 +466,8 @@ def gqa_prefill_chunk(p, x, positions, cache_k, cache_v, offset, write_mask,
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
     y = _chunk_attention_any(q, k, v, cache_k, cache_v, offset, cfg,
-                             1.0 / np.sqrt(cfg.d_head))
+                             1.0 / np.sqrt(cfg.d_head),
+                             offset_hint=offset_hint)
     CL = cache_k.shape[1]
     off_w = jnp.mod(offset, CL)
     cache_k = write_cache_chunk(cache_k, k, off_w, write_mask)
@@ -465,7 +477,8 @@ def gqa_prefill_chunk(p, x, positions, cache_k, cache_v, offset, write_mask,
 
 
 def mla_prefill_chunk(p, x, positions, cache_ckv, cache_krope, offset,
-                      write_mask, cfg: ModelConfig):
+                      write_mask, cfg: ModelConfig,
+                      offset_hint: Optional[int] = None):
     """One absorbed-MLA layer over a C-token prompt chunk: scores in latent
     space against the compressed cache (same math as mla_decode, C queries).
     Routed through the shared prefill-attention primitive by treating the
@@ -492,7 +505,8 @@ def mla_prefill_chunk(p, x, positions, cache_ckv, cache_krope, offset,
     kc_cat = jnp.concatenate([cache_ckv, cache_krope], axis=-1)[:, :, None]
     o_latent = _chunk_attention_any(
         q_cat, kh_cat, c_kv[:, :, None], kc_cat, cache_ckv[:, :, None],
-        offset, cfg, 1.0 / np.sqrt(nope + rope))             # (B,C,H,r)
+        offset, cfg, 1.0 / np.sqrt(nope + rope),
+        offset_hint=offset_hint)                             # (B,C,H,r)
 
     off_w = jnp.mod(offset, CL)
     cache_ckv = write_cache_chunk(cache_ckv, c_kv, off_w, write_mask)

@@ -138,13 +138,23 @@ def _layer_forward(cfg: ModelConfig, kind: str, h, lp, positions, segment_ids,
 
 def forward(params, tokens, positions, cfg: ModelConfig, *,
             segment_ids=None, prefix_embeds=None, return_cache: bool = False,
-            return_hidden: bool = False):
+            return_hidden: bool = False, loss_targets=None):
     """Full-sequence forward.
 
     tokens: (B,S) int32; positions: (B,S) int32.
     Returns dict(logits, values?, aux_loss, cache?, hidden?).
     The multimodal prefix (if any) is prepended; its rows are stripped from
     logits/values so downstream shapes match `tokens`.
+
+    loss_targets: optional (B,S) int32 next-token targets (position t holds
+    the token logits[t] should score, i.e. tokens[t+1]; the last column is
+    a dead pad). With `cfg.fused_loss` set, the head matmul + cross-entropy
+    fuse into the blockwise kernel (`kernels.fused_logprob`): no logits are
+    materialized and the output carries `token_logprobs` / `lse` /
+    `entropy` instead, each (B,S) f32 aligned with `tokens` the way
+    `algo.token_logprobs` aligns them (entry t describes the distribution
+    that scored token t; entry 0 is a zero pad). Value/MTP heads and the
+    MoE aux loss are unchanged (MTP still materializes its own logits).
     """
     B, S = tokens.shape
     h = jnp.take(params["embed"], tokens, axis=0)
@@ -187,16 +197,22 @@ def forward(params, tokens, positions, cfg: ModelConfig, *,
 
     hidden = h
     h = rms_norm(h, params["final_norm"], cfg.norm_eps)
-    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
-    logits = jnp.einsum("bsd,dv->bsv", h, head)
-    logits = constrain(logits, ("batch", "seq", "vocab"))
     out = {"aux_loss": total_aux, "n_prefix": n_prefix}
-    out["logits"] = logits[:, n_prefix:]
+    fused = cfg.fused_loss and loss_targets is not None
+    if fused:
+        out.update(_fused_loss_stats(params, cfg, h[:, n_prefix:],
+                                     loss_targets))
+    else:
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        logits = jnp.einsum("bsd,dv->bsv", h, head)
+        logits = constrain(logits, ("batch", "seq", "vocab"))
+        out["logits"] = logits[:, n_prefix:]
     if cfg.use_value_head:
         values = jnp.einsum("bsd,dv->bsv", h.astype(jnp.float32),
                             params["value_head"])[..., 0]
         out["values"] = values[:, n_prefix:]
     if cfg.use_mtp:
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
         out["mtp_logits"] = _mtp_forward(params, cfg, hidden, tokens, positions,
                                          n_prefix, head)
     if return_cache:
@@ -204,6 +220,49 @@ def forward(params, tokens, positions, cfg: ModelConfig, *,
     if return_hidden:
         out["hidden"] = hidden[:, n_prefix:]
     return out
+
+
+def _fused_loss_stats(params, cfg: ModelConfig, h, loss_targets):
+    """Fused lm-head + cross-entropy (DESIGN.md §6): per-token stats of the
+    sampled tokens without materializing (B,S,V) logits.
+
+    h: (B,S,D) post-final-norm hidden states (multimodal prefix already
+    stripped); loss_targets: (B,S) with targets[t] = tokens[t+1] (last
+    column dead). Returns token_logprobs / lse / entropy, each (B,S) f32
+    shifted to the `algo.token_logprobs` alignment: entry t describes the
+    distribution that scored token t (entry 0 is a zero pad, masked by
+    loss_mask downstream — prompts start at position >= 1).
+
+    Tied embeddings pass `params["embed"]` in its native (V,D) layout
+    (`transpose_head`) so no transposed head copy is materialized. The
+    Pallas kernel runs when `use_pallas` is set (interpret plumbed like
+    every other kernel); otherwise the compiled blockwise jnp twin
+    `fused_logprob_blocked` — same tiling and VJP-recompute math as a
+    lax.scan, so the no-materialization property holds on every backend
+    (the full-logits oracle lives in kernels/ref.py, tests only).
+    """
+    B, S, D = h.shape
+    hs = h.reshape(B * S, D)
+    tgt = loss_targets.reshape(B * S).astype(jnp.int32)
+    if cfg.tie_embeddings:
+        head, transpose_head = params["embed"], True
+    else:
+        head, transpose_head = params["lm_head"], False
+    if cfg.use_pallas:
+        from repro.kernels import ops as kops
+        lp, lse, ent = kops.fused_logprob(
+            hs, head, tgt, transpose_head=transpose_head,
+            interpret=cfg.pallas_interpret)
+    else:
+        from repro.kernels.fused_logprob import fused_logprob_blocked
+        lp, lse, ent = fused_logprob_blocked(hs, head, tgt,
+                                             transpose_head=transpose_head)
+
+    def shift(x):  # (B,S) stats of position t -> aligned with token t+1
+        return jnp.pad(x.reshape(B, S)[:, :-1], ((0, 0), (1, 0)))
+
+    return {"token_logprobs": shift(lp), "lse": shift(lse),
+            "entropy": shift(ent)}
 
 
 def _mtp_forward(params, cfg, hidden, tokens, positions, n_prefix, head):
@@ -350,7 +409,8 @@ def _merge_state(new, old, mask):
 
 
 def prefill_chunk(params, tokens, prompt_len, offset, admit_mask, cache,
-                  cfg: ModelConfig, *, chunk: int):
+                  cfg: ModelConfig, *, chunk: int,
+                  offset_hint: Optional[int] = None):
     """One fixed-size chunk of chunked-prefill admission (DESIGN.md §2).
 
     Runs `chunk` prompt tokens (positions [offset, offset+chunk)) of every
@@ -374,7 +434,11 @@ def prefill_chunk(params, tokens, prompt_len, offset, admit_mask, cache,
 
     tokens: (B,T) slot token buffer; prompt_len: (B,); offset: scalar chunk
     start — the host guarantees offset + chunk <= T, offset % chunk == 0
-    and chunk | CL (ring writes stay contiguous); admit_mask: (B,) bool,
+    and chunk | CL (ring writes stay contiguous); offset_hint: optional
+    *static* upper bound on the valid cache-slot count (>= min(offset,
+    CL)), bucketed host-side to the prefill kernel's block size — shrinks
+    the Pallas kernel's cache-block grid so early chunks never launch
+    blocks past the write frontier; admit_mask: (B,) bool,
     True for slots admitted this refill (other rows participate in compute
     for static shapes but their cache/state is untouched). Attention-cache
     writes are additionally masked to positions < prompt_len-1 per row: a
@@ -417,11 +481,11 @@ def prefill_chunk(params, tokens, prompt_len, offset, admit_mask, cache,
                 if cfg.use_mla:
                     a, (nck, nkr) = attn.mla_prefill_chunk(
                         pa, x, positions, cs["c_kv"], cs["k_rope"],
-                        offset, kv_write_mask, cfg)
+                        offset, kv_write_mask, cfg, offset_hint=offset_hint)
                     return a, {"c_kv": nck, "k_rope": nkr}
                 a, (nk, nv) = attn.gqa_prefill_chunk(
                     pa, x, positions, cs["k"], cs["v"], offset,
-                    kv_write_mask, cfg)
+                    kv_write_mask, cfg, offset_hint=offset_hint)
                 return a, {"k": nk, "v": nv}
 
             def ssm_fn(ps, x):

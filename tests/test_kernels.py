@@ -142,6 +142,31 @@ def test_prefill_attention_matches_sequential_window():
                                    atol=2e-5, rtol=2e-5, err_msg=f"off={off}")
 
 
+def test_prefill_attention_offset_hint():
+    """A static offset_hint >= min(offset, CL) shrinks the cache-block
+    grid without changing the result (grid-level early exit, the prefill
+    mirror of flash_decode's max_len_hint). offset=0 launches no cache
+    blocks at all."""
+    B, H, KV, C, CL, D, block = 1, 4, 2, 8, 256, 32, 32
+    ks = jax.random.split(KEY, 5)
+    q = jax.random.normal(ks[0], (B, C, H, D))
+    kh = jax.random.normal(ks[1], (B, C, KV, D))
+    vh = jax.random.normal(ks[2], (B, C, KV, D))
+    kc = jax.random.normal(ks[3], (B, CL, KV, D))
+    vc = jax.random.normal(ks[4], (B, CL, KV, D))
+    for off in (0, 40, 96, 300):    # 300 > CL: wrapped ring, all slots live
+        full = ops.prefill_attention(q, kh, vh, kc, vc, jnp.int32(off),
+                                     scale=D ** -0.5, block_k=block)
+        lo = min(off, CL)
+        for hint in (lo, -(-lo // block) * block, CL):
+            out = ops.prefill_attention(q, kh, vh, kc, vc, jnp.int32(off),
+                                        scale=D ** -0.5, block_k=block,
+                                        offset_hint=hint)
+            np.testing.assert_allclose(
+                np.asarray(out), np.asarray(full), atol=2e-5, rtol=2e-5,
+                err_msg=f"off={off} hint={hint}")
+
+
 @pytest.mark.parametrize("b,l,h,p,g,n,chunk", [
     (1, 64, 2, 16, 1, 8, 16),
     (2, 128, 4, 32, 2, 16, 32),

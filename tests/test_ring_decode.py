@@ -46,3 +46,50 @@ def test_ring_decode_matches_windowed_forward():
     np.testing.assert_allclose(np.asarray(dec, np.float32),
                                np.asarray(ref, np.float32),
                                atol=3e-4, rtol=3e-4)
+
+
+def test_ring_recompute_kv_matches_sequential_writes():
+    """`recompute_kv` on a sliding-window engine (the §3 ablation): the
+    gathered ring cache must hold exactly what the sequential decode loop
+    would have written under the new weights — slot j gets the most recent
+    position p <= n_cached-1 with p ≡ j (mod CL)."""
+    from repro.core.rollout import GenerationEngine
+
+    W = 8
+    cfg = dataclasses.replace(smoke_config(get_config("llama3-8b")),
+                              attention_variant="sliding_window",
+                              sliding_window=W, use_mtp=False)
+    params = tree_values(M.init_params(cfg, KEY))
+    new_params = tree_values(M.init_params(cfg, jax.random.PRNGKey(99)))
+    H, T = 3, 20
+    toks = jax.random.randint(KEY, (H, T), 0, cfg.vocab_size)
+    n_cached = jnp.asarray([20, 5, 0])   # wrapped ring / cold ring / empty
+    specs = kv_cache_specs(cfg, H, W)
+    st = {
+        "tokens": toks,
+        "n_cached": n_cached,
+        "cache": {k: jax.random.normal(KEY, v.shape).astype(v.dtype)
+                  for k, v in specs.items()},   # stale garbage everywhere
+    }
+    assert st["cache"]["k"].shape[2] == W
+
+    got = GenerationEngine._recompute_impl(new_params, st, cfg=cfg)
+
+    pos = jnp.broadcast_to(jnp.arange(T)[None], (H, T))
+    full = M.forward(new_params, toks, pos, cfg,
+                     return_cache=True)["cache"]
+    for key in ("k", "v"):
+        # oracle: the sequential loop's ring writes of the full-length cache
+        exp = np.zeros(st["cache"][key].shape, np.float32)
+        valid = np.zeros((H, W), bool)
+        for b, nc in enumerate(np.asarray(n_cached)):
+            for p in range(int(nc)):
+                exp[:, b, p % W] = np.asarray(full[key][:, b, p])
+                valid[b, p % W] = True
+        g = np.asarray(got[key], np.float32)
+        for b in range(H):
+            np.testing.assert_allclose(
+                g[:, b][:, valid[b]], exp[:, b][:, valid[b]],
+                atol=1e-5, rtol=1e-5, err_msg=f"{key} row {b}")
+        # dead slots of empty rows must never be read anyway; nothing to
+        # assert there (the gather clamps them to position 0)
