@@ -18,6 +18,8 @@ the legacy loop.
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
 import time
 from typing import List, Tuple
 
@@ -34,6 +36,7 @@ N_SLOTS = 8
 MAX_LEN = 96
 CHUNK = 16
 RING_WINDOW = 32
+JSON_PATH = "BENCH_engine.json"
 
 
 def _source(vocab: int, n: int):
@@ -97,10 +100,29 @@ def engine_benchmarks() -> List[Row]:
                  f"{results['chunked'][1]}"))
     # ring-buffer (sliding-window) cache: chunked admission over CL=32
     ttft, inv, tps = _bench(CHUNK, ring=True)
+    results["chunked_ring"] = (ttft, inv, tps)
     rows.append(("engine/ttft_chunked_ring", ttft * 1e6,
                  f"invocations_to_first_sample={inv};window={RING_WINDOW}"))
     rows.append(("engine/tokens_per_sec_chunked_ring", 1e6 / max(tps, 1e-9),
                  f"tok_s={tps:.1f}"))
+    # machine-readable perf trajectory, same schema discipline as
+    # BENCH_trainer.json: a config block + one record per variant + the
+    # headline ratios (uploaded by CI next to the CSV)
+    import jax
+    payload = {
+        "config": {"prompt_len": PROMPT_LEN, "n_slots": N_SLOTS,
+                   "max_len": MAX_LEN, "chunk": CHUNK,
+                   "ring_window": RING_WINDOW,
+                   "backend": jax.default_backend()},
+        **{name: {"ttft_s": r[0], "invocations_to_first_sample": r[1],
+                  "tokens_per_sec": r[2]}
+           for name, r in results.items()},
+        "ttft_ratio": sp_ttft,
+        "tokens_per_sec_ratio": sp_tps,
+    }
+    with open(JSON_PATH, "w") as f:
+        json.dump(payload, f, indent=2)
+    rows.append(("engine/json", 0.0, os.path.abspath(JSON_PATH)))
     return rows
 
 

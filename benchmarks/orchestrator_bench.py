@@ -1,0 +1,146 @@
+"""Orchestrator hot path (DESIGN.md §7): the event-driven substrate's two
+new measurable surfaces.
+
+  1. per-update decode pause, streamed vs atomic weight publication —
+     the paper's "the engine only briefly pauses for new weights" as a
+     number: atomic publications stall decode for the whole
+     `HardwareModel.broadcast_time`, streamed ones only pay the
+     per-chunk install + pointer swap while the transfer overlaps decode
+  2. pipeline-vs-conventional throughput (simulated flashes to a fixed
+     optimizer-step budget) across actor-pool sizes — the engine-count
+     sweep the single-engine orchestrator couldn't express
+
+Emits ``BENCH_orchestrator.json`` (same schema discipline as
+``BENCH_trainer.json``) so the perf trajectory covers the orchestration
+layer too.
+
+    PYTHONPATH=src python -m benchmarks.run --only orchestrator
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from benchmarks.common import tiny_setup
+from repro.core.conventional import ConventionalConfig, ConventionalRL
+from repro.core.pipeline import PipelineConfig, PipelineRL
+from repro.core.rollout import EngineConfig
+from repro.core.sim import HardwareModel
+from repro.core.trainer import Trainer
+from repro.optim.adam import AdamConfig
+
+Row = Tuple[str, float, str]
+
+JSON_PATH = "BENCH_orchestrator.json"
+STEPS = 4
+BATCH = 4
+N_CHIPS, TRAIN_CHIPS = 8, 4
+# slow interconnect so the broadcast cost is visible against the tiny
+# model's decode steps (the *ratio* streamed/atomic is the structural
+# result; absolute flash numbers scale with the knob)
+HW = HardwareModel(h_sat=16, bcast_bytes_per_flash=2e3,
+                   bcast_install_flash=1.0)
+
+
+def _pipeline(broadcast: str, n_engines: int = 1,
+              steps: int = STEPS) -> PipelineRL:
+    task, cfg, params = tiny_setup(d_model=64, n_layers=1)
+    trainer = Trainer(cfg, params, adam=AdamConfig(lr=1e-3))
+    p = PipelineRL(
+        cfg, params, task, EngineConfig(n_slots=8, max_len=16),
+        PipelineConfig(batch_size=BATCH, n_opt_steps=steps,
+                       n_chips=N_CHIPS, train_chips=TRAIN_CHIPS,
+                       pack_rows=2, pack_seq=48, n_engines=n_engines,
+                       broadcast=broadcast),
+        hw=HW, trainer=trainer)
+    p.run()
+    return p
+
+
+def orchestrator_benchmarks() -> List[Row]:
+    rows: List[Row] = []
+    payload: Dict = {"config": {
+        "steps": STEPS, "batch": BATCH, "n_chips": N_CHIPS,
+        "train_chips": TRAIN_CHIPS,
+        "bcast_bytes_per_flash": HW.bcast_bytes_per_flash,
+        "bcast_install_flash": HW.bcast_install_flash}}
+
+    # --- 1. per-update decode pause: streamed vs atomic vs free -------
+    pause: Dict[str, Dict] = {}
+    for mode in ("free", "streamed", "atomic"):
+        p = _pipeline(mode)
+        st = p.broadcast_stats()
+        per_eng = st["engines"]
+        mean_pause = float(np.mean([e["pause_per_update"] for e in per_eng
+                                    if e["updates_applied"]] or [0.0]))
+        pause[mode] = {
+            "published": st["published"],
+            "updates_applied": sum(e["updates_applied"] for e in per_eng),
+            "pause_per_update_flashes": mean_pause,
+            "sim_time_flashes": p.log[-1]["time"],
+            "max_lag": max(r["max_lag"] for r in p.log),
+        }
+        rows.append((f"orchestrator/pause_{mode}", 0.0,
+                     f"pause_per_update={mean_pause:.2f}f;"
+                     f"sim_t={p.log[-1]['time']:.0f}f;"
+                     f"max_lag={pause[mode]['max_lag']:.0f}"))
+    ratio = (pause["atomic"]["pause_per_update_flashes"]
+             / max(pause["streamed"]["pause_per_update_flashes"], 1e-9))
+    rows.append(("orchestrator/pause_atomic_over_streamed", 0.0,
+                 f"ratio={ratio:.2f}x"))
+    payload["weight_broadcast"] = pause
+    payload["pause_atomic_over_streamed"] = ratio
+
+    # --- 2. engine-count sweep: pipeline pool vs conventional ---------
+    sweep: Dict[str, Dict] = {}
+    for n_eng in (1, 2):
+        p = _pipeline("streamed", n_engines=n_eng)
+        tokens = sum(e.tokens_generated for e in p.engines)
+        sweep[f"pipeline_e{n_eng}"] = {
+            "engines": n_eng,
+            "sim_time_flashes": p.log[-1]["time"],
+            "tokens_generated": tokens,
+            "tokens_per_flash": tokens / max(p.log[-1]["time"], 1e-9),
+            "max_lag": max(r["max_lag"] for r in p.log),
+        }
+        rows.append((f"orchestrator/pipeline_e{n_eng}", 0.0,
+                     f"sim_t={p.log[-1]['time']:.0f}f;"
+                     f"tok_per_flash="
+                     f"{sweep[f'pipeline_e{n_eng}']['tokens_per_flash']:.4f}"))
+
+    task, cfg, params = tiny_setup(d_model=64, n_layers=1)
+    trainer = Trainer(cfg, params, adam=AdamConfig(lr=1e-3))
+    c = ConventionalRL(
+        cfg, params, task, EngineConfig(n_slots=8, max_len=16),
+        ConventionalConfig(batch_size=BATCH, g_steps=2, n_opt_steps=STEPS,
+                           n_chips=N_CHIPS, pack_rows=2, pack_seq=48),
+        hw=HW, trainer=trainer)
+    c.run()
+    sweep["conventional_G2"] = {
+        "sim_time_flashes": c.log[-1]["time"],
+        "tokens_generated": c.engine.tokens_generated,
+        "tokens_per_flash": c.engine.tokens_generated
+            / max(c.log[-1]["time"], 1e-9),
+    }
+    rows.append(("orchestrator/conventional_G2", 0.0,
+                 f"sim_t={c.log[-1]['time']:.0f}f"))
+    for n_eng in (1, 2):
+        sp = (sweep["conventional_G2"]["sim_time_flashes"]
+              / max(sweep[f"pipeline_e{n_eng}"]["sim_time_flashes"], 1e-9))
+        sweep[f"pipeline_e{n_eng}"]["speedup_vs_conventional"] = sp
+        rows.append((f"orchestrator/speedup_e{n_eng}_vs_conv", 0.0,
+                     f"speedup={sp:.2f}x"))
+    payload["engine_sweep"] = sweep
+
+    with open(JSON_PATH, "w") as f:
+        json.dump(payload, f, indent=2)
+    rows.append(("orchestrator/json", 0.0, os.path.abspath(JSON_PATH)))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in orchestrator_benchmarks():
+        print(",".join(str(c) for c in r))

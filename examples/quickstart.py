@@ -2,8 +2,9 @@
 
     PYTHONPATH=src python examples/quickstart.py
 
-Shows the public API end to end: model init -> trainer -> generation engine
--> PipelineRL orchestrator with in-flight weight updates.
+Shows the public API end to end: model init -> trainer -> actor pool of
+generation engines -> PipelineRL orchestrator with streamed in-flight
+weight broadcast on the shared event scheduler (DESIGN.md §7).
 """
 import jax
 
@@ -30,9 +31,17 @@ def main():
         # (ceil((P-1)/chunk) model calls per prompt) instead of one decode
         # step per prompt token; 0 restores the legacy forcing loop.
         EngineConfig(n_slots=16, max_len=16, prefill_chunk=8),
+        # n_engines=2: an actor pool — two independent engines share the
+        # N-T generation chips, each with its own clock and staggered
+        # weight arrivals (identical engines share compiled step fns, so
+        # the pool costs one jit compile). broadcast="streamed": weight
+        # publications fill a shadow buffer chunk-by-chunk between decode
+        # steps and pointer-swap on the last chunk — the decode pause per
+        # update is charged and reported, not assumed free.
         PipelineConfig(batch_size=8, n_opt_steps=10,
                        n_chips=8, train_chips=4,    # T of N chips train
-                       pack_rows=3, pack_seq=64),
+                       pack_rows=3, pack_seq=64,
+                       n_engines=2, broadcast="streamed"),
         trainer=Trainer(cfg, params, rl=RLConfig(entropy_coef=0.003),
                         adam=AdamConfig(lr=1e-3)),
     )
@@ -40,8 +49,13 @@ def main():
         print(f"step {rec['version']:3d}  sim_t={rec['time']:8.0f} flashes  "
               f"reward={rec['reward']:+.3f}  ess={rec['ess']:.3f}  "
               f"max_lag={rec['max_lag']:.0f}")
-    print(f"\ngenerated {pipeline.engine.tokens_generated} tokens; "
-          f"engine is at weight version {pipeline.engine.version}")
+    total_tokens = sum(e.tokens_generated for e in pipeline.engines)
+    versions = [e.version for e in pipeline.engines]
+    bs = pipeline.broadcast_stats()
+    pauses = [f"{e['pause_per_update']:.1f}f" for e in bs["engines"]]
+    print(f"\ngenerated {total_tokens} tokens across "
+          f"{len(pipeline.engines)} engines; engine weight versions "
+          f"{versions}; streamed-broadcast decode pause/update {pauses}")
 
 
 if __name__ == "__main__":

@@ -11,6 +11,9 @@ Public API (the paper's contribution as a composable module):
 """
 from repro.core.algo import RLConfig
 from repro.core.conventional import ConventionalConfig, ConventionalRL
+from repro.core.events import (
+    ActorStage, EventLoop, PreprocessStage, TrainerStage, WeightBroadcaster,
+)
 from repro.core.pipeline import PipelineConfig, PipelineRL
 from repro.core.preprocess import PreprocessConfig, Preprocessor
 from repro.core.rollout import EngineConfig, GenerationEngine
@@ -19,7 +22,8 @@ from repro.core.sim import HardwareModel
 from repro.core.trainer import Trainer
 
 __all__ = [
-    "ConventionalConfig", "ConventionalRL", "EngineConfig",
-    "GenerationEngine", "HardwareModel", "PipelineConfig", "PipelineRL",
-    "PreprocessConfig", "Preprocessor", "RLConfig", "Server", "Trainer",
+    "ActorStage", "ConventionalConfig", "ConventionalRL", "EngineConfig",
+    "EventLoop", "GenerationEngine", "HardwareModel", "PipelineConfig",
+    "PipelineRL", "PreprocessConfig", "Preprocessor", "PreprocessStage",
+    "RLConfig", "Server", "Trainer", "TrainerStage", "WeightBroadcaster",
 ]

@@ -1,7 +1,16 @@
 """Conventional RL baseline (Algorithm 1): alternate full-fleet generation
 of B*G sequences with G optimizer steps; the behavior policy lags the
 current policy by up to G-1 steps. Same engine, same trainer, same
-simulated clock — only the schedule differs."""
+simulated clock — and, since DESIGN.md §7, the same event-driven
+substrate as PipelineRL: the alternating schedule is expressed as an
+`ActorStage` that drains without refilling (`on_drained` hands control to
+the `TrainerStage`) and a trainer whose G-th completion restarts the
+generation phase. Only the configuration differs, not the loop.
+
+The phase-boundary weight sync is costed: the fleet sits idle for
+`HardwareModel.broadcast_time` of the full param tree before every
+generation phase (the conventional analogue of the in-flight broadcast
+pause, charged to the same clock so the Fig. 5 comparison is fair)."""
 from __future__ import annotations
 
 import dataclasses
@@ -10,12 +19,14 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.pipeline import _lag_stats
+from repro.core.events import (
+    ActorStage, EventLoop, TrainerStage, tree_bytes,
+)
+from repro.core.pipeline import _lag_stats  # noqa: F401  (legacy export)
 from repro.core.rollout import EngineConfig, GenerationEngine
 from repro.core.sim import HardwareModel
 from repro.core.trainer import Trainer
 from repro.data.math_task import MathTask
-from repro.data.packing import pack
 
 
 @dataclasses.dataclass
@@ -39,51 +50,60 @@ class ConventionalRL:
         self.trainer = trainer or Trainer(cfg, params)
         self.engine = GenerationEngine(cfg, self.trainer.params, ec,
                                        task.sample, seed=seed)
-        self.time = 0.0
         self.log: List[Dict] = []
+        self.loop = EventLoop()
+        self._started = False
+        self.trainer_stage = TrainerStage(
+            self.loop, self.trainer,
+            train_time=lambda n: hw.train_time(n, cc.n_chips),
+            pack_rows=cc.pack_rows, pack_seq=cc.pack_seq, log=self.log,
+            samples_per_step=cc.batch_size)
+        self._rollouts: List = []
+        self.actor = ActorStage(
+            self.loop, self.engine, task=task, name="fleet",
+            step_cost=lambda h: hw.step_cost(h / cc.n_chips),
+            auto_refill=False,
+            deliver=lambda rollouts, t: self._rollouts.extend(rollouts),
+            on_drained=self._train_phase)
 
+    @property
+    def time(self) -> float:
+        return self.loop.now
+
+    # ----- phases (event callbacks, not a loop) -------------------------
+    def _generation_phase(self, now: float) -> None:
+        """mu <- pi (the fleet idles for the weight transfer), then admit
+        B*G prompts and drain them without refilling."""
+        t = now + self.hw.broadcast_time(tree_bytes(self.trainer.params))
+        self.engine.set_weights(self.trainer.params, self.trainer.version)
+        self._rollouts = []
+        self.engine.refill(t)
+        # chunked-prefill admission is batched prefill FLOPs on the fleet
+        # (the legacy forcing loop charges decode steps instead)
+        t += self.hw.prefill_time(self.engine.last_admit_prefill_tokens,
+                                  self.cc.n_chips)
+        self.actor.start(t)
+
+    def _train_phase(self, now: float) -> None:
+        """Drained: G optimizer steps over a fixed shuffle of the phase's
+        rollouts; the G-th completion starts the next generation phase."""
+        cc = self.cc
+        rollouts = self._rollouts
+        order = np.random.RandomState(self.trainer.version).permutation(
+            len(rollouts))
+        for g in range(cc.g_steps):
+            idx = order[g * cc.batch_size:(g + 1) * cc.batch_size]
+            chunk = [rollouts[i] for i in idx]
+            self.trainer_stage.submit(
+                chunk, now,
+                on_done=(self._generation_phase
+                         if g == cc.g_steps - 1 else None))
+
+    # ----- run ----------------------------------------------------------
     def run(self, n_opt_steps: Optional[int] = None) -> List[Dict]:
         n = n_opt_steps or self.cc.n_opt_steps
-        cc, hw = self.cc, self.hw
-        while self.trainer.version < n:
-            # --- generation phase: mu <- pi, drain B*G sequences ---------
-            self.engine.set_weights(self.trainer.params, self.trainer.version)
-            self.engine.refill(self.time)
-            # chunked-prefill admission is batched prefill FLOPs on the
-            # fleet (the legacy forcing loop charges decode steps instead)
-            self.time += hw.prefill_time(
-                self.engine.last_admit_prefill_tokens, cc.n_chips)
-            rollouts = []
-            while self.engine.n_active > 0:
-                h = self.engine.n_active
-                finished = self.engine.step(self.task, now=self.time)
-                self.time += hw.step_cost(h / cc.n_chips)
-                for r in finished:
-                    r.finished_at = self.time
-                rollouts.extend(finished)
-            # --- training phase: G optimizer steps -----------------------
-            order = np.random.RandomState(self.trainer.version).permutation(
-                len(rollouts))
-            for g in range(cc.g_steps):
-                idx = order[g * cc.batch_size:(g + 1) * cc.batch_size]
-                chunk = [rollouts[i] for i in idx]
-                batch = pack(chunk, cc.pack_rows, cc.pack_seq)
-                stats = batch.pop("packing_stats")
-                # host batch goes straight in: the trainer stages it with
-                # one jitted donated transfer (DESIGN.md §6)
-                metrics = self.trainer.step(batch)
-                n_tokens = sum(r.length for r in chunk)
-                self.time += hw.train_time(n_tokens, cc.n_chips)
-                max_lag, mean_lag = _lag_stats(chunk, self.trainer.version - 1)
-                self.log.append({
-                    "version": self.trainer.version,
-                    "samples": self.trainer.version * cc.batch_size,
-                    "time": self.time,
-                    "reward": float(np.mean([r.reward for r in chunk])),
-                    "mean_len": float(np.mean([r.length for r in chunk])),
-                    "max_lag": max_lag,
-                    "mean_lag": mean_lag,
-                    "fill": stats["fill"],
-                    **metrics,
-                })
+        if not self._started:
+            self._started = True
+            self.loop.post(self.loop.now, self._generation_phase)
+        self.loop.run(until=lambda: self.trainer.version >= n)
         return self.log

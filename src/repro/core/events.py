@@ -1,0 +1,601 @@
+"""Event-driven orchestration substrate (DESIGN.md §7).
+
+One discrete-event scheduler replaces the three bespoke orchestration
+loops (`PipelineRL.run`, `ConventionalRL.run`, `Server.step`): stages
+post callbacks onto a shared simulated clock and react to each other's
+completions. `PipelineRL`, `ConventionalRL` and `Server` become
+*configurations* of the same stage library rather than separate control
+flows — which is what lets the orchestration layer grow new scenarios
+(actor pools, overlapped preprocessing, costed weight broadcast, trainer
+stalls) without forking the loop again.
+
+Stage contracts (all times are simulated flashes unless a stage installs
+its own cost model, e.g. the Server's step-denominated clock):
+
+  ActorStage        owns one `GenerationEngine`; self-schedules decode
+                    ticks; at each tick boundary it first installs any
+                    arrived weight publications (atomic swaps or streamed
+                    chunks — the *only* place weights may change, so
+                    per-token version stamps stay exact), then steps the
+                    engine, delivers finished rollouts downstream, and
+                    refills. Goes idle when the engine drains and
+                    `auto_refill` is off (ConventionalRL's phase end) or
+                    when externally driven (`chain=False`, the Server).
+  PreprocessStage   pulls B rollouts from the SampleQueue when free,
+                    holds them for `stage_time`, delivers the processed
+                    batch to the trainer — an *overlapped* stage on its
+                    own chips (paper Fig. 4), not latency serialized into
+                    the trainer tick. It runs at most one batch ahead so
+                    back-pressure still lands on the SampleQueue (whose
+                    drop-oldest policy is what bounds lag).
+  TrainerStage      consumes batches (from its inbox or by pulling from
+                    the queue), runs the real optimizer step eagerly,
+                    stamps completion on the clock, publishes weights
+                    through the WeightBroadcaster every `update_every`
+                    versions, and can stall for checkpoints.
+  WeightBroadcaster turns a publication into per-engine delivery
+                    schedules costed by `HardwareModel.broadcast_time`:
+                    atomic (engine pauses for the whole transfer) or
+                    streamed (chunks overlap decode; the engine only
+                    pauses `bcast_install_flash` per installed chunk and
+                    pointer-swaps on the last one).
+
+Clock invariants: events fire in nondecreasing time order (FIFO on
+ties); a stage's own timeline is nondecreasing; rollout `finished_at`
+stamps are the actor-tick completion times, so `SampleQueue` arrival
+order is consistent with the simulated clock.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from collections import deque
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.data.packing import Rollout, pack
+
+
+# ---------------------------------------------------------------------------
+# event loop
+# ---------------------------------------------------------------------------
+
+class EventLoop:
+    """Minimal deterministic discrete-event scheduler: a time-ordered heap
+    of callbacks with FIFO tie-breaking. `run(until=...)` processes events
+    until the predicate holds or the heap drains; pending events survive,
+    so orchestrators built on top are resumable (`run(n)` then `run(m)`)."""
+
+    def __init__(self):
+        self._heap: List[Tuple[float, int, Callable[[float], None]]] = []
+        self._seq = 0
+        self.now = 0.0
+        self.events_processed = 0
+
+    def post(self, time: float, fn: Callable[[float], None]) -> None:
+        """Schedule `fn(fire_time)`. Times before `now` are clamped to
+        `now` (a stage may not rewind the clock)."""
+        heapq.heappush(self._heap, (max(time, self.now), self._seq, fn))
+        self._seq += 1
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def step(self) -> bool:
+        """Process the earliest event; False if none remain."""
+        if not self._heap:
+            return False
+        t, _, fn = heapq.heappop(self._heap)
+        self.now = t
+        self.events_processed += 1
+        fn(t)
+        return True
+
+    def run(self, until: Optional[Callable[[], bool]] = None,
+            max_events: int = 10_000_000) -> None:
+        for _ in range(max_events):
+            if until is not None and until():
+                return
+            if not self.step():
+                return
+        raise RuntimeError("EventLoop.run exceeded max_events — "
+                           "a stage is posting events without progress")
+
+
+# ---------------------------------------------------------------------------
+# param-tree helpers (shared by the engine's stream API, the broadcaster's
+# costing and the launcher's chunked weight-update lowering)
+# ---------------------------------------------------------------------------
+
+def tree_bytes(tree) -> int:
+    """Total bytes of a pytree of arrays (anything with .size/.dtype)."""
+    import jax
+    return int(sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree)))
+
+
+def chunk_spans(leaves: Sequence[Any], n_chunks: int) -> List[Tuple[int, int]]:
+    """Partition a leaf list into <= n_chunks contiguous, byte-balanced
+    [lo, hi) spans — the layer-chunked publication unit of the streamed
+    broadcast. Leaf granularity keeps the swap trivially exact (a leaf is
+    never split across chunks)."""
+    n_chunks = max(int(n_chunks), 1)
+    sizes = [int(x.size * x.dtype.itemsize) for x in leaves]
+    total = sum(sizes)
+    if not leaves:
+        return []
+    target = total / n_chunks
+    spans: List[Tuple[int, int]] = []
+    lo, acc = 0, 0
+    for i, s in enumerate(sizes):
+        acc += s
+        # close the span once it reaches the byte target, keeping enough
+        # leaves for the remaining chunks to be non-empty
+        remaining_chunks = n_chunks - len(spans)
+        remaining_leaves = len(leaves) - (i + 1)
+        if (acc >= target and remaining_chunks > 1) or \
+                remaining_leaves < remaining_chunks - 1:
+            if i + 1 > lo:
+                spans.append((lo, i + 1))
+                lo, acc = i + 1, 0
+        if len(spans) == n_chunks - 1:
+            break
+    if lo < len(leaves):
+        spans.append((lo, len(leaves)))
+    return spans
+
+
+def span_bytes(leaves: Sequence[Any],
+               spans: Sequence[Tuple[int, int]]) -> List[int]:
+    return [int(sum(x.size * x.dtype.itemsize for x in leaves[lo:hi]))
+            for lo, hi in spans]
+
+
+# ---------------------------------------------------------------------------
+# shared metric helpers (exported to pipeline.py for API compatibility)
+# ---------------------------------------------------------------------------
+
+def lag_stats(rollouts: List[Rollout], trainer_version: int):
+    """(max, mean) token lag of completion tokens vs `trainer_version`."""
+    lags = []
+    for r in rollouts:
+        mask = np.arange(r.length) >= r.prompt_len
+        lags.append((trainer_version - r.weight_versions)[mask])
+    if not lags:
+        return 0.0, 0.0
+    cat = np.concatenate(lags)
+    if cat.size == 0:
+        return 0.0, 0.0
+    return float(cat.max()), float(cat.mean())
+
+
+def apply_group_baseline(rollouts: List[Rollout]) -> List[Rollout]:
+    """GRPO-style: reward <- reward - mean(rewards of same-prompt rollouts).
+    Returns shallow copies so queue bookkeeping is untouched."""
+    import copy
+    groups: Dict[int, List[float]] = {}
+    for r in rollouts:
+        groups.setdefault(r.prompt_key, []).append(r.reward)
+    means = {k: float(np.mean(v)) for k, v in groups.items()}
+    out = []
+    for r in rollouts:
+        r2 = copy.copy(r)
+        r2.reward = r.reward - means[r.prompt_key]
+        out.append(r2)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# actor stage
+# ---------------------------------------------------------------------------
+
+class ActorStage:
+    """One generation engine on the event loop.
+
+    step_cost(h) / prefill_cost(tokens, invocations) are the stage's cost
+    model — PipelineRL passes HardwareModel closures over its chip share,
+    the Server passes its step-denominated dt costs. Weight publications
+    arrive via `deliver_atomic` / `deliver_stream` and are installed only
+    at tick boundaries (Algorithm 2 l. 9-11), charging the decode-pause
+    the HardwareModel assigns to the mode.
+    """
+
+    def __init__(self, loop: EventLoop, engine, *,
+                 task=None, name: str = "actor0",
+                 step_cost: Callable[[float], float] = lambda h: 1.0,
+                 prefill_cost: Callable[[int, int], float] = lambda t, i: 0.0,
+                 deliver: Optional[Callable[[List[Rollout], float], None]] = None,
+                 auto_refill: bool = True, refill_first: bool = False,
+                 chain: bool = True,
+                 on_drained: Optional[Callable[[float], None]] = None,
+                 recompute_kv: bool = False):
+        self.loop, self.engine, self.task, self.name = loop, engine, task, name
+        self.step_cost, self.prefill_cost = step_cost, prefill_cost
+        self.deliver = deliver or (lambda rollouts, t: None)
+        self.auto_refill, self.refill_first = auto_refill, refill_first
+        self.chain, self.on_drained = chain, on_drained
+        self.recompute_kv = recompute_kv
+        self.running = False
+        self.time = 0.0                    # this engine's own clock
+        # weight deliveries
+        self._atomic: List[Tuple[float, Any, int, float]] = []
+        self._stream: Optional[Dict[str, Any]] = None
+        self._next_stream: Optional[Tuple] = None   # newest pending publish
+        # accounting (read by orchestrators / benchmarks)
+        self.updates_applied = 0
+        self.streams_completed = 0
+        self.streams_aborted = 0
+        self.pause_total = 0.0             # decode pause charged to updates
+        self.pause_log: List[Tuple[int, float]] = []   # (version, pause)
+
+    # ---- weight delivery (called by WeightBroadcaster / Server) --------
+    def deliver_atomic(self, arrive: float, params, version: int,
+                       pause: float) -> None:
+        """Whole-tree publication arriving at `arrive`; the engine pauses
+        `pause` flashes at the install boundary (the blocking transfer)."""
+        self._atomic.append((arrive, params, version, pause))
+        self._atomic.sort(key=lambda x: x[0])
+
+    def deliver_stream(self, params, version: int, arrivals: Sequence[float],
+                       install_pause: float, per_tick: int = 0,
+                       recompute_kv: Optional[bool] = None) -> None:
+        """Chunked publication: chunk k arrives at arrivals[k]; each
+        install pauses decode `install_pause`; pointer-swap after the
+        last. While a stream is in flight, a new publication *waits* (the
+        in-flight transfer always completes, so the policy keeps making
+        forward progress even when `broadcast_time` exceeds the publish
+        interval) — but only the newest waiting publication survives:
+        superseded pending ones are counted in `streams_aborted`."""
+        rk = self.recompute_kv if recompute_kv is None else recompute_kv
+        if self._stream is not None:
+            if self._next_stream is not None:
+                self.streams_aborted += 1
+            self._next_stream = (params, version, list(arrivals),
+                                 install_pause, per_tick, rk)
+            return
+        sizes = self.engine.begin_weight_stream(
+            params, version, n_chunks=len(arrivals), recompute_kv=rk)
+        self._stream = dict(version=version, arrivals=deque(arrivals),
+                            n_chunks=len(sizes), pause=install_pause,
+                            per_tick=per_tick, accum=0.0)
+
+    def _install_weights(self, now: float) -> float:
+        """Apply every publication that has arrived by `now`; returns the
+        decode pause charged to this tick."""
+        pause = 0.0
+        while self._atomic and self._atomic[0][0] <= now:
+            _, params, version, cost = self._atomic.pop(0)
+            # an atomic swap supersedes any in-flight/pending stream
+            if self._stream is not None:
+                self.streams_aborted += 1
+                self._stream = None
+            if self._next_stream is not None:
+                self.streams_aborted += 1
+                self._next_stream = None
+            self.engine.set_weights(params, version,
+                                    recompute_kv=self.recompute_kv)
+            pause += cost
+            self.updates_applied += 1
+            self.pause_log.append((version, cost))
+        st = self._stream
+        if st is not None:
+            installed = 0
+            while st["arrivals"] and st["arrivals"][0] <= now:
+                if st["per_tick"] and installed >= st["per_tick"]:
+                    break
+                st["arrivals"].popleft()
+                done = self.engine.stream_weight_chunk()
+                pause += st["pause"]
+                st["accum"] += st["pause"]
+                installed += 1
+                if done:
+                    self.updates_applied += 1
+                    self.streams_completed += 1
+                    self.pause_log.append((st["version"], st["accum"]))
+                    self._stream = None
+                    # promote the newest publication that waited for the
+                    # in-flight transfer to finish
+                    if self._next_stream is not None:
+                        nxt, self._next_stream = self._next_stream, None
+                        self.deliver_stream(nxt[0], nxt[1], nxt[2], nxt[3],
+                                            per_tick=nxt[4],
+                                            recompute_kv=nxt[5])
+                    break
+        self.pause_total += pause
+        return pause
+
+    # ---- lifecycle -----------------------------------------------------
+    def start(self, t: float) -> None:
+        if not self.running:
+            self.running = True
+            self.loop.post(t, self.tick)
+
+    def _refill(self, now: float) -> float:
+        inv0 = getattr(self.engine, "prefill_invocations", 0)
+        admitted = self.engine.refill(now)
+        if not admitted:
+            return 0.0
+        inv = getattr(self.engine, "prefill_invocations", 0) - inv0
+        return self.prefill_cost(self.engine.last_admit_prefill_tokens, inv)
+
+    def tick(self, now: float) -> None:
+        """One decode step: install weights -> (refill) -> step -> deliver
+        -> (refill) -> reschedule."""
+        pause = self._install_weights(now)
+        c_pre = 0.0
+        if self.auto_refill and (self.refill_first
+                                 or self.engine.n_active == 0):
+            c_pre += self._refill(now)
+        h = self.engine.n_active
+        if h == 0:
+            # nothing to decode: drained (conventional phase end) or idle
+            # (server with no requests). The tick still consumes wall time
+            # under a per-step cost model (step_cost(0) is dt for the
+            # Server, 0 for the flash model) and any weight-install pause
+            # stays on the timeline.
+            t = now + pause + c_pre + self.step_cost(0)
+            self.time = max(self.time, t)
+            self.deliver([], t)
+            self.running = False
+            if self.on_drained is not None:
+                self.on_drained(t)
+            return
+        finished = self.engine.step(self.task, now=now)
+        t_done = now + pause + c_pre + self.step_cost(h)
+        for r in finished:
+            r.finished_at = t_done
+        self.time = t_done
+        self.deliver(finished, t_done)
+        if self.auto_refill and not self.refill_first:
+            t_done += self._refill(t_done)
+        if self.engine.n_active == 0 and not self.auto_refill:
+            self.running = False
+            if self.on_drained is not None:
+                self.on_drained(t_done)
+            return
+        if self.chain:
+            self.loop.post(t_done, self.tick)
+        else:
+            self.running = False
+
+
+# ---------------------------------------------------------------------------
+# preprocessor stage (paper Fig. 4 middle stage, overlapped)
+# ---------------------------------------------------------------------------
+
+class PreprocessStage:
+    """Pulls B rollouts from the SampleQueue when both it and the trainer
+    inbox are free, holds them for `preprocessor.stage_time`, then submits
+    the processed batch to the trainer. Runs concurrently with both
+    neighbors — while batch k preprocesses, the actors generate k+1 and
+    the trainer trains k-1 — instead of adding its latency to the trainer
+    tick. At most one batch is in flight and one may wait in the trainer
+    inbox, so a trainer stall backs pressure up into the SampleQueue
+    (drop-oldest) rather than into an unbounded inbox."""
+
+    def __init__(self, loop: EventLoop, preprocessor, queue, batch_size: int,
+                 trainer_stage: "TrainerStage"):
+        self.loop, self.pre, self.queue = loop, preprocessor, queue
+        self.batch_size = batch_size
+        self.trainer_stage = trainer_stage
+        self.busy = False
+        self.busy_until = 0.0
+        self.batches = 0
+
+    def kick(self, now: float) -> None:
+        if self.busy or len(self.queue) < self.batch_size:
+            return
+        # overlap contract: preprocess batch k+1 while the trainer runs
+        # batch k, but never queue a second *finished* batch at the
+        # trainer — that's where back-pressure must fold back into the
+        # SampleQueue (a busy trainer alone does not block us)
+        if self.trainer_stage.inbox_waiting() > 0:
+            return
+        rollouts = self.queue.pop(self.batch_size)
+        raw_reward = float(np.mean([r.reward for r in rollouts]))
+        t_avail = max((r.finished_at for r in rollouts), default=now)
+        processed = self.pre.process(rollouts)
+        start = max(now, t_avail, self.busy_until)
+        done = start + self.pre.stage_time(
+            sum(r.length for r in processed))
+        self.busy, self.busy_until = True, done
+        self.batches += 1
+
+        def _deliver(t: float) -> None:
+            self.busy = False
+            self.trainer_stage.submit(processed, t, raw_reward=raw_reward)
+            self.kick(t)
+
+        self.loop.post(done, _deliver)
+
+
+# ---------------------------------------------------------------------------
+# trainer stage
+# ---------------------------------------------------------------------------
+
+class TrainerStage:
+    """Wraps a `Trainer` on the event loop: consumes batches from an inbox
+    (fed by `submit`) or by pulling B rollouts from `queue` when idle,
+    runs the real optimizer step eagerly, stamps completion on the
+    simulated clock, publishes weights via the broadcaster, and models
+    checkpoint stalls (`ckpt_every`/`ckpt_pause` — the scenario the
+    SampleQueue's drop-oldest policy exists for)."""
+
+    def __init__(self, loop: EventLoop, trainer, *, queue=None,
+                 batch_size: int = 0,
+                 train_time: Callable[[int], float] = lambda n: 0.0,
+                 pack_rows: int = 8, pack_seq: int = 128,
+                 log: Optional[List[Dict]] = None,
+                 broadcaster: Optional["WeightBroadcaster"] = None,
+                 update_every: int = 1, group_baseline: bool = False,
+                 ckpt_every: int = 0, ckpt_pause: float = 0.0,
+                 samples_per_step: Optional[int] = None,
+                 on_free: Optional[Callable[[float], None]] = None):
+        self.loop, self.trainer = loop, trainer
+        self.queue, self.batch_size = queue, batch_size
+        self.train_time = train_time
+        self.pack_rows, self.pack_seq = pack_rows, pack_seq
+        self.log = log if log is not None else []
+        self.broadcaster = broadcaster
+        self.update_every = max(int(update_every), 1)
+        self.group_baseline = group_baseline
+        self.ckpt_every, self.ckpt_pause = ckpt_every, ckpt_pause
+        self.samples_per_step = samples_per_step or batch_size
+        self.on_free = on_free
+        self.busy = False
+        self.free_at = 0.0
+        self.stalls = 0
+        self._inbox: deque = deque()   # (rollouts, raw_reward, avail, on_done)
+
+    def inbox_depth(self) -> int:
+        """Batches owned by the trainer: waiting in the inbox + in step."""
+        return len(self._inbox) + (1 if self.busy else 0)
+
+    def inbox_waiting(self) -> int:
+        """Batches delivered but not yet started (excludes the running
+        step) — the quantity the preprocessor's run-ahead bound is on."""
+        return len(self._inbox)
+
+    def submit(self, rollouts: List[Rollout], now: float,
+               raw_reward: Optional[float] = None,
+               on_done: Optional[Callable[[float], None]] = None) -> None:
+        avail = max((r.finished_at for r in rollouts), default=now)
+        self._inbox.append((rollouts, raw_reward, avail, on_done))
+        self.kick(now)
+
+    def kick(self, now: float) -> None:
+        if self.busy:
+            return
+        if self._inbox:
+            rollouts, raw_reward, avail, on_done = self._inbox.popleft()
+        elif (self.queue is not None and self.batch_size
+                and len(self.queue) >= self.batch_size):
+            rollouts = self.queue.pop(self.batch_size)
+            raw_reward, on_done = None, None
+            avail = max((r.finished_at for r in rollouts), default=now)
+        else:
+            return
+        self._train(rollouts, raw_reward, avail, now, on_done)
+
+    def _train(self, rollouts, raw_reward, avail, now, on_done) -> None:
+        start = max(now, self.free_at, avail)
+        if raw_reward is None:
+            raw_reward = float(np.mean([r.reward for r in rollouts]))
+        queue_depth = len(self.queue) if self.queue is not None else 0
+        if self.group_baseline:
+            rollouts = apply_group_baseline(rollouts)
+        batch = pack(rollouts, self.pack_rows, self.pack_seq)
+        stats = batch.pop("packing_stats")
+        # host batch goes straight in: the trainer stages it with one
+        # jitted donated transfer; returned metrics are device-resident
+        # and sync only when the log entry below reads them
+        metrics = self.trainer.step(batch)
+        n_tokens = sum(r.length for r in rollouts)
+        done = start + self.train_time(n_tokens)
+        version = self.trainer.version
+        max_lag, mean_lag = lag_stats(rollouts, version - 1)
+        stall = 0.0
+        if self.ckpt_every and version % self.ckpt_every == 0:
+            stall = self.ckpt_pause
+            done += stall
+            self.stalls += 1
+        self.busy, self.free_at = True, done
+        self.log.append({
+            "version": version,
+            "samples": version * self.samples_per_step,
+            "time": done,
+            "reward": raw_reward,
+            "mean_len": float(np.mean([r.length for r in rollouts])),
+            "max_lag": max_lag,
+            "mean_lag": mean_lag,
+            "fill": stats["fill"],
+            "queue_depth": queue_depth,
+            "stall": stall,
+            **metrics,
+        })
+
+        def _finish(t: float) -> None:
+            self.busy = False
+            if self.broadcaster is not None and \
+                    version % self.update_every == 0:
+                self.broadcaster.publish(self.trainer.params, version, t)
+            if on_done is not None:
+                on_done(t)
+            self.kick(t)
+            if self.on_free is not None:
+                self.on_free(t)
+
+        self.loop.post(done, _finish)
+
+
+# ---------------------------------------------------------------------------
+# weight broadcaster
+# ---------------------------------------------------------------------------
+
+class WeightBroadcaster:
+    """Publication path from the trainer to an actor pool. The transfer is
+    serialized over the trainer's egress interconnect (unicast chain), so
+    engine i's data lands after engine i-1's — the pool's staggered
+    weight-arrival times fall out of the cost model rather than being a
+    separate knob.
+
+    mode:
+      "free"     legacy zero-cost instant swap (the pre-§7 behavior;
+                 useful as an ablation upper bound)
+      "atomic"   whole-tree transfer, engine pauses `broadcast_time`
+                 for it (the naive load_weights-style update)
+      "streamed" layer-chunked transfer overlapped with decode: chunks
+                 arrive every `broadcast_time/n_chunks`; the engine only
+                 pauses `bcast_install_flash` per installed chunk and
+                 pointer-swaps on the last (the paper's "brief pause")
+    """
+
+    def __init__(self, hw, actors: Sequence[ActorStage],
+                 mode: str = "streamed", n_chunks: int = 8):
+        if mode not in ("free", "atomic", "streamed"):
+            raise ValueError(f"unknown broadcast mode {mode!r}")
+        self.hw, self.actors, self.mode = hw, list(actors), mode
+        self.n_chunks = max(int(n_chunks), 1)
+        self.published = 0
+        self.bytes_published = 0
+
+    def publish(self, params, version: int, now: float) -> None:
+        self.published += 1
+        nbytes = tree_bytes(params)
+        self.bytes_published += nbytes * len(self.actors)
+        if self.mode == "free":
+            for a in self.actors:
+                a.deliver_atomic(now, params, version, pause=0.0)
+            return
+        t_full = self.hw.broadcast_time(nbytes)
+        if self.mode == "atomic":
+            for i, a in enumerate(self.actors):
+                a.deliver_atomic(now + (i + 1) * t_full, params, version,
+                                 pause=t_full)
+            return
+        t_chunk = t_full / self.n_chunks
+        for i, a in enumerate(self.actors):
+            base = now + i * t_full
+            arrivals = [base + (k + 1) * t_chunk
+                        for k in range(self.n_chunks)]
+            a.deliver_stream(params, version, arrivals,
+                             install_pause=self.hw.bcast_install_flash)
+
+    def stats(self) -> Dict[str, Any]:
+        per_engine = []
+        for a in self.actors:
+            per_engine.append({
+                "name": a.name,
+                "updates_applied": a.updates_applied,
+                "streams_completed": a.streams_completed,
+                "streams_aborted": a.streams_aborted,
+                "pause_total": a.pause_total,
+                "pause_per_update": (a.pause_total / a.updates_applied
+                                     if a.updates_applied else 0.0),
+            })
+        return {
+            "mode": self.mode,
+            "published": self.published,
+            "bytes_published": self.bytes_published,
+            "engines": per_engine,
+        }

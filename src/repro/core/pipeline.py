@@ -1,29 +1,47 @@
-"""PipelineRL orchestrator (Algorithm 2): concurrent Actor + Trainer with
-in-flight weight updates, co-simulated deterministically.
+"""PipelineRL orchestrator (Algorithm 2): concurrent actor pool + Trainer
+with in-flight weight updates, co-simulated deterministically.
 
-Both stages execute *real* JAX compute; wall-clock is the Appendix-A
+Built as a *configuration* of the event-driven substrate (`core.events`,
+DESIGN.md §7): each of the pool's generation engines is an `ActorStage`
+with its own clock and chip share, finished rollouts stream through the
+shared `SampleQueue` (and, when configured, an overlapped
+`PreprocessStage` on its own chips — paper Fig. 4) into the
+`TrainerStage`, and every `update_every`-th optimizer step publishes
+weights through the `WeightBroadcaster`. The broadcast is *costed*:
+atomic publications stall decode for the whole transfer, streamed ones
+fill a shadow param buffer chunk-by-chunk between decode steps and only
+pause for the per-chunk install + final pointer swap — the paper's
+headline "the engine only briefly pauses for new weights" is now a
+measured quantity (`broadcast_stats()`), not an assumption.
+
+All stages execute *real* JAX compute; wall-clock is the Appendix-A
 hardware model (flash units), which is what makes the paper's asynchrony
 reproducible on CPU: the trainer step runs eagerly as soon as B sequences
 exist in the queue, its completion is stamped on the simulated clock, and
-the actor applies the weight update at the first decode-step boundary after
-that stamp — token-granular in-flight updates, exactly Figure 1(b).
+each actor applies arrived weight publications at its next decode-step
+boundary — token-granular in-flight updates, exactly Figure 1(b).
 """
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Dict, List, Optional
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.events import (
+    ActorStage, EventLoop, PreprocessStage, TrainerStage, WeightBroadcaster,
+    apply_group_baseline, lag_stats,
+)
 from repro.core.queues import SampleQueue
 from repro.core.rollout import EngineConfig, GenerationEngine
 from repro.core.sim import HardwareModel
 from repro.core.trainer import Trainer
 from repro.data.math_task import MathTask
-from repro.data.packing import Rollout, pack
+
+# legacy names — kept where tests/tools import them from
+_apply_group_baseline = apply_group_baseline
+_lag_stats = lag_stats
 
 
 @dataclasses.dataclass
@@ -41,43 +59,23 @@ class PipelineConfig:
     # mean reward of same-prompt rollouts instead of (or on top of) the
     # learned value baseline. Use with a prompt source that repeats prompts.
     group_baseline: bool = False
+    # --- actor pool + weight broadcast (DESIGN.md §7) -----------------
+    n_engines: int = 1            # independent generation engines sharing
+    #                               the N-T generation chips
+    broadcast: str = "streamed"   # "streamed" | "atomic" | "free"
+    broadcast_chunks: int = 8     # layer chunks per streamed publication
+    # --- trainer-stall scenario (checkpoint pause every k steps) ------
+    ckpt_every: int = 0
+    ckpt_pause: float = 0.0       # flashes the trainer stalls per ckpt
 
 
-def _batch_to_device(batch: Dict[str, np.ndarray]) -> Dict[str, jnp.ndarray]:
+def _batch_to_device(batch: Dict[str, np.ndarray]):
     """Per-field host->device copy. Kept for tests/tools; the trainer path
     now stages packed host batches itself (one jitted donated transfer,
     see `Trainer.step`)."""
+    import jax.numpy as jnp
     return {k: jnp.asarray(v) for k, v in batch.items()
             if k != "packing_stats"}
-
-
-def _apply_group_baseline(rollouts: List[Rollout]) -> List[Rollout]:
-    """GRPO-style: reward <- reward - mean(rewards of same-prompt rollouts).
-    Returns shallow copies so queue bookkeeping is untouched."""
-    import copy
-    groups: Dict[int, List[float]] = {}
-    for r in rollouts:
-        groups.setdefault(r.prompt_key, []).append(r.reward)
-    means = {k: float(np.mean(v)) for k, v in groups.items()}
-    out = []
-    for r in rollouts:
-        r2 = copy.copy(r)
-        r2.reward = r.reward - means[r.prompt_key]
-        out.append(r2)
-    return out
-
-
-def _lag_stats(rollouts: List[Rollout], trainer_version: int):
-    lags = []
-    for r in rollouts:
-        mask = np.arange(r.length) >= r.prompt_len
-        lags.append((trainer_version - r.weight_versions)[mask])
-    if not lags:
-        return 0.0, 0.0
-    cat = np.concatenate(lags)
-    if cat.size == 0:
-        return 0.0, 0.0
-    return float(cat.max()), float(cat.mean())
 
 
 class PipelineRL:
@@ -91,85 +89,86 @@ class PipelineRL:
         self.cfg, self.task, self.ec, self.pc, self.hw = cfg, task, ec, pc, hw
         self.trainer = trainer or Trainer(cfg, params)
         self.preprocessor = preprocessor  # paper Fig. 4 middle stage
-        self.engine = GenerationEngine(cfg, self.trainer.params, ec,
-                                       task.sample, seed=seed)
         self.queue = SampleQueue(pc.queue_maxsize)
-        self.actor_time = 0.0
-        self.trainer_time = 0.0
-        self.pending: List = []  # (available_at, params, version)
         self.log: List[Dict] = []
+        self.loop = EventLoop()
+
+        # --- actor pool: n_engines independent engines, each with its own
+        # clock and an equal share of the N-T generation chips; identical
+        # configs share one set of compiled step functions (jit_donor)
+        n_eng = max(int(pc.n_engines), 1)
+        chips_per_engine = self.gen_chips / n_eng
+        self.engines: List[GenerationEngine] = []
+        for i in range(n_eng):
+            donor = self.engines[0] if self.engines else None
+            self.engines.append(GenerationEngine(
+                cfg, self.trainer.params, ec, task.sample,
+                seed=seed + 1009 * i, jit_donor=donor))
+
+        self.trainer_stage = TrainerStage(
+            self.loop, self.trainer,
+            queue=None if preprocessor is not None else self.queue,
+            batch_size=pc.batch_size,
+            train_time=lambda n: hw.train_time(n, pc.train_chips),
+            pack_rows=pc.pack_rows, pack_seq=pc.pack_seq, log=self.log,
+            update_every=pc.update_every, group_baseline=pc.group_baseline,
+            ckpt_every=pc.ckpt_every, ckpt_pause=pc.ckpt_pause,
+            samples_per_step=pc.batch_size)
+        self.pre_stage = None
+        if preprocessor is not None:
+            self.pre_stage = PreprocessStage(
+                self.loop, preprocessor, self.queue, pc.batch_size,
+                self.trainer_stage)
+            self.trainer_stage.on_free = self.pre_stage.kick
+        consumer = self.pre_stage or self.trainer_stage
+
+        def _deliver(rollouts, t):
+            self.queue.put(rollouts)
+            if rollouts:
+                consumer.kick(t)
+
+        self.actors: List[ActorStage] = [
+            ActorStage(
+                self.loop, eng, task=task, name=f"actor{i}",
+                step_cost=lambda h, c=chips_per_engine: hw.step_cost(
+                    h / max(c, 1e-9)),
+                prefill_cost=lambda toks, inv, c=chips_per_engine:
+                    hw.prefill_time(toks, max(c, 1)),
+                deliver=_deliver, recompute_kv=pc.recompute_kv)
+            for i, eng in enumerate(self.engines)]
+        self.broadcaster = WeightBroadcaster(
+            hw, self.actors, mode=pc.broadcast, n_chunks=pc.broadcast_chunks)
+        self.trainer_stage.broadcaster = self.broadcaster
+
+    # ----- compatibility surface ---------------------------------------
+    @property
+    def engine(self) -> GenerationEngine:
+        """First pool engine (the whole pool for n_engines=1)."""
+        return self.engines[0]
 
     @property
     def gen_chips(self) -> int:
         return self.pc.n_chips - self.pc.train_chips
 
+    @property
+    def actor_time(self) -> float:
+        return max(a.time for a in self.actors)
+
+    @property
+    def trainer_time(self) -> float:
+        return self.trainer_stage.free_at
+
+    def broadcast_stats(self) -> Dict:
+        """Per-engine weight-publication accounting: updates applied,
+        decode pause charged per update, streams completed/aborted."""
+        return self.broadcaster.stats()
+
+    # ----- run ----------------------------------------------------------
     def run(self, n_opt_steps: Optional[int] = None) -> List[Dict]:
+        """Run until the trainer reaches `n_opt_steps` optimizer steps
+        (absolute). Resumable: pending events survive between calls."""
         n = n_opt_steps or self.pc.n_opt_steps
-        self._refill()
-        while self.trainer.version < n:
-            self._actor_tick()
-            self._trainer_tick()
+        for a in self.actors:
+            a.start(self.loop.now)
+        self.loop.run(until=lambda: self.trainer.version >= n)
         return self.log
-
-    def _refill(self):
-        """Admit prompts; chunked prefill is costed as batched prefill
-        FLOPs on the generation chips (legacy forcing loops cost decode
-        steps inside _actor_tick instead)."""
-        admitted = self.engine.refill(self.actor_time)
-        if admitted:
-            self.actor_time += self.hw.prefill_time(
-                self.engine.last_admit_prefill_tokens, max(self.gen_chips, 1))
-        return admitted
-
-    # ------------------------------------------------------------------
-    def _actor_tick(self):
-        # in-flight weight update at a decode-step boundary (Alg. 2 l. 9-11)
-        while self.pending and self.pending[0][0] <= self.actor_time:
-            _, params, version = self.pending.pop(0)
-            self.engine.set_weights(params, version,
-                                    recompute_kv=self.pc.recompute_kv)
-        h_active = self.engine.n_active
-        finished = self.engine.step(self.task, now=self.actor_time)
-        self.actor_time += self.hw.step_cost(h_active / max(self.gen_chips, 1))
-        for r in finished:
-            r.finished_at = self.actor_time
-        self.queue.put(finished)
-        self._refill()
-
-    def _trainer_tick(self):
-        B = self.pc.batch_size
-        while len(self.queue) >= B:
-            rollouts = self.queue.pop(B)
-            t_avail = max(r.finished_at for r in rollouts)
-            raw_reward = float(np.mean([r.reward for r in rollouts]))
-            if self.preprocessor is not None:
-                rollouts = self.preprocessor.process(rollouts)
-                t_avail += self.preprocessor.stage_time(
-                    sum(r.length for r in rollouts))
-            start = max(self.trainer_time, t_avail)
-            if self.pc.group_baseline:
-                rollouts = _apply_group_baseline(rollouts)
-            batch = pack(rollouts, self.pc.pack_rows, self.pc.pack_seq)
-            stats = batch.pop("packing_stats")
-            # host batch goes straight in: the trainer stages it with one
-            # jitted donated transfer; returned metrics are device-resident
-            # and sync only when the log entry below reads them
-            metrics = self.trainer.step(batch)
-            n_tokens = sum(r.length for r in rollouts)
-            self.trainer_time = start + self.hw.train_time(
-                n_tokens, self.pc.train_chips)
-            max_lag, mean_lag = _lag_stats(rollouts, self.trainer.version - 1)
-            if (self.trainer.version % self.pc.update_every) == 0:
-                self.pending.append((self.trainer_time, self.trainer.params,
-                                     self.trainer.version))
-            self.log.append({
-                "version": self.trainer.version,
-                "samples": self.trainer.version * B,
-                "time": self.trainer_time,
-                "reward": raw_reward,
-                "mean_len": float(np.mean([r.length for r in rollouts])),
-                "max_lag": max_lag,
-                "mean_lag": mean_lag,
-                "fill": stats["fill"],
-                **metrics,
-            })

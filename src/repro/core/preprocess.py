@@ -41,6 +41,17 @@ class Preprocessor:
 
         @jax.jit
         def ref_logprobs(params, tokens, positions):
+            if cfg.fused_loss:
+                # the KL penalty only needs per-token ref logprobs of the
+                # rollout's own tokens — exactly the fused-loss contract
+                # (DESIGN.md §6): pass the next-token targets and let the
+                # blockwise kernel return token_logprobs without ever
+                # materializing the (B,S,V) ref logits
+                tgt = jnp.concatenate([tokens[:, 1:], tokens[:, -1:]],
+                                      axis=1)
+                out = M.forward(params, tokens, positions, cfg,
+                                loss_targets=tgt)
+                return out["token_logprobs"]
             out = M.forward(params, tokens, positions, cfg)
             return token_logprobs(out["logits"], tokens)
 

@@ -17,6 +17,7 @@ class SampleQueue:
         self.maxsize = maxsize
         self.dropped = 0
         self.total_put = 0
+        self.high_watermark = 0   # max depth seen (trainer-stall telemetry)
 
     def put(self, rollouts: List[Rollout]) -> None:
         for r in rollouts:
@@ -25,6 +26,7 @@ class SampleQueue:
             if self.maxsize is not None and len(self.buf) > self.maxsize:
                 self.buf.popleft()  # ring-buffer semantics: drop oldest
                 self.dropped += 1
+        self.high_watermark = max(self.high_watermark, len(self.buf))
 
     def pop(self, n: int) -> List[Rollout]:
         if len(self.buf) < n:

@@ -143,10 +143,16 @@ def _engine_step(params, st: Dict[str, Any], cfg: ModelConfig,
 
 
 class GenerationEngine:
-    """H-slot continuous-batching engine (Algorithm 2, Actor)."""
+    """H-slot continuous-batching engine (Algorithm 2, Actor).
+
+    `jit_donor`: another engine whose compiled step/admit/prefill
+    callables are reused when cfg+ec match — an actor pool of identical
+    engines (core.events.ActorStage) compiles the hot functions once
+    instead of once per engine."""
 
     def __init__(self, cfg: ModelConfig, params, ec: EngineConfig,
-                 prompt_source: Callable[[], Problem], seed: int = 0):
+                 prompt_source: Callable[[], Problem], seed: int = 0,
+                 jit_donor: Optional["GenerationEngine"] = None):
         if ec.interpret is not None:
             cfg = dataclasses.replace(cfg, pallas_interpret=ec.interpret)
         self.cfg, self.ec = cfg, ec
@@ -200,6 +206,18 @@ class GenerationEngine:
         self.prefill_invocations = 0       # chunked-prefill model calls
         self.prefill_tokens = 0            # prompt tokens admitted via prefill
         self.last_admit_prefill_tokens = 0
+        # streamed in-flight weight broadcast (DESIGN.md §7): shadow param
+        # buffer filled chunk-by-chunk between decode steps
+        self._wstream: Optional[Dict[str, Any]] = None
+        if (jit_donor is not None and jit_donor.cfg == cfg
+                and jit_donor.ec == ec):
+            self._step = jit_donor._step
+            self._recompute = jit_donor._recompute
+            self._admit = jit_donor._admit
+            if chunk:
+                self._prefill = jit_donor._prefill
+                self._use_prefill_hint = jit_donor._use_prefill_hint
+            return
         self._step = jax.jit(functools.partial(_engine_step, cfg=cfg, ec=ec),
                              static_argnames=("kv_len_hint",))
         self._recompute = jax.jit(functools.partial(self._recompute_impl, cfg=cfg))
@@ -219,11 +237,53 @@ class GenerationEngine:
     def set_weights(self, params, version: int, recompute_kv: bool = False):
         """In-flight weight update: swap μ, keep the (stale) KV cache.
         recompute_kv=True reproduces the paper's §5.1 ablation (recompute
-        the cache of in-progress sequences under the new weights)."""
+        the cache of in-progress sequences under the new weights). An
+        atomic swap supersedes any in-progress weight stream."""
+        self._wstream = None
         self.params = params
         self.version = version
         if recompute_kv:
             self.state["cache"] = self._recompute(params, self.state)
+
+    def begin_weight_stream(self, params, version: int, n_chunks: int = 8,
+                            recompute_kv: bool = False) -> List[int]:
+        """Streamed in-flight broadcast (DESIGN.md §7): stage the new
+        param tree into a shadow buffer chunk-by-chunk between decode
+        steps via `stream_weight_chunk`; μ (and `self.version`) stay on
+        the old weights until the final chunk lands, then pointer-swap —
+        so per-token `weight_versions` stamps stay exact across the whole
+        transfer. A second `begin` abandons the unfinished shadow buffer.
+        Returns the per-chunk byte sizes (for interconnect costing)."""
+        from repro.core.events import chunk_spans, span_bytes
+        leaves, treedef = jax.tree_util.tree_flatten(params)
+        spans = chunk_spans(leaves, n_chunks)
+        self._wstream = {
+            "treedef": treedef, "leaves": leaves, "spans": spans,
+            "shadow": [None] * len(leaves), "next": 0, "version": version,
+            "recompute": recompute_kv,
+        }
+        return span_bytes(leaves, spans)
+
+    def stream_weight_chunk(self) -> bool:
+        """Install the next chunk into the shadow buffer; on the last
+        chunk, assemble the tree and pointer-swap it in (returns True).
+        No-op (False) when no stream is active."""
+        ws = self._wstream
+        if ws is None:
+            return False
+        lo, hi = ws["spans"][ws["next"]]
+        ws["shadow"][lo:hi] = ws["leaves"][lo:hi]
+        ws["next"] += 1
+        if ws["next"] < len(ws["spans"]):
+            return False
+        params = jax.tree_util.tree_unflatten(ws["treedef"], ws["shadow"])
+        version, recompute = ws["version"], ws["recompute"]
+        self.set_weights(params, version, recompute_kv=recompute)
+        return True
+
+    @property
+    def stream_active(self) -> bool:
+        return self._wstream is not None
 
     @staticmethod
     def _recompute_impl(params, st, cfg: ModelConfig):

@@ -7,9 +7,19 @@ Implementation Details") in-process:
   - connect_trainer()          ~ /init_process_group (weight-transfer pairing)
   - request_weight_update()    ~ /request_weight_update (in-flight update)
 
-Tracks per-request latency (admission wait, end-to-end) so serving SLOs are
-measurable across in-flight updates — the paper's headline property: the
-engine only *briefly pauses* for new weights, no request is dropped.
+Since DESIGN.md §7 the server is a configuration of the shared
+event-driven substrate: one externally-driven `ActorStage`
+(`chain=False` — each `step(dt)` posts exactly one admission+decode tick
+onto the `EventLoop`) with a step-denominated cost model (`dt` per decode
+step, `dt` per chunked-prefill invocation) instead of the RL
+orchestrators' flash-unit HardwareModel closures.
+
+Tracks per-request latency (admission wait, end-to-end) so serving SLOs
+are measurable across in-flight updates — the paper's headline property:
+the engine only *briefly pauses* for new weights, no request is dropped.
+`request_weight_update(streamed=True)` exercises the chunked publication
+path: the new weights install one chunk per serving step and the policy
+version flips only at the final pointer swap.
 """
 from __future__ import annotations
 
@@ -20,6 +30,7 @@ from typing import Callable, Dict, List, Optional
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.events import ActorStage, EventLoop
 from repro.core.rollout import EngineConfig, GenerationEngine
 from repro.data.math_task import Problem
 
@@ -54,6 +65,7 @@ class _QueueSource:
             return None
         req = self.server.waiting.popleft()
         req.admitted_at = self.server.clock
+        self.server.in_flight[req.rid] = req
         self.last_admitted.append(req)
         prob = Problem(req.prompt_ids, 0)
         prob.rid = req.rid  # type: ignore[attr-defined]
@@ -70,11 +82,24 @@ class Server:
         self.in_flight: Dict[int, Request] = {}
         self.done: List[Request] = []
         self._next_rid = 0
-        self.clock = 0.0
         self._trainer: Optional[Callable] = None
         self._source = _QueueSource(self)
         self.engine = GenerationEngine(cfg, params, ec, self._source,
                                        seed=seed)
+        self.loop = EventLoop()
+        self._dt = 1.0
+        self._updates = 0
+        self._completed_now: List[Request] = []
+        self.actor = ActorStage(
+            self.loop, self.engine, task=None, name="server",
+            step_cost=lambda h: self._dt,
+            prefill_cost=lambda toks, inv: self._dt * inv,
+            deliver=self._complete, auto_refill=True, refill_first=True,
+            chain=False)
+
+    @property
+    def clock(self) -> float:
+        return self.loop.now
 
     # ---- the three endpoints -----------------------------------------
     def submit(self, prompt_ids: List[int]) -> int:
@@ -88,42 +113,56 @@ class Server:
         """Pair with a trainer: `get_weights() -> (params, version)`."""
         self._trainer = get_weights
 
-    def request_weight_update(self, recompute_kv: bool = False) -> int:
-        """In-flight update: swap weights at the next step boundary; every
-        in-flight request keeps its KV cache."""
+    def request_weight_update(self, recompute_kv: bool = False,
+                              streamed: bool = False,
+                              n_chunks: int = 8) -> int:
+        """In-flight update. Atomic (default): swap weights at the next
+        step boundary; every in-flight request keeps its KV cache.
+        streamed=True: layer-chunked publication — one chunk installs per
+        serving step (the shadow buffer fills between decode steps) and
+        the version flips only at the final pointer swap."""
         assert self._trainer is not None, "connect_trainer first"
         params, version = self._trainer()
-        self.engine.set_weights(params, version, recompute_kv=recompute_kv)
+        self._updates += 1
+        if streamed:
+            # all chunks are "arrived"; the per_tick cap meters them out
+            # one per step so the transfer overlaps serving
+            self.actor.deliver_stream(params, version,
+                                      arrivals=[self.clock] * n_chunks,
+                                      install_pause=0.0, per_tick=1,
+                                      recompute_kv=recompute_kv)
+        else:
+            self.engine.set_weights(params, version,
+                                    recompute_kv=recompute_kv)
         return version
 
     # ---- serving loop ---------------------------------------------------
-    def step(self, dt: float = 1.0) -> List[Request]:
-        """Admit waiting requests, decode one token for every in-flight
-        request; returns requests completed this step."""
-        self._source.last_admitted = []
-        inv0 = self.engine.prefill_invocations
-        self.engine.refill(self.clock)
-        # each chunked-prefill forward costs ~one engine step on the
-        # step-denominated clock (the legacy forcing loop pays per-token
-        # decode steps instead, so admission is never free)
-        self.clock += dt * (self.engine.prefill_invocations - inv0)
-        for req in self._source.last_admitted:
-            self.in_flight[req.rid] = req
-        rollouts = self.engine.step(None, now=self.clock)
-        self.clock += dt
-        out = []
+    def _complete(self, rollouts, t: float) -> None:
         for r in rollouts:
             prob = self.engine.problems[r.slot]
             rid = getattr(prob, "rid", None)
             if rid is None or rid not in self.in_flight:
                 continue
             req = self.in_flight.pop(rid)
-            req.finished_at = self.clock
+            req.finished_at = t
             req.completion_ids = r.tokens[r.prompt_len:]
             req.weight_versions = r.weight_versions[r.prompt_len:]
             self.done.append(req)
-            out.append(req)
-        return out
+            self._completed_now.append(req)
+        # advance the clock to the tick completion even when nothing
+        # finished (the tick event itself fires at the tick *start* time)
+        self.loop.post(t, lambda now: None)
+
+    def step(self, dt: float = 1.0) -> List[Request]:
+        """Admit waiting requests, decode one token for every in-flight
+        request; returns requests completed this step. One call = one
+        tick of the shared event scheduler."""
+        self._dt = dt
+        self._source.last_admitted = []
+        self._completed_now = []
+        self.loop.post(self.loop.now, self.actor.tick)
+        self.loop.run()
+        return self._completed_now
 
     # ---- metrics --------------------------------------------------------
     def metrics(self) -> dict:
@@ -141,4 +180,7 @@ class Server:
             # chunked-prefill admission path (DESIGN.md §2)
             "prefill_tokens": self.engine.prefill_tokens,
             "prefill_invocations": self.engine.prefill_invocations,
+            # weight-publication path (DESIGN.md §7)
+            "weight_updates": self._updates,
+            "streams_completed": self.actor.streams_completed,
         }

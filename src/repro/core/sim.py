@@ -30,6 +30,13 @@ class HardwareModel:
     # costs ~1 flash/token (the Eq. 9 definition of a flash) instead of a
     # full decode step per token
     prefill_flash: float = 1.0
+    # trainer -> generation-engine weight-broadcast interconnect, in bytes
+    # moved per flash of wall-time (DESIGN.md §7). An *atomic* publication
+    # stalls decode for the whole transfer; a *streamed* one overlaps the
+    # transfer with decode and only pauses `bcast_install_flash` per
+    # installed chunk (shadow-buffer fill + pointer publish).
+    bcast_bytes_per_flash: float = 1e4
+    bcast_install_flash: float = 1.0
 
     def U(self, h):
         """Utilization at per-chip batch h (0 at h=0)."""
@@ -55,6 +62,15 @@ class HardwareModel:
         if n_tokens <= 0:
             return 0.0
         return n_tokens * self.prefill_flash / max(n_chips, 1)
+
+    def broadcast_time(self, n_bytes: float) -> float:
+        """Wall-time (flashes) to move `n_bytes` of weights over the
+        trainer->engine interconnect (one unicast hop). Atomic updates
+        charge this whole window as decode pause; streamed updates overlap
+        it with decode and pause only per-chunk installs (DESIGN.md §7)."""
+        if n_bytes <= 0:
+            return 0.0
+        return float(n_bytes) / self.bcast_bytes_per_flash
 
 
 # ---------------------------------------------------------------------------

@@ -178,7 +178,15 @@ def lower_program(arch_cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
     return LoweredProgram(f"{cfg.name}:{shape.name}", lowered)
 
 
-def lower_weight_update(arch_cfg: ModelConfig, mesh: Mesh) -> LoweredProgram:
+def lower_weight_update(arch_cfg: ModelConfig, mesh: Mesh, n_chunks: int = 1):
+    """Lower the trainer->generator weight transfer. n_chunks=1 (default)
+    returns the single whole-tree program; n_chunks>1 returns a *list* of
+    per-chunk programs over contiguous byte-balanced leaf spans — the
+    launcher-side twin of the engine's streamed in-flight broadcast
+    (DESIGN.md §7): each chunk's reshard collectives can be issued
+    between decode steps instead of one blocking all-at-once transfer."""
+    from repro.core.events import chunk_spans
+
     ann = abstract_params(arch_cfg)
     params = tree_values(ann)
     train_shard = tree_shardings(ann, mesh)
@@ -186,6 +194,21 @@ def lower_weight_update(arch_cfg: ModelConfig, mesh: Mesh) -> LoweredProgram:
     # 671B of expert weights over the data axis is 171 GB/dev — see §Perf-3)
     gen_rules = GEN_RULES if arch_cfg.param_count() < 40e9 else None
     gen_shard = tree_shardings(ann, mesh, gen_rules)
-    lowered = jax.jit(weight_update_fn, in_shardings=(train_shard,),
-                      out_shardings=gen_shard).lower(params)
-    return LoweredProgram(f"{arch_cfg.name}:weight_update", lowered)
+    if n_chunks <= 1:
+        lowered = jax.jit(weight_update_fn, in_shardings=(train_shard,),
+                          out_shardings=gen_shard).lower(params)
+        return LoweredProgram(f"{arch_cfg.name}:weight_update", lowered)
+    leaves, _ = jax.tree_util.tree_flatten(params)
+    tshard_leaves = jax.tree_util.tree_leaves(train_shard)
+    gshard_leaves = jax.tree_util.tree_leaves(gen_shard)
+    spans = chunk_spans(leaves, n_chunks)
+    programs = []
+    for i, (lo, hi) in enumerate(spans):
+        lowered = jax.jit(
+            weight_update_fn,
+            in_shardings=(tuple(tshard_leaves[lo:hi]),),
+            out_shardings=tuple(gshard_leaves[lo:hi]),
+        ).lower(tuple(leaves[lo:hi]))
+        programs.append(LoweredProgram(
+            f"{arch_cfg.name}:weight_update_chunk{i}", lowered))
+    return programs

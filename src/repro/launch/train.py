@@ -17,6 +17,7 @@ import json
 import os
 
 import jax
+import numpy as np
 
 from repro.checkpoint import checkpoint
 from repro.configs.tiny import config as tiny_config
@@ -45,6 +46,20 @@ def main() -> None:
     ap.add_argument("--max-len", type=int, default=16)
     ap.add_argument("--chips", type=int, default=8)
     ap.add_argument("--train-chips", type=int, default=4)
+    ap.add_argument("--engines", type=int, default=1,
+                    help="actor-pool size: independent generation engines "
+                         "sharing the N-T generation chips (DESIGN.md §7)")
+    ap.add_argument("--broadcast", choices=("streamed", "atomic", "free"),
+                    default="streamed",
+                    help="weight-publication mode: streamed chunks overlap "
+                         "decode (brief per-chunk pause), atomic stalls "
+                         "decode for the whole transfer, free is the "
+                         "legacy zero-cost swap")
+    ap.add_argument("--bcast-chunks", type=int, default=8,
+                    help="layer chunks per streamed publication")
+    ap.add_argument("--ckpt-pause", type=float, default=0.0,
+                    help="simulated trainer stall (flashes) every "
+                         "--ckpt-every steps (queue back-pressure study)")
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--d-model", type=int, default=96)
     ap.add_argument("--layers", type=int, default=2)
@@ -92,7 +107,12 @@ def main() -> None:
             PipelineConfig(batch_size=args.batch, n_opt_steps=args.steps,
                            n_chips=args.chips, train_chips=args.train_chips,
                            pack_rows=pack_rows, pack_seq=80,
-                           recompute_kv=args.recompute_kv),
+                           recompute_kv=args.recompute_kv,
+                           n_engines=args.engines, broadcast=args.broadcast,
+                           broadcast_chunks=args.bcast_chunks,
+                           ckpt_every=(args.ckpt_every if args.ckpt_pause
+                                       else 0),
+                           ckpt_pause=args.ckpt_pause),
             trainer=trainer, seed=args.seed, preprocessor=preprocessor)
     else:
         runner = ConventionalRL(
@@ -124,6 +144,14 @@ def main() -> None:
             print(f"eval @ step {trainer.version}: "
                   f"success_rate={ev['success_rate']:.3f} "
                   f"mean_len={ev['mean_len']:.1f}", flush=True)
+
+    if args.mode == "pipeline":
+        bs = runner.broadcast_stats()
+        eng = bs["engines"]
+        print(f"broadcast[{bs['mode']}]: {bs['published']} publications, "
+              f"mean decode pause/update = "
+              f"{np.mean([e['pause_per_update'] for e in eng]):.2f}f "
+              f"across {len(eng)} engine(s)", flush=True)
 
     if args.log_out:
         os.makedirs(os.path.dirname(args.log_out) or ".", exist_ok=True)

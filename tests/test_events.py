@@ -1,0 +1,390 @@
+"""Event-driven orchestrator (DESIGN.md §7): scheduler ordering, actor
+pool, streamed weight broadcast exactness + pause accounting, SampleQueue
+back-pressure under a trainer stall, fused preprocessor parity, and the
+chunked weight-update lowering."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.tiny import config as tiny_config
+from repro.core.events import EventLoop, chunk_spans, span_bytes, tree_bytes
+from repro.core.pipeline import PipelineConfig, PipelineRL
+from repro.core.preprocess import PreprocessConfig, Preprocessor
+from repro.core.queues import SampleQueue
+from repro.core.rollout import EngineConfig, GenerationEngine
+from repro.core.sim import HardwareModel
+from repro.data.math_task import MathTask
+from repro.data.packing import Rollout
+from repro.models import model as M
+from repro.sharding import tree_values
+
+
+@pytest.fixture(scope="module")
+def setup():
+    task = MathTask(max_operand=5, ops="+")
+    cfg = tiny_config(vocab_size=task.tok.vocab_size, d_model=64, n_layers=1)
+    params = tree_values(M.init_params(cfg, jax.random.PRNGKey(0)))
+    return task, cfg, params
+
+
+# ---------------------------------------------------------------------------
+# event loop
+# ---------------------------------------------------------------------------
+
+def test_event_loop_time_order_and_fifo_ties():
+    loop = EventLoop()
+    fired = []
+    loop.post(3.0, lambda t: fired.append(("c", t)))
+    loop.post(1.0, lambda t: fired.append(("a", t)))
+    loop.post(1.0, lambda t: fired.append(("b", t)))  # tie: FIFO
+    loop.run()
+    assert fired == [("a", 1.0), ("b", 1.0), ("c", 3.0)]
+    assert loop.now == 3.0
+
+
+def test_event_loop_clamps_past_and_resumes():
+    loop = EventLoop()
+    fired = []
+    loop.post(5.0, lambda t: loop.post(1.0, lambda u: fired.append(u)))
+    loop.run()
+    assert fired == [5.0]  # posting into the past clamps to now
+    # pending events survive a bounded run (resumability)
+    loop.post(7.0, lambda t: fired.append(t))
+    loop.run(until=lambda: len(fired) >= 1)
+    assert fired == [5.0]
+    loop.run()
+    assert fired == [5.0, 7.0]
+
+
+# ---------------------------------------------------------------------------
+# chunk plan helpers
+# ---------------------------------------------------------------------------
+
+def test_chunk_spans_cover_and_balance():
+    leaves = [np.zeros(n, np.float32) for n in (7, 1, 9, 4, 4, 2, 30, 3)]
+    for n_chunks in (1, 3, 8, 100):
+        spans = chunk_spans(leaves, n_chunks)
+        # contiguous, disjoint, complete cover
+        assert spans[0][0] == 0 and spans[-1][1] == len(leaves)
+        for (a, b), (c, d) in zip(spans, spans[1:]):
+            assert b == c and a < b
+        assert len(spans) <= n_chunks
+        assert sum(span_bytes(leaves, spans)) == tree_bytes(leaves)
+
+
+# ---------------------------------------------------------------------------
+# streamed weight stream on the engine
+# ---------------------------------------------------------------------------
+
+def test_weight_stream_swaps_only_on_last_chunk(setup):
+    task, cfg, params = setup
+    params2 = tree_values(M.init_params(cfg, jax.random.PRNGKey(9)))
+    eng = GenerationEngine(cfg, params, EngineConfig(n_slots=2, max_len=16),
+                           task.sample, seed=0)
+    sizes = eng.begin_weight_stream(params2, version=5, n_chunks=4)
+    assert len(sizes) >= 2 and sum(sizes) == tree_bytes(params2)
+    for _ in range(len(sizes) - 1):
+        assert eng.stream_weight_chunk() is False
+        assert eng.version == 0            # old mu until the swap
+        assert eng.params is params
+    assert eng.stream_weight_chunk() is True
+    assert eng.version == 5
+    # pointer swap delivers the exact published tree
+    for a, b in zip(jax.tree.leaves(eng.params), jax.tree.leaves(params2)):
+        assert a is b
+    assert not eng.stream_active
+
+
+def test_weight_stream_mid_sequence_versions_exact(setup):
+    """Tokens sampled while the stream is in flight stamp the OLD version;
+    tokens after the pointer swap stamp the new one (Fig. 3a exactness
+    across a non-instant transfer)."""
+    task, cfg, params = setup
+    eng = GenerationEngine(cfg, params, EngineConfig(n_slots=2, max_len=32),
+                           task.sample, seed=3)
+    eng.refill()
+    for _ in range(5):
+        eng.step(task)
+    eng.begin_weight_stream(params, version=7, n_chunks=3)
+    eng.step(task)                 # in-flight: still old version
+    eng.stream_weight_chunk()
+    eng.step(task)                 # still old (stream unfinished)
+    while not eng.stream_weight_chunk():
+        pass
+    rollouts = []
+    for _ in range(100):
+        rollouts.extend(eng.step(task))
+        if rollouts:
+            break
+    assert rollouts
+    vers = rollouts[0].weight_versions[rollouts[0].prompt_len:]
+    assert vers.min() == 0 and vers.max() == 7
+
+
+def test_slow_broadcast_still_makes_progress(setup):
+    """Starvation regression: when broadcast_time exceeds the publish
+    interval, the in-flight stream must COMPLETE (newest pending
+    publication waits) — the policy keeps updating instead of silently
+    running fully off-policy forever."""
+    task, cfg, params = setup
+    hw = HardwareModel(bcast_bytes_per_flash=10.0)  # transfer >> interval
+    pc = PipelineConfig(batch_size=4, n_opt_steps=8, n_chips=8, train_chips=4,
+                        pack_rows=2, pack_seq=48, broadcast="streamed")
+    p = PipelineRL(cfg, params, task, EngineConfig(n_slots=4, max_len=20),
+                   pc, hw=hw)
+    log = p.run()
+    assert p.engine.version > 0          # weights DID update
+    st = p.broadcast_stats()
+    assert st["engines"][0]["streams_completed"] > 0
+    # lag is large (slow interconnect) but finite and logged
+    assert all(np.isfinite(r["max_lag"]) for r in log)
+
+
+def test_preprocess_overlaps_trainer(setup):
+    """Fig. 4 contract: the preprocessor must be able to START a batch
+    while the trainer is busy (strict alternation = serialized latency,
+    the thing this stage exists to avoid)."""
+    task, cfg, params = setup
+    ref_params = tree_values(M.init_params(cfg, jax.random.PRNGKey(7)))
+    # long trainer step + long preprocess so windows are wide
+    pre = Preprocessor(cfg, ref_params,
+                       PreprocessConfig(kl_coef=0.05, max_len=20, n_chips=1))
+    hw = HardwareModel(tau=50.0)
+    pc = PipelineConfig(batch_size=4, n_opt_steps=6, n_chips=8, train_chips=4,
+                        pack_rows=2, pack_seq=48)
+    p = PipelineRL(cfg, params, task, EngineConfig(n_slots=8, max_len=20),
+                   pc, hw=hw, preprocessor=pre)
+    intervals = {"pre": [], "train": []}
+    orig_kick = p.pre_stage.kick
+
+    def kick(now):
+        busy0 = p.pre_stage.busy
+        orig_kick(now)
+        if not busy0 and p.pre_stage.busy:
+            intervals["pre"].append((now, p.pre_stage.busy_until))
+    p.pre_stage.kick = kick
+    p.trainer_stage.on_free = kick
+    orig_train = p.trainer_stage._train
+
+    def train(rollouts, raw, avail, now, on_done):
+        orig_train(rollouts, raw, avail, now, on_done)
+        intervals["train"].append((max(now, avail),
+                                   p.trainer_stage.free_at))
+    p.trainer_stage._train = train
+    p.run()
+    overlap = any(a < d and c < b
+                  for a, b in intervals["pre"]
+                  for c, d in intervals["train"])
+    assert overlap, (intervals)
+
+
+def test_atomic_set_weights_supersedes_stream(setup):
+    task, cfg, params = setup
+    params2 = tree_values(M.init_params(cfg, jax.random.PRNGKey(1)))
+    eng = GenerationEngine(cfg, params, EngineConfig(n_slots=2, max_len=16),
+                           task.sample, seed=0)
+    eng.begin_weight_stream(params2, version=3, n_chunks=4)
+    eng.stream_weight_chunk()
+    eng.set_weights(params2, version=9)
+    assert not eng.stream_active
+    assert eng.version == 9
+    assert eng.stream_weight_chunk() is False  # no-op, stream gone
+
+
+# ---------------------------------------------------------------------------
+# actor pool on the scheduler
+# ---------------------------------------------------------------------------
+
+def test_actor_pool_two_engines_runs_and_propagates(setup):
+    task, cfg, params = setup
+    pc = PipelineConfig(batch_size=4, n_opt_steps=5, n_chips=8, train_chips=4,
+                        pack_rows=2, pack_seq=48, n_engines=2)
+    p = PipelineRL(cfg, params, task, EngineConfig(n_slots=4, max_len=20), pc)
+    log = p.run()
+    assert len(log) == 5
+    assert [r["version"] for r in log] == [1, 2, 3, 4, 5]
+    times = [r["time"] for r in log]
+    assert times == sorted(times) and times[0] > 0
+    # both engines generated and both received in-flight updates
+    assert all(e.tokens_generated > 0 for e in p.engines)
+    assert all(e.version > 0 for e in p.engines)
+    # pool engines share one compiled step function (jit donor)
+    assert p.engines[1]._step is p.engines[0]._step
+    # lag structure: bounded, mixed-policy
+    warm = log[2:]
+    assert max(r["max_lag"] for r in warm) > 0
+    assert max(r["max_lag"] for r in warm) <= 10
+    assert all(r["mean_lag"] <= r["max_lag"] for r in warm)
+
+
+def test_actor_pool_staggered_arrivals(setup):
+    """Sequential unicast: engine 1's publication lands after engine 0's,
+    so with a slow interconnect engine 1 applies strictly fewer or equal
+    updates at any time — check final versions are <=."""
+    task, cfg, params = setup
+    hw = HardwareModel(bcast_bytes_per_flash=50.0)  # very slow broadcast
+    pc = PipelineConfig(batch_size=4, n_opt_steps=4, n_chips=8, train_chips=4,
+                        pack_rows=2, pack_seq=48, n_engines=2,
+                        broadcast="streamed")
+    p = PipelineRL(cfg, params, task, EngineConfig(n_slots=4, max_len=20),
+                   pc, hw=hw)
+    p.run()
+    assert p.engines[1].version <= p.engines[0].version
+
+
+# ---------------------------------------------------------------------------
+# broadcast pause accounting
+# ---------------------------------------------------------------------------
+
+def test_streamed_pause_below_atomic(setup):
+    task, cfg, params = setup
+    stats = {}
+    for mode in ("streamed", "atomic", "free"):
+        pc = PipelineConfig(batch_size=4, n_opt_steps=4, n_chips=8,
+                            train_chips=4, pack_rows=2, pack_seq=48,
+                            broadcast=mode)
+        hw = HardwareModel(bcast_bytes_per_flash=2e3, bcast_install_flash=1.0)
+        p = PipelineRL(cfg, params, task,
+                       EngineConfig(n_slots=4, max_len=20), pc, hw=hw)
+        log = p.run()
+        times = [r["time"] for r in log]
+        assert times == sorted(times)
+        st = p.broadcast_stats()
+        eng = st["engines"][0]
+        stats[mode] = eng
+        assert st["mode"] == mode
+        assert st["published"] >= 1
+    assert stats["free"]["pause_total"] == 0.0
+    assert stats["atomic"]["pause_per_update"] > 0
+    assert stats["streamed"]["updates_applied"] > 0
+    assert (stats["streamed"]["pause_per_update"]
+            < stats["atomic"]["pause_per_update"])
+
+
+# ---------------------------------------------------------------------------
+# SampleQueue back-pressure (drop-oldest) + trainer stall
+# ---------------------------------------------------------------------------
+
+def _mk_rollout(i):
+    return Rollout(tokens=np.zeros(4, np.int32), prompt_len=1,
+                   behavior_logprobs=np.zeros(4, np.float32), reward=float(i),
+                   weight_versions=np.zeros(4, np.int32), prompt_key=i)
+
+
+def test_sample_queue_drop_oldest_counters():
+    q = SampleQueue(maxsize=4)
+    q.put([_mk_rollout(i) for i in range(10)])
+    assert len(q) == 4
+    assert q.total_put == 10
+    assert q.dropped == 6
+    assert q.high_watermark == 4
+    # drop-OLDEST: the newest 4 survive
+    assert [r.prompt_key for r in q.pop(4)] == [6, 7, 8, 9]
+    with pytest.raises(ValueError):
+        q.pop(1)
+
+
+def test_trainer_stall_backpressure_bounds_lag(setup):
+    """Checkpoint-pause scenario on the scheduler: with a bounded queue the
+    drop-oldest policy keeps max lag bounded across the stall; unbounded,
+    the stall's backlog shows up as strictly more queued samples."""
+    task, cfg, params = setup
+    ec = EngineConfig(n_slots=8, max_len=20)
+
+    def run(maxsize):
+        pc = PipelineConfig(batch_size=4, n_opt_steps=8, n_chips=8,
+                            train_chips=4, pack_rows=2, pack_seq=48,
+                            queue_maxsize=maxsize,
+                            ckpt_every=3, ckpt_pause=50_000.0)
+        p = PipelineRL(cfg, params, task, ec, pc)
+        log = p.run()
+        return p, log
+
+    p_bounded, log_b = run(maxsize=8)
+    p_unbounded, log_u = run(maxsize=None)
+    assert p_bounded.trainer_stage.stalls >= 2
+    # the stall forced drops on the bounded queue, none on the unbounded
+    assert p_bounded.queue.dropped > 0
+    assert p_unbounded.queue.dropped == 0
+    assert p_bounded.queue.total_put > 0
+    # drop-oldest keeps the post-stall batch fresher: the bounded queue's
+    # worst-case token lag may not exceed the unbounded run's
+    assert (max(r["max_lag"] for r in log_b)
+            <= max(r["max_lag"] for r in log_u))
+    # queue depth at pop time is visible in the log and larger unbounded
+    assert (max(r["queue_depth"] for r in log_u)
+            >= max(r["queue_depth"] for r in log_b))
+
+
+# ---------------------------------------------------------------------------
+# overlapped preprocessor stage
+# ---------------------------------------------------------------------------
+
+def test_preprocessor_stage_overlaps_and_shapes(setup):
+    task, cfg, params = setup
+    ref_params = tree_values(M.init_params(cfg, jax.random.PRNGKey(7)))
+    pre = Preprocessor(cfg, ref_params,
+                       PreprocessConfig(kl_coef=0.05, max_len=20))
+    pc = PipelineConfig(batch_size=4, n_opt_steps=4, n_chips=8, train_chips=4,
+                        pack_rows=2, pack_seq=48)
+    p = PipelineRL(cfg, params, task, EngineConfig(n_slots=8, max_len=20),
+                   pc, preprocessor=pre)
+    log = p.run()
+    assert len(log) == 4
+    assert p.pre_stage is not None and p.pre_stage.batches >= 4
+    assert all(np.isfinite(r["loss"]) for r in log)
+    times = [r["time"] for r in log]
+    assert times == sorted(times)
+
+
+# ---------------------------------------------------------------------------
+# fused ref_logprobs parity (ROADMAP PR-3 follow-up)
+# ---------------------------------------------------------------------------
+
+def test_preprocessor_fused_ref_logprobs_parity(setup):
+    task, cfg, params = setup
+    ref_params = tree_values(M.init_params(cfg, jax.random.PRNGKey(7)))
+    eng = GenerationEngine(cfg, params, EngineConfig(n_slots=4, max_len=16),
+                           task.sample, seed=2)
+    eng.refill()
+    rollouts = []
+    for _ in range(40):
+        rollouts.extend(eng.step(task))
+        if eng.n_active == 0:
+            break
+    assert rollouts
+    import copy
+    cfg_fused = dataclasses.replace(cfg, fused_loss=True)
+    pcfg = PreprocessConfig(kl_coef=0.1, max_len=16)
+    out_logits = Preprocessor(cfg, ref_params, pcfg).process(
+        [copy.copy(r) for r in rollouts])
+    out_fused = Preprocessor(cfg_fused, ref_params, pcfg).process(
+        [copy.copy(r) for r in rollouts])
+    for a, b in zip(out_logits, out_fused):
+        np.testing.assert_allclose(a.ref_logprobs, b.ref_logprobs,
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(a.token_rewards, b.token_rewards,
+                                   rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# chunked weight-update lowering (launch-side twin of the stream)
+# ---------------------------------------------------------------------------
+
+def test_lower_weight_update_chunked(setup):
+    from jax.sharding import Mesh
+    from repro.launch.steps import lower_weight_update
+    _, cfg, _ = setup
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+    whole = lower_weight_update(cfg, mesh)
+    assert whole.name.endswith("weight_update")
+    progs = lower_weight_update(cfg, mesh, n_chunks=3)
+    assert isinstance(progs, list) and 2 <= len(progs) <= 3
+    names = [p.name for p in progs]
+    assert len(set(names)) == len(names)
+    for p in progs:
+        assert p.lowered is not None

@@ -21,11 +21,12 @@ def setup():
     return task, cfg, params
 
 
-def test_pipeline_runs_and_logs(setup):
+@pytest.mark.parametrize("n_engines", [1, 2])
+def test_pipeline_runs_and_logs(setup, n_engines):
     task, cfg, params = setup
     ec = EngineConfig(n_slots=8, max_len=20)
     pc = PipelineConfig(batch_size=4, n_opt_steps=4, n_chips=8, train_chips=4,
-                        pack_rows=2, pack_seq=48)
+                        pack_rows=2, pack_seq=48, n_engines=n_engines)
     p = PipelineRL(cfg, params, task, ec, pc)
     log = p.run()
     assert len(log) == 4
@@ -34,12 +35,13 @@ def test_pipeline_runs_and_logs(setup):
     assert all("ess" in r for r in log)
 
 
-def test_pipeline_lag_bounded_and_mixed(setup):
+@pytest.mark.parametrize("n_engines", [1, 2])
+def test_pipeline_lag_bounded_and_mixed(setup, n_engines):
     """Fig 3a: PipelineRL batches have a stable, bounded max lag once warm."""
     task, cfg, params = setup
     ec = EngineConfig(n_slots=8, max_len=20)
     pc = PipelineConfig(batch_size=4, n_opt_steps=8, n_chips=8, train_chips=4,
-                        pack_rows=2, pack_seq=48)
+                        pack_rows=2, pack_seq=48, n_engines=n_engines)
     p = PipelineRL(cfg, params, task, ec, pc)
     log = p.run()
     warm = log[3:]

@@ -65,6 +65,32 @@ def test_server_idle_steps_safe(setup):
     for _ in range(3):
         assert srv.step() == []
     assert srv.metrics()["served"] == 0
+    # idle steps still consume wall time (dt each): a request submitted
+    # after an idle period must not get its latency backdated
+    assert srv.clock == pytest.approx(3.0)
+
+
+def test_server_streamed_update_installs_across_steps(setup):
+    """Streamed publication on the serving front: one chunk per step, the
+    version flips only after the final pointer swap, nothing dropped."""
+    task, cfg, params = setup
+    params2 = tree_values(M.init_params(cfg, jax.random.PRNGKey(9)))
+    srv = Server(cfg, params, EngineConfig(n_slots=4, max_len=16))
+    srv.connect_trainer(lambda: (params2, 4))
+    for _ in range(8):
+        srv.submit(task.sample().prompt_ids)
+    srv.step()
+    assert srv.request_weight_update(streamed=True, n_chunks=3) == 4
+    assert srv.engine.version == 0          # transfer not finished yet
+    for i in range(200):
+        srv.step()
+        if len(srv.done) == 8:
+            break
+    assert srv.engine.version == 4          # pointer swap landed
+    assert srv.metrics()["streams_completed"] == 1
+    assert len(srv.done) == 8
+    assert any(r.weight_versions is not None and r.weight_versions.max() == 4
+               for r in srv.done)
 
 
 # ---------------------------------------------------------------------------
