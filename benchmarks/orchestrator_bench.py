@@ -9,6 +9,11 @@ new measurable surfaces.
   2. pipeline-vs-conventional throughput (simulated flashes to a fixed
      optimizer-step budget) across actor-pool sizes — the engine-count
      sweep the single-engine orchestrator couldn't express
+  3. heterogeneous pool scheduling: a 2-engine pool with a 2x/1x chip
+     split fed a bimodal prompt-length stream, length-affinity routing
+     vs FIFO — long prompts (cheap prefill, short remaining completion
+     budget) land on the fast chip, so the straggler engine stops
+     gating the SampleQueue
 
 Emits ``BENCH_orchestrator.json`` (same schema discipline as
 ``BENCH_trainer.json``) so the perf trajectory covers the orchestration
@@ -43,6 +48,49 @@ N_CHIPS, TRAIN_CHIPS = 8, 4
 # result; absolute flash numbers scale with the knob)
 HW = HardwareModel(h_sat=16, bcast_bytes_per_flash=2e3,
                    bcast_install_flash=1.0)
+
+
+def _bimodal_source(task, long_len: int = 26):
+    """Deterministic alternating short/long prompt stream: every other
+    prompt is left-padded with leading zeros after BOS to `long_len`
+    tokens — same answer, same reward, ~4x the prefill work. The fixed
+    task seed makes the stream identical across router policies."""
+    zero = task.tok.stoi["0"]
+
+    def sample():
+        prob = task.sample()
+        i = sample.i
+        sample.i += 1
+        if i % 2:
+            pad = long_len - len(prob.prompt_ids)
+            if pad > 0:
+                prob.prompt_ids = ([prob.prompt_ids[0]] + [zero] * pad
+                                   + prob.prompt_ids[1:])
+        return prob
+
+    sample.i = 0
+    return sample
+
+
+# generation-bound variant for the hetero scenario: a fast trainer keeps
+# the sim time gated by rollout arrival, so the router's effect on the
+# *generation* side is what the number measures (with the default tau the
+# run is trainer-bound and any routing policy washes out)
+HW_HETERO = HardwareModel(h_sat=16, tau=0.8)
+
+
+def _hetero_pipeline(router: str, steps: int = 6) -> PipelineRL:
+    task, cfg, params = tiny_setup(d_model=64, n_layers=1)
+    trainer = Trainer(cfg, params, adam=AdamConfig(lr=1e-3))
+    p = PipelineRL(
+        cfg, params, task, EngineConfig(n_slots=8, max_len=32),
+        PipelineConfig(batch_size=BATCH, n_opt_steps=steps,
+                       n_chips=N_CHIPS, train_chips=TRAIN_CHIPS,
+                       pack_rows=2, pack_seq=48, n_engines=2,
+                       engine_speeds=[2.0, 1.0], router=router),
+        hw=HW_HETERO, trainer=trainer, prompt_source=_bimodal_source(task))
+    p.run()
+    return p
 
 
 def _pipeline(broadcast: str, n_engines: int = 1,
@@ -134,6 +182,30 @@ def orchestrator_benchmarks() -> List[Row]:
         rows.append((f"orchestrator/speedup_e{n_eng}_vs_conv", 0.0,
                      f"speedup={sp:.2f}x"))
     payload["engine_sweep"] = sweep
+
+    # --- 3. heterogeneous pool: length-affinity routing vs FIFO -------
+    hetero: Dict[str, Dict] = {}
+    for router in ("fifo", "length_affinity"):
+        p = _hetero_pipeline(router)
+        tokens = sum(e.tokens_generated for e in p.engines)
+        t = p.log[-1]["time"]
+        hetero[router] = {
+            "engines": 2, "engine_speeds": [2.0, 1.0],
+            "sim_time_flashes": t,
+            "tokens_generated": tokens,
+            "tokens_per_flash": tokens / max(t, 1e-9),
+            "max_lag": max(r["max_lag"] for r in p.log),
+            "router": p.router_stats(),
+        }
+        rows.append((f"orchestrator/hetero_{router}", 0.0,
+                     f"sim_t={t:.0f}f;"
+                     f"tok_per_flash={hetero[router]['tokens_per_flash']:.4f}"))
+    sp = (hetero["fifo"]["sim_time_flashes"]
+          / max(hetero["length_affinity"]["sim_time_flashes"], 1e-9))
+    hetero["affinity_speedup_vs_fifo"] = sp
+    rows.append(("orchestrator/hetero_affinity_vs_fifo", 0.0,
+                 f"speedup={sp:.2f}x"))
+    payload["hetero_pool"] = hetero
 
     with open(JSON_PATH, "w") as f:
         json.dump(payload, f, indent=2)

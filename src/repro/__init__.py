@@ -12,7 +12,8 @@ Public API (the paper's contribution as a composable module):
 from repro.core.algo import RLConfig
 from repro.core.conventional import ConventionalConfig, ConventionalRL
 from repro.core.events import (
-    ActorStage, EventLoop, PreprocessStage, TrainerStage, WeightBroadcaster,
+    ActorStage, EventLoop, PoolRouter, PreprocessStage, TrainerStage,
+    WeightBroadcaster,
 )
 from repro.core.pipeline import PipelineConfig, PipelineRL
 from repro.core.preprocess import PreprocessConfig, Preprocessor
@@ -24,6 +25,7 @@ from repro.core.trainer import Trainer
 __all__ = [
     "ActorStage", "ConventionalConfig", "ConventionalRL", "EngineConfig",
     "EventLoop", "GenerationEngine", "HardwareModel", "PipelineConfig",
-    "PipelineRL", "PreprocessConfig", "Preprocessor", "PreprocessStage",
-    "RLConfig", "Server", "Trainer", "TrainerStage", "WeightBroadcaster",
+    "PipelineRL", "PoolRouter", "PreprocessConfig", "Preprocessor",
+    "PreprocessStage", "RLConfig", "Server", "Trainer", "TrainerStage",
+    "WeightBroadcaster",
 ]

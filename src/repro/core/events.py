@@ -21,6 +21,16 @@ its own cost model, e.g. the Server's step-denominated clock):
                     refills. Goes idle when the engine drains and
                     `auto_refill` is off (ConventionalRL's phase end) or
                     when externally driven (`chain=False`, the Server).
+                    `preempt(at, d)` takes the engine offline for
+                    [at, at+d): ticks starting inside the window defer to
+                    its end; in-flight slots are untouched and resume.
+  PoolRouter        pluggable admission between one shared prompt source
+                    and the pool's engines: fifo (pass-through pull,
+                    today's behavior), shortest_queue (decline engines
+                    whose speed-normalized backlog is deep), and
+                    length_affinity (buffer `lookahead` pending prompts;
+                    fast engines take the longest, slow the shortest —
+                    long-prompt prefill lands on the cheapest compute).
   PreprocessStage   pulls B rollouts from the SampleQueue when free,
                     holds them for `stage_time`, delivers the processed
                     batch to the trainer — an *overlapped* stage on its
@@ -221,6 +231,10 @@ class ActorStage:
         self._atomic: List[Tuple[float, Any, int, float]] = []
         self._stream: Optional[Dict[str, Any]] = None
         self._next_stream: Optional[Tuple] = None   # newest pending publish
+        # timed preemption windows [start, end) — sorted by start
+        self._preempt: List[Tuple[float, float]] = []
+        self.preempt_total = 0.0           # wall-time spent offline
+        self.preemptions_taken = 0         # deferrals actually hit
         # accounting (read by orchestrators / benchmarks)
         self.updates_applied = 0
         self.streams_completed = 0
@@ -304,6 +318,32 @@ class ActorStage:
         self.pause_total += pause
         return pause
 
+    # ---- preemption (DESIGN.md §7 pool scheduling) ---------------------
+    def preempt(self, start: float, duration: float) -> None:
+        """Take the engine offline for [start, start+duration): any tick
+        that would *begin* inside the window is deferred to the window
+        end (a decode step already under way when the window opens
+        completes — discrete-event granularity, checkpoint-style
+        preemption). In-flight slots keep their KV/recurrent state and
+        resume untouched; weight publications that arrive during the
+        window install at the deferred tick. Overlapping and abutting
+        windows compose."""
+        if duration <= 0:
+            return
+        self._preempt.append((float(start), float(start) + float(duration)))
+        self._preempt.sort()
+
+    def _preempt_until(self, now: float) -> Optional[float]:
+        """Resume time if `now` falls inside a preemption window (chained
+        windows are followed transitively); None when online. Windows
+        wholly in the past are discarded."""
+        t = now
+        for s, e in self._preempt:
+            if s <= t < e:
+                t = e
+        self._preempt = [(s, e) for (s, e) in self._preempt if e > t]
+        return t if t > now else None
+
     # ---- lifecycle -----------------------------------------------------
     def start(self, t: float) -> None:
         if not self.running:
@@ -321,6 +361,12 @@ class ActorStage:
     def tick(self, now: float) -> None:
         """One decode step: install weights -> (refill) -> step -> deliver
         -> (refill) -> reschedule."""
+        resume = self._preempt_until(now)
+        if resume is not None:
+            self.preempt_total += resume - now
+            self.preemptions_taken += 1
+            self.loop.post(resume, self.tick)
+            return
         pause = self._install_weights(now)
         c_pre = 0.0
         if self.auto_refill and (self.refill_first
@@ -357,6 +403,137 @@ class ActorStage:
             self.loop.post(t_done, self.tick)
         else:
             self.running = False
+
+
+# ---------------------------------------------------------------------------
+# pool router (priority/affinity admission across the actor pool)
+# ---------------------------------------------------------------------------
+
+class PoolRouter:
+    """Pluggable admission layer between one shared prompt source and the
+    engines of an actor pool (DESIGN.md §7 "Pool scheduling").
+
+    Engines keep their pull-based admission: each free slot asks its
+    per-engine view (`source_for(i)`) for a prompt during refill. The
+    router decides what that pull returns:
+
+      fifo             pass-through: the requesting engine takes the next
+                       prompt from the source — bit-identical to wiring
+                       the source into every engine directly (default).
+      shortest_queue   the requesting engine is granted the next prompt
+                       only while its speed-normalized outstanding decode
+                       work is within `slack` tokens of the pool minimum;
+                       otherwise the pull is declined (the slot stays
+                       free and is re-offered at the engine's next tick),
+                       so slow/deep engines stop hoarding prompts.
+      length_affinity  the router keeps up to `lookahead` pending prompts
+                       drawn from the source; engines at or above the
+                       mean pool speed take the *longest* pending prompt,
+                       slower engines the *shortest* — long prompts'
+                       prefill (and their short remaining completion
+                       budget) land on the cheapest compute.
+
+    All decisions read only the prompt stream and the engines' host
+    mirrors (`_host_active`/`_host_ncached` — the prompt-length histogram
+    the engines already keep on host): no wall-clock, no RNG, so routing
+    is deterministic under the simulated clock.
+    """
+
+    POLICIES = ("fifo", "shortest_queue", "length_affinity")
+
+    def __init__(self, source: Callable[[], Optional[Any]],
+                 policy: str = "fifo", lookahead: int = 0,
+                 slack: Optional[float] = None):
+        if policy not in self.POLICIES:
+            raise ValueError(f"unknown router policy {policy!r}; "
+                             f"choose from {self.POLICIES}")
+        self.source, self.policy = source, policy
+        self.lookahead, self.slack = int(lookahead), slack
+        self.pending: deque = deque()
+        self.engines: List[Any] = []
+        self.speeds: List[float] = []
+        self.assigned: List[int] = []
+        self.assigned_tokens: List[int] = []
+        self.declined: List[int] = []
+
+    def attach(self, engines: Sequence[Any],
+               speeds: Optional[Sequence[float]] = None) -> None:
+        self.engines = list(engines)
+        n = len(self.engines)
+        self.speeds = [float(s) for s in speeds] if speeds is not None \
+            else [1.0] * n
+        if len(self.speeds) != n:
+            raise ValueError(f"{len(self.speeds)} speeds for {n} engines")
+        self.assigned = [0] * n
+        self.assigned_tokens = [0] * n
+        self.declined = [0] * n
+        if self.lookahead <= 0:
+            self.lookahead = sum(e.ec.n_slots for e in self.engines)
+        if self.slack is None:
+            self.slack = float(max(e.ec.max_len for e in self.engines))
+
+    def source_for(self, i: int) -> Callable[[], Optional[Any]]:
+        """The prompt-source callable engine `i` pulls from."""
+        return lambda: self.request(i)
+
+    # ---- internals -----------------------------------------------------
+    def _load(self, j: int) -> float:
+        """Speed-normalized outstanding decode work of engine j: remaining
+        token budget of its active slots, in slow-chip token units."""
+        eng = self.engines[j]
+        act = eng._host_active
+        rem = int((eng.ec.max_len - 1 - eng._host_ncached[act]).sum())
+        return rem / max(self.speeds[j], 1e-9)
+
+    def _draw(self) -> Optional[Any]:
+        if self.pending:
+            return self.pending.popleft()
+        return self.source()
+
+    def _grant(self, i: int, prob: Any) -> Any:
+        self.assigned[i] += 1
+        self.assigned_tokens[i] += len(prob.prompt_ids)
+        return prob
+
+    # ---- the per-engine pull -------------------------------------------
+    def request(self, i: int) -> Optional[Any]:
+        if self.policy == "shortest_queue":
+            loads = [self._load(j) for j in range(len(self.engines))]
+            if loads[i] - min(loads) > self.slack:
+                self.declined[i] += 1
+                return None
+        if self.policy != "length_affinity":
+            prob = self._draw()
+            return self._grant(i, prob) if prob is not None else None
+        # length_affinity: top up the pending buffer, then pick by length
+        while len(self.pending) < self.lookahead:
+            p = self.source()
+            if p is None:
+                break
+            self.pending.append(p)
+        if not self.pending:
+            return None
+        lens = [len(p.prompt_ids) for p in self.pending]
+        mean_speed = sum(self.speeds) / max(len(self.speeds), 1)
+        if self.speeds[i] >= mean_speed:
+            # ties break toward the earliest pending prompt (FIFO within
+            # equal lengths) so routing stays deterministic
+            k = max(range(len(lens)), key=lambda j: (lens[j], -j))
+        else:
+            k = min(range(len(lens)), key=lambda j: (lens[j], j))
+        prob = self.pending[k]
+        del self.pending[k]
+        return self._grant(i, prob)
+
+    def stats(self) -> Dict[str, Any]:
+        return {
+            "policy": self.policy,
+            "pending": len(self.pending),
+            "engines": [
+                {"assigned": a, "prompt_tokens": t, "declined": d}
+                for a, t, d in zip(self.assigned, self.assigned_tokens,
+                                   self.declined)],
+        }
 
 
 # ---------------------------------------------------------------------------

@@ -24,14 +24,14 @@ boundary — token-granular in-flight updates, exactly Figure 1(b).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.events import (
-    ActorStage, EventLoop, PreprocessStage, TrainerStage, WeightBroadcaster,
-    apply_group_baseline, lag_stats,
+    ActorStage, EventLoop, PoolRouter, PreprocessStage, TrainerStage,
+    WeightBroadcaster, apply_group_baseline, lag_stats,
 )
 from repro.core.queues import SampleQueue
 from repro.core.rollout import EngineConfig, GenerationEngine
@@ -64,6 +64,14 @@ class PipelineConfig:
     #                               the N-T generation chips
     broadcast: str = "streamed"   # "streamed" | "atomic" | "free"
     broadcast_chunks: int = 8     # layer chunks per streamed publication
+    # --- pool scheduling (DESIGN.md §7 "Pool scheduling") -------------
+    # per-engine HardwareModel speed overrides (len == n_engines): a
+    # heterogeneous pool of slow/fast chips. None = homogeneous (1.0).
+    engine_speeds: Optional[Sequence[float]] = None
+    router: str = "fifo"          # PoolRouter policy: "fifo" |
+    #                               "shortest_queue" | "length_affinity"
+    router_lookahead: int = 0     # pending-prompt buffer (0 = pool slots)
+    router_slack: Optional[float] = None  # shortest_queue admission slack
     # --- trainer-stall scenario (checkpoint pause every k steps) ------
     ckpt_every: int = 0
     ckpt_pause: float = 0.0       # flashes the trainer stalls per ckpt
@@ -85,7 +93,8 @@ class PipelineRL:
                  ec: EngineConfig, pc: PipelineConfig,
                  hw: HardwareModel = HardwareModel(),
                  trainer: Optional[Trainer] = None, seed: int = 0,
-                 preprocessor=None):
+                 preprocessor=None,
+                 prompt_source: Optional[Callable] = None):
         self.cfg, self.task, self.ec, self.pc, self.hw = cfg, task, ec, pc, hw
         self.trainer = trainer or Trainer(cfg, params)
         self.preprocessor = preprocessor  # paper Fig. 4 middle stage
@@ -95,15 +104,30 @@ class PipelineRL:
 
         # --- actor pool: n_engines independent engines, each with its own
         # clock and an equal share of the N-T generation chips; identical
-        # configs share one set of compiled step functions (jit_donor)
+        # configs share one set of compiled step functions (jit_donor).
+        # The shared prompt source feeds the pool through a PoolRouter
+        # (fifo = the pass-through pull, bit-identical to pre-router
+        # behavior); per-engine HardwareModel speed overrides make the
+        # pool heterogeneous (DESIGN.md §7 "Pool scheduling").
         n_eng = max(int(pc.n_engines), 1)
         chips_per_engine = self.gen_chips / n_eng
+        speeds = ([float(s) for s in pc.engine_speeds]
+                  if pc.engine_speeds is not None else [1.0] * n_eng)
+        if len(speeds) != n_eng:
+            raise ValueError(f"engine_speeds has {len(speeds)} entries "
+                             f"for n_engines={n_eng}")
+        self.engine_speeds = speeds
+        self.router = PoolRouter(prompt_source or task.sample,
+                                 policy=pc.router,
+                                 lookahead=pc.router_lookahead,
+                                 slack=pc.router_slack)
         self.engines: List[GenerationEngine] = []
         for i in range(n_eng):
             donor = self.engines[0] if self.engines else None
             self.engines.append(GenerationEngine(
-                cfg, self.trainer.params, ec, task.sample,
+                cfg, self.trainer.params, ec, self.router.source_for(i),
                 seed=seed + 1009 * i, jit_donor=donor))
+        self.router.attach(self.engines, speeds)
 
         self.trainer_stage = TrainerStage(
             self.loop, self.trainer,
@@ -130,10 +154,10 @@ class PipelineRL:
         self.actors: List[ActorStage] = [
             ActorStage(
                 self.loop, eng, task=task, name=f"actor{i}",
-                step_cost=lambda h, c=chips_per_engine: hw.step_cost(
-                    h / max(c, 1e-9)),
-                prefill_cost=lambda toks, inv, c=chips_per_engine:
-                    hw.prefill_time(toks, max(c, 1)),
+                step_cost=lambda h, c=chips_per_engine,
+                    m=hw.scaled(speeds[i]): m.step_cost(h / max(c, 1e-9)),
+                prefill_cost=lambda toks, inv, c=chips_per_engine,
+                    m=hw.scaled(speeds[i]): m.prefill_time(toks, max(c, 1)),
                 deliver=_deliver, recompute_kv=pc.recompute_kv)
             for i, eng in enumerate(self.engines)]
         self.broadcaster = WeightBroadcaster(
@@ -162,6 +186,17 @@ class PipelineRL:
         """Per-engine weight-publication accounting: updates applied,
         decode pause charged per update, streams completed/aborted."""
         return self.broadcaster.stats()
+
+    def router_stats(self) -> Dict:
+        """Per-engine admission accounting (PoolRouter): prompts assigned,
+        prompt tokens routed, pulls declined."""
+        st = self.router.stats()
+        for eng_stats, actor, speed in zip(st["engines"], self.actors,
+                                           self.engine_speeds):
+            eng_stats["name"] = actor.name
+            eng_stats["speed"] = speed
+            eng_stats["preempt_total"] = actor.preempt_total
+        return st
 
     # ----- run ----------------------------------------------------------
     def run(self, n_opt_steps: Optional[int] = None) -> List[Dict]:

@@ -28,7 +28,12 @@ from repro.models import model as M
 class PreprocessConfig:
     kl_coef: float = 0.0        # beta; 0 disables the KL term
     n_chips: int = 2            # preprocessor workers (sim timing)
-    max_len: int = 64           # padding bucket for the jitted ref forward
+    # hard cap on rollout length (the engine's max_len). The jitted ref
+    # forward pads each batch to the next power of two of its longest
+    # rollout, bounded by this — at most log2(max_len) trace buckets, and
+    # a rollout can never be silently clipped to a shorter buffer (which
+    # used to drop the KL term on the tail of long rollouts).
+    max_len: int = 64
     fwd_flashes_per_token: float = 4.92 / 3.0  # forward-only share of tau
 
 
@@ -40,38 +45,64 @@ class Preprocessor:
         self.ref_params = ref_params
 
         @jax.jit
-        def ref_logprobs(params, tokens, positions):
+        def ref_logprobs(params, tokens, positions, lengths):
+            T = tokens.shape[1]
             if cfg.fused_loss:
                 # the KL penalty only needs per-token ref logprobs of the
                 # rollout's own tokens — exactly the fused-loss contract
                 # (DESIGN.md §6): pass the next-token targets and let the
                 # blockwise kernel return token_logprobs without ever
-                # materializing the (B,S,V) ref logits
-                tgt = jnp.concatenate([tokens[:, 1:], tokens[:, -1:]],
-                                      axis=1)
+                # materializing the (B,S,V) ref logits. The final target
+                # column is dead (nothing to predict) — fill it with pad,
+                # never a duplicate of the row's own last token, so no
+                # self-scored logprob exists even pre-shift.
+                tgt = jnp.concatenate(
+                    [tokens[:, 1:], jnp.zeros_like(tokens[:, -1:])], axis=1)
                 out = M.forward(params, tokens, positions, cfg,
                                 loss_targets=tgt)
-                return out["token_logprobs"]
-            out = M.forward(params, tokens, positions, cfg)
-            return token_logprobs(out["logits"], tokens)
+                lp = out["token_logprobs"]
+            else:
+                out = M.forward(params, tokens, positions, cfg)
+                lp = token_logprobs(out["logits"], tokens)
+            # mask the pad tail (and with it the dead last position of
+            # rows shorter than the bucket): entries at positions >= the
+            # rollout's length are pad-token logprobs in the unfused path
+            # and kernel garbage in the fused one — zero in both, so the
+            # two paths agree entry-for-entry over the whole buffer
+            valid = jnp.arange(T)[None, :] < lengths[:, None]
+            return jnp.where(valid, lp, 0.0)
 
         self._ref_logprobs = ref_logprobs
+
+    @staticmethod
+    def _bucket(max_rollout_len: int, cap: int) -> int:
+        """Next power of two >= the longest rollout, bounded by `cap`."""
+        return min(1 << max(int(max_rollout_len) - 1, 0).bit_length(), cap)
 
     def process(self, rollouts: List[Rollout]) -> List[Rollout]:
         if not rollouts:
             return rollouts
-        T = self.pc.max_len
         n = len(rollouts)
+        max_len = max(r.length for r in rollouts)
+        if max_len > self.pc.max_len:
+            raise ValueError(
+                f"rollout of length {max_len} exceeds PreprocessConfig."
+                f"max_len={self.pc.max_len}; the ref forward would clip it "
+                f"and silently drop the KL term on the tail — raise "
+                f"max_len to the engine's max_len")
+        T = self._bucket(max_len, self.pc.max_len)
         toks = np.zeros((n, T), np.int32)
+        lens = np.zeros(n, np.int32)
         for i, r in enumerate(rollouts):
-            L = min(r.length, T)
-            toks[i, :L] = r.tokens[:L]
+            toks[i, :r.length] = r.tokens
+            lens[i] = r.length
         pos = jnp.broadcast_to(jnp.arange(T)[None], (n, T))
         ref_lp = np.asarray(self._ref_logprobs(self.ref_params,
-                                               jnp.asarray(toks), pos))
+                                               jnp.asarray(toks), pos,
+                                               jnp.asarray(lens)))
         out = []
         for i, r in enumerate(rollouts):
-            L = min(r.length, T)
+            L = r.length
             r.ref_logprobs = ref_lp[i, :L].copy()
             if self.pc.kl_coef > 0:
                 mask = np.arange(L) >= r.prompt_len
@@ -81,6 +112,8 @@ class Preprocessor:
                 n_tok = max(int(mask.sum()), 1)
                 r.token_rewards = (np.full(L, r.reward / n_tok, np.float32)
                                    * mask - penalty)
+                assert len(r.token_rewards) == r.length
+            assert len(r.ref_logprobs) == r.length
             out.append(r)
         return out
 

@@ -23,10 +23,13 @@ class SampleQueue:
         for r in rollouts:
             self.buf.append(r)
             self.total_put += 1
+            # sample depth BEFORE the drop: the intra-put peak (maxsize+1
+            # while a drop is pending) is the telemetry that shows the
+            # queue actually overflowed, not merely sat full
+            self.high_watermark = max(self.high_watermark, len(self.buf))
             if self.maxsize is not None and len(self.buf) > self.maxsize:
                 self.buf.popleft()  # ring-buffer semantics: drop oldest
                 self.dropped += 1
-        self.high_watermark = max(self.high_watermark, len(self.buf))
 
     def pop(self, n: int) -> List[Rollout]:
         if len(self.buf) < n:

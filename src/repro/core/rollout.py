@@ -49,6 +49,20 @@ class EngineConfig:
     # Pallas interpret-mode override threaded into every kernel the engine
     # compiles (None = auto: interpret off-TPU, compiled on TPU)
     interpret: Optional[bool] = None
+    # admission policy for prompts longer than max_len-2: "reject" drops
+    # the prompt and counts it in `prompts_rejected` (the task reward is
+    # computed against the FULL problem, so silently truncating the
+    # prompt scores the policy on a question it never saw); "truncate"
+    # keeps the legacy clip-and-admit behavior, counted in
+    # `prompts_truncated`.
+    long_prompt: str = "reject"
+
+
+# backstop for refill's reject-retry loop: after this many rejections in
+# one refill call the engine stops pulling for the tick (turns a source
+# that yields only overlong prompts from a hang into slow, counted
+# progress — real sources either fit or drain)
+_MAX_REJECTS_PER_REFILL = 1024
 
 
 def _zero_cache(cfg: ModelConfig, n_slots: int, max_len: int):
@@ -206,6 +220,12 @@ class GenerationEngine:
         self.prefill_invocations = 0       # chunked-prefill model calls
         self.prefill_tokens = 0            # prompt tokens admitted via prefill
         self.last_admit_prefill_tokens = 0
+        # long-prompt admission accounting (EngineConfig.long_prompt)
+        self.prompts_rejected = 0
+        self.prompts_truncated = 0
+        # notified with the dropped Problem on every rejection (the Server
+        # uses it to fail the owning request instead of losing it)
+        self.on_prompt_rejected: Optional[Callable[[Problem], None]] = None
         # streamed in-flight weight broadcast (DESIGN.md §7): shadow param
         # buffer filled chunk-by-chunk between decode steps
         self._wstream: Optional[Dict[str, Any]] = None
@@ -343,12 +363,38 @@ class GenerationEngine:
         new_plen = np.zeros(H, np.int32)
         mask = np.zeros(H, bool)
         admitted = []
+        # a rejected prompt re-offers its slot immediately (otherwise one
+        # overlong request idles a slot for a whole tick while admissible
+        # prompts wait); the budget bounds the spin against a pathological
+        # source that yields nothing but overlong prompts
+        rejects_left = _MAX_REJECTS_PER_REFILL
         for s in free:
-            prob = self.prompt_source()
+            while True:
+                prob = self.prompt_source()
+                if prob is None:
+                    break
+                pl = len(prob.prompt_ids)
+                if pl <= T - 2:
+                    break
+                # no room for even one sampled token + EOS: either clip
+                # (legacy, opt-in) or reject-and-count — never silently
+                # truncate, the reward scores the full problem
+                if self.ec.long_prompt == "truncate":
+                    pl = T - 2
+                    self.prompts_truncated += 1
+                    break
+                self.prompts_rejected += 1
+                if self.on_prompt_rejected is not None:
+                    self.on_prompt_rejected(prob)
+                rejects_left -= 1
+                if rejects_left <= 0:
+                    prob = None
+                    break
             if prob is None:
+                if rejects_left <= 0:
+                    break
                 continue
             admitted.append(s)
-            pl = min(len(prob.prompt_ids), T - 2)
             new_tokens[s, :pl] = prob.prompt_ids[:pl]
             new_plen[s] = pl
             mask[s] = True

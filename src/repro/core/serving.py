@@ -17,6 +17,11 @@ orchestrators' flash-unit HardwareModel closures.
 Tracks per-request latency (admission wait, end-to-end) so serving SLOs
 are measurable across in-flight updates — the paper's headline property:
 the engine only *briefly pauses* for new weights, no request is dropped.
+Admission is policy-driven (`admission="fifo"|"sjf"` — shortest prompt
+first, the serving analogue of the pool router's length affinity), and
+prompts longer than the engine's budget fail fast: the request comes
+back `rejected=True` (counted in `metrics()["prompts_rejected"]`)
+instead of being silently truncated or hung.
 `request_weight_update(streamed=True)` exercises the chunked publication
 path: the new weights install one chunk per serving step and the policy
 version flips only at the final pointer swap.
@@ -44,6 +49,7 @@ class Request:
     finished_at: Optional[float] = None
     completion_ids: Optional[np.ndarray] = None
     weight_versions: Optional[np.ndarray] = None
+    rejected: bool = False      # prompt longer than the engine's budget
 
     @property
     def latency(self) -> Optional[float]:
@@ -54,19 +60,31 @@ class Request:
 
 class _QueueSource:
     """Prompt source draining the server's waiting queue (None when empty);
-    records which Request each admitted Problem belongs to."""
+    records which Request each admitted Problem belongs to. `admission`
+    orders the drain: "fifo" (submission order) or "sjf" (shortest prompt
+    first — the serving analogue of the pool router's length-affinity
+    admission; ties break by submission order, so it stays deterministic
+    and starvation shows up as admission wait, not nondeterminism)."""
 
-    def __init__(self, server: "Server"):
+    def __init__(self, server: "Server", admission: str = "fifo"):
+        if admission not in ("fifo", "sjf"):
+            raise ValueError(f"unknown admission policy {admission!r}")
         self.server = server
-        self.last_admitted: List[Request] = []
+        self.admission = admission
 
     def __call__(self) -> Optional[Problem]:
-        if not self.server.waiting:
+        waiting = self.server.waiting
+        if not waiting:
             return None
-        req = self.server.waiting.popleft()
+        if self.admission == "sjf":
+            k = min(range(len(waiting)),
+                    key=lambda i: (len(waiting[i].prompt_ids), i))
+            req = waiting[k]
+            del waiting[k]
+        else:
+            req = waiting.popleft()
         req.admitted_at = self.server.clock
         self.server.in_flight[req.rid] = req
-        self.last_admitted.append(req)
         prob = Problem(req.prompt_ids, 0)
         prob.rid = req.rid  # type: ignore[attr-defined]
         return prob
@@ -76,16 +94,18 @@ class Server:
     """Continuous-batching server with in-flight weight updates."""
 
     def __init__(self, cfg: ModelConfig, params, ec: EngineConfig,
-                 seed: int = 0):
+                 seed: int = 0, admission: str = "fifo"):
         self.cfg, self.ec = cfg, ec
         self.waiting: deque = deque()
         self.in_flight: Dict[int, Request] = {}
         self.done: List[Request] = []
+        self.rejected: List[Request] = []
         self._next_rid = 0
         self._trainer: Optional[Callable] = None
-        self._source = _QueueSource(self)
+        self._source = _QueueSource(self, admission=admission)
         self.engine = GenerationEngine(cfg, params, ec, self._source,
                                        seed=seed)
+        self.engine.on_prompt_rejected = self._reject
         self.loop = EventLoop()
         self._dt = 1.0
         self._updates = 0
@@ -137,6 +157,18 @@ class Server:
         return version
 
     # ---- serving loop ---------------------------------------------------
+    def _reject(self, prob) -> None:
+        """Engine declined the prompt (longer than max_len-2): fail the
+        owning request immediately instead of leaving it in_flight
+        forever — the caller sees `rejected=True`, not a hang."""
+        rid = getattr(prob, "rid", None)
+        req = self.in_flight.pop(rid, None)
+        if req is None:
+            return
+        req.rejected = True
+        req.finished_at = self.clock
+        self.rejected.append(req)
+
     def _complete(self, rollouts, t: float) -> None:
         for r in rollouts:
             prob = self.engine.problems[r.slot]
@@ -158,7 +190,6 @@ class Server:
         request; returns requests completed this step. One call = one
         tick of the shared event scheduler."""
         self._dt = dt
-        self._source.last_admitted = []
         self._completed_now = []
         self.loop.post(self.loop.now, self.actor.tick)
         self.loop.run()
@@ -180,6 +211,9 @@ class Server:
             # chunked-prefill admission path (DESIGN.md §2)
             "prefill_tokens": self.engine.prefill_tokens,
             "prefill_invocations": self.engine.prefill_invocations,
+            # long-prompt admission policy (EngineConfig.long_prompt)
+            "prompts_rejected": self.engine.prompts_rejected,
+            "prompts_truncated": self.engine.prompts_truncated,
             # weight-publication path (DESIGN.md §7)
             "weight_updates": self._updates,
             "streams_completed": self.actor.streams_completed,

@@ -25,6 +25,11 @@ class HardwareModel:
     u_max: float = 0.5   # generation-kernel utilization ceiling (Fig. 8)
     h_sat: int = 256     # batch where utilization saturates
     tau: float = 4.92    # training flashes per token (Appendix A.4)
+    # per-engine chip-speed override (DESIGN.md §7 pool scheduling): a
+    # `speed`x faster chip runs the same decode/prefill work in 1/speed
+    # the wall-time. Only the generation-side terms scale — the trainer
+    # fleet and the broadcast interconnect are separate hardware.
+    speed: float = 1.0
     # amortized flashes per *prompt* token admitted via chunked prefill: a
     # batched many-token forward runs compute-bound like training, so it
     # costs ~1 flash/token (the Eq. 9 definition of a flash) instead of a
@@ -43,13 +48,19 @@ class HardwareModel:
         h = np.asarray(h, np.float64)
         return self.u_max * np.minimum(h, self.h_sat) / self.h_sat
 
+    def scaled(self, speed: float) -> "HardwareModel":
+        """Per-engine override for heterogeneous actor pools: the returned
+        model's decode/prefill costs are divided by `speed` (composes
+        multiplicatively with any existing override)."""
+        return dataclasses.replace(self, speed=self.speed * float(speed))
+
     def step_cost(self, h) -> float:
         """Wall-time (flashes) for one decode step at per-chip batch h:
         h tokens at utilization U(h) -> h/U(h); 0 if no work."""
         h = float(h)
         if h <= 0:
             return 0.0
-        return h / float(self.U(max(h, 1e-9)))
+        return h / float(self.U(max(h, 1e-9))) / self.speed
 
     def train_time(self, n_tokens: int, n_chips: int) -> float:
         return n_tokens * self.tau / max(n_chips, 1)
@@ -61,7 +72,7 @@ class HardwareModel:
         which is what the legacy forcing loop effectively charged."""
         if n_tokens <= 0:
             return 0.0
-        return n_tokens * self.prefill_flash / max(n_chips, 1)
+        return n_tokens * self.prefill_flash / max(n_chips, 1) / self.speed
 
     def broadcast_time(self, n_bytes: float) -> float:
         """Wall-time (flashes) to move `n_bytes` of weights over the

@@ -29,7 +29,7 @@ from repro.roofline.analysis import analyze, model_flops_estimate  # noqa: E402
 
 def run_one(arch: str, shape_name: str, multi_pod: bool = False,
             include_weight_update: bool = False, calibrated: bool = False,
-            optimized: bool = False) -> dict:
+            optimized: bool = False, wu_chunks: int = 0) -> dict:
     """optimized=True applies the §Perf winners: remat + microbatch=16 for
     train shapes, GEN_RULES + cache donation for inference shapes.
     calibrated=True replaces the scan-blind cost_analysis terms with the
@@ -92,11 +92,34 @@ def run_one(arch: str, shape_name: str, multi_pod: bool = False,
             }
         except Exception:
             pass
-        if include_weight_update:
+        if include_weight_update or wu_chunks > 1:
             wu = lower_weight_update(cfg, mesh)
             wu_compiled = wu.compile()
             wroof = analyze(wu.name, wu_compiled, n_dev)
             rec["weight_update"] = wroof.row()
+        if wu_chunks > 1:
+            # the streamed in-flight broadcast's launcher-side twin
+            # (DESIGN.md §7): per-chunk reshard programs over contiguous
+            # byte-balanced leaf spans. Each chunk's collective cost is
+            # the decode pause one installed chunk charges on a real
+            # mesh — recorded next to the whole-tree program so the
+            # whole-vs-max-chunk ratio (the streamed-broadcast win) is a
+            # dry-run number, not a co-sim assumption.
+            chunk_rows = []
+            for prog in lower_weight_update(cfg, mesh, n_chunks=wu_chunks):
+                croof = analyze(prog.name, prog.compile(), n_dev)
+                chunk_rows.append(croof.row())
+            rec["weight_update_chunks"] = {
+                "n_chunks_requested": wu_chunks,
+                "n_chunks": len(chunk_rows),
+                "chunks": chunk_rows,
+                "sum_coll_gbytes_per_dev": sum(
+                    c["coll_gbytes_per_dev"] for c in chunk_rows),
+                "sum_t_collective_s": sum(
+                    c["t_collective_s"] for c in chunk_rows),
+                "max_chunk_t_collective_s": max(
+                    (c["t_collective_s"] for c in chunk_rows), default=0.0),
+            }
     except Exception as e:
         rec["error"] = f"{type(e).__name__}: {e}"
         rec["traceback"] = traceback.format_exc()[-2000:]
@@ -142,12 +165,21 @@ def main() -> None:
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--weight-update", action="store_true")
+    ap.add_argument("--wu-chunks", type=int, default=0,
+                    help="also lower the weight update as N>=2 per-chunk "
+                         "reshard programs (the streamed broadcast's "
+                         "launcher twin) and record per-chunk collective "
+                         "cost next to the whole-tree program (implies "
+                         "the whole-tree --weight-update record)")
     ap.add_argument("--calibrated", action="store_true",
                     help="unroll-calibrated roofline terms (3 extra compiles)")
     ap.add_argument("--optimized", action="store_true",
                     help="apply §Perf winners (remat+microbatch / GEN_RULES)")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
+    if args.wu_chunks == 1 or args.wu_chunks < 0:
+        ap.error("--wu-chunks must be >= 2 (1 chunk IS the whole-tree "
+                 "program; use --weight-update for that)")
 
     combos = []
     if args.all:
@@ -160,7 +192,8 @@ def main() -> None:
     for arch, shape in combos:
         rec = run_one(arch, shape, multi_pod=args.multi_pod,
                       include_weight_update=args.weight_update,
-                      calibrated=args.calibrated, optimized=args.optimized)
+                      calibrated=args.calibrated, optimized=args.optimized,
+                      wu_chunks=args.wu_chunks)
         status = "OK " if rec["ok"] else "FAIL"
         print(f"[{status}] {arch:24s} {shape:12s} mesh={rec['mesh']} "
               f"t={rec['t_total_s']}s "

@@ -49,6 +49,16 @@ def main() -> None:
     ap.add_argument("--engines", type=int, default=1,
                     help="actor-pool size: independent generation engines "
                          "sharing the N-T generation chips (DESIGN.md §7)")
+    ap.add_argument("--engine-speeds", default=None,
+                    help="comma-separated per-engine HardwareModel speed "
+                         "overrides (heterogeneous pool), e.g. '2.0,1.0' "
+                         "— len must equal --engines")
+    ap.add_argument("--router",
+                    choices=("fifo", "shortest_queue", "length_affinity"),
+                    default="fifo",
+                    help="PoolRouter admission policy between the shared "
+                         "prompt source and the pool (DESIGN.md §7 pool "
+                         "scheduling)")
     ap.add_argument("--broadcast", choices=("streamed", "atomic", "free"),
                     default="streamed",
                     help="weight-publication mode: streamed chunks overlap "
@@ -101,6 +111,10 @@ def main() -> None:
     evaluator = Evaluator(cfg, task, max_len=args.max_len) \
         if args.eval_every else None
 
+    engine_speeds = None
+    if args.engine_speeds:
+        engine_speeds = [float(x) for x in args.engine_speeds.split(",")]
+
     if args.mode == "pipeline":
         runner = PipelineRL(
             cfg, params, task, ec,
@@ -110,6 +124,7 @@ def main() -> None:
                            recompute_kv=args.recompute_kv,
                            n_engines=args.engines, broadcast=args.broadcast,
                            broadcast_chunks=args.bcast_chunks,
+                           engine_speeds=engine_speeds, router=args.router,
                            ckpt_every=(args.ckpt_every if args.ckpt_pause
                                        else 0),
                            ckpt_pause=args.ckpt_pause),
@@ -152,6 +167,12 @@ def main() -> None:
               f"mean decode pause/update = "
               f"{np.mean([e['pause_per_update'] for e in eng]):.2f}f "
               f"across {len(eng)} engine(s)", flush=True)
+        if args.router != "fifo" or engine_speeds:
+            rs = runner.router_stats()
+            print(f"router[{rs['policy']}]: " + ", ".join(
+                f"{e['name']}(x{e['speed']:g})={e['assigned']}p/"
+                f"{e['prompt_tokens']}tok/{e['declined']}decl"
+                for e in rs["engines"]), flush=True)
 
     if args.log_out:
         os.makedirs(os.path.dirname(args.log_out) or ".", exist_ok=True)

@@ -17,7 +17,8 @@ def test_dryrun_single_combo_subprocess(tmp_path):
     env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
     proc = subprocess.run(
         [sys.executable, "-m", "repro.launch.dryrun",
-         "--arch", "granite-3-2b", "--shape", "decode_32k", "--out", out],
+         "--arch", "granite-3-2b", "--shape", "decode_32k",
+         "--weight-update", "--wu-chunks", "3", "--out", out],
         env=env, capture_output=True, text=True, timeout=420)
     assert proc.returncode == 0, proc.stdout + proc.stderr
     rec = json.load(open(out))[0]
@@ -25,6 +26,14 @@ def test_dryrun_single_combo_subprocess(tmp_path):
     assert rec["bottleneck"] in ("compute", "memory", "collective")
     assert rec["mesh"] == "16x16"
     assert rec["t_compute_s"] > 0
+    # per-chunk weight-update costs (streamed-broadcast launcher twin):
+    # chunk collectives must cover the whole-tree transfer, and the max
+    # single-chunk pause must be strictly below the whole-tree pause
+    ch = rec["weight_update_chunks"]
+    assert 2 <= ch["n_chunks"] <= 3 and len(ch["chunks"]) == ch["n_chunks"]
+    whole = rec["weight_update"]["t_collective_s"]
+    assert ch["sum_t_collective_s"] == pytest.approx(whole, rel=0.05)
+    assert 0 < ch["max_chunk_t_collective_s"] < whole
 
 
 @pytest.mark.dryrun

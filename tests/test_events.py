@@ -280,7 +280,9 @@ def test_sample_queue_drop_oldest_counters():
     assert len(q) == 4
     assert q.total_put == 10
     assert q.dropped == 6
-    assert q.high_watermark == 4
+    # intra-put peak: depth hits maxsize+1 while a drop is pending — the
+    # watermark must record the overflow, not the post-drop steady state
+    assert q.high_watermark == 5
     # drop-OLDEST: the newest 4 survive
     assert [r.prompt_key for r in q.pop(4)] == [6, 7, 8, 9]
     with pytest.raises(ValueError):

@@ -1,0 +1,385 @@
+"""Pool scheduler (DESIGN.md §7 "Pool scheduling"): heterogeneous
+per-engine cost models, timed preemption windows, PoolRouter admission
+policies + determinism, long-prompt reject-and-count, and the
+preprocessor's length-safe ref-logprob bucketing."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.tiny import config as tiny_config
+from repro.core.events import ActorStage, EventLoop, PoolRouter
+from repro.core.pipeline import PipelineConfig, PipelineRL
+from repro.core.preprocess import PreprocessConfig, Preprocessor
+from repro.core.rollout import EngineConfig, GenerationEngine
+from repro.core.sim import HardwareModel
+from repro.data.math_task import MathTask, Problem
+from repro.data.packing import Rollout
+from repro.models import model as M
+from repro.sharding import tree_values
+
+
+@pytest.fixture(scope="module")
+def setup():
+    task = MathTask(max_operand=5, ops="+")
+    cfg = tiny_config(vocab_size=task.tok.vocab_size, d_model=64, n_layers=1)
+    params = tree_values(M.init_params(cfg, jax.random.PRNGKey(0)))
+    return task, cfg, params
+
+
+# ---------------------------------------------------------------------------
+# per-engine HardwareModel overrides (heterogeneous pool)
+# ---------------------------------------------------------------------------
+
+def test_hardware_model_speed_scaling():
+    hw = HardwareModel()
+    fast = hw.scaled(2.0)
+    assert fast.step_cost(8) == pytest.approx(hw.step_cost(8) / 2.0)
+    assert fast.prefill_time(64, 4) == pytest.approx(
+        hw.prefill_time(64, 4) / 2.0)
+    # trainer fleet and broadcast interconnect are separate hardware
+    assert fast.train_time(100, 4) == hw.train_time(100, 4)
+    assert fast.broadcast_time(1e5) == hw.broadcast_time(1e5)
+    # overrides compose multiplicatively
+    assert fast.scaled(2.0).speed == pytest.approx(4.0)
+
+
+def test_hetero_pool_fast_engine_finishes_more(setup):
+    """Throughput ordering: with a 3x/1x chip split the fast engine must
+    tick more often, generate more tokens, and pull more prompts."""
+    task, cfg, params = setup
+    pc = PipelineConfig(batch_size=4, n_opt_steps=4, n_chips=8, train_chips=4,
+                        pack_rows=2, pack_seq=48, n_engines=2,
+                        engine_speeds=[3.0, 1.0])
+    p = PipelineRL(cfg, params, task, EngineConfig(n_slots=4, max_len=20), pc)
+    log = p.run()
+    assert len(log) == 4
+    fast, slow = p.engines
+    assert fast.tokens_generated > slow.tokens_generated
+    rs = p.router_stats()
+    assert rs["engines"][0]["assigned"] > rs["engines"][1]["assigned"]
+    # both engines contribute — heterogeneity must not starve the slow one
+    assert slow.tokens_generated > 0
+
+
+def test_engine_speeds_length_mismatch_raises(setup):
+    task, cfg, params = setup
+    pc = PipelineConfig(batch_size=4, n_opt_steps=2, n_engines=2,
+                        engine_speeds=[1.0])
+    with pytest.raises(ValueError):
+        PipelineRL(cfg, params, task, EngineConfig(n_slots=4, max_len=20), pc)
+
+
+# ---------------------------------------------------------------------------
+# timed preemption windows
+# ---------------------------------------------------------------------------
+
+def _drive_actor(cfg, params, seed, n_rollouts, preempt=None,
+                 publish_at=None, version=5):
+    """One ActorStage on its own loop; unit step cost; optional preemption
+    window and an atomic publication of the SAME params (so sampling is
+    unaffected and only version stamps/timing can differ)."""
+    task = MathTask(max_operand=5, ops="+", seed=0)
+    eng = GenerationEngine(cfg, params, EngineConfig(n_slots=4, max_len=16),
+                           task.sample, seed=seed)
+    loop = EventLoop()
+    got = []
+    actor = ActorStage(loop, eng, task=task, name="a",
+                       step_cost=lambda h: 1.0,
+                       deliver=lambda rs, t: got.extend(rs))
+    if preempt is not None:
+        actor.preempt(*preempt)
+    if publish_at is not None:
+        actor.deliver_atomic(publish_at, params, version, pause=0.0)
+    actor.start(0.0)
+    loop.run(until=lambda: len(got) >= n_rollouts)
+    return actor, got[:n_rollouts]
+
+
+def test_preemption_resume_no_rollout_lost(setup):
+    """An engine preempted for [3, 53) must produce exactly the same
+    rollouts (tokens, prompt splits, count) as an unpreempted twin — the
+    window only shifts its timeline; in-flight slots resume untouched."""
+    _, cfg, params = setup
+    a, got_a = _drive_actor(cfg, params, seed=11, n_rollouts=8,
+                            publish_at=30.0)
+    b, got_b = _drive_actor(cfg, params, seed=11, n_rollouts=8,
+                            preempt=(3.0, 50.0), publish_at=30.0)
+    assert len(got_a) == len(got_b) == 8
+    for ra, rb in zip(got_a, got_b):
+        assert ra.prompt_len == rb.prompt_len
+        np.testing.assert_array_equal(ra.tokens, rb.tokens)
+    assert b.preemptions_taken == 1
+    assert b.preempt_total == pytest.approx(50.0)
+    assert a.preempt_total == 0.0
+    # timeline shifted past the window, never rewound
+    assert b.time > a.time
+
+
+def test_preemption_weight_versions_stay_exact(setup):
+    """A publication arriving during the window installs at the deferred
+    tick: stamps stay exact — 0 before the install, `version` after,
+    nondecreasing along every rollout, and the swap did land."""
+    _, cfg, params = setup
+    b, got = _drive_actor(cfg, params, seed=11, n_rollouts=8,
+                          preempt=(3.0, 50.0), publish_at=30.0)
+    assert b.engine.version == 5
+    assert b.updates_applied == 1
+    for r in got:
+        vers = r.weight_versions[r.prompt_len:]
+        assert set(np.unique(vers)) <= {0, 5}
+        assert (np.diff(vers) >= 0).all()
+    assert max(r.weight_versions.max() for r in got) == 5
+
+
+def test_preemption_windows_compose():
+    """Chained/overlapping windows defer transitively; expired windows are
+    dropped."""
+    loop = EventLoop()
+
+    class _Eng:
+        n_active = 0
+        ec = EngineConfig(n_slots=1, max_len=8)
+
+        def refill(self, now):
+            return 0
+
+    a = ActorStage(loop, _Eng(), auto_refill=False, chain=False)
+    a.preempt(1.0, 2.0)    # [1, 3)
+    a.preempt(3.0, 4.0)    # [3, 7) — abuts: 2.0 must defer to 7.0
+    a.preempt(0.0, -1.0)   # non-positive duration: ignored
+    assert a._preempt_until(2.0) == pytest.approx(7.0)
+    assert a._preempt_until(7.0) is None   # half-open, and windows expired
+    assert a._preempt == []
+
+
+# ---------------------------------------------------------------------------
+# PoolRouter policies (unit, scripted source + fake engines)
+# ---------------------------------------------------------------------------
+
+class _FakeEngine:
+    def __init__(self, n_slots=4, max_len=16, active=0, ncached=1):
+        self.ec = EngineConfig(n_slots=n_slots, max_len=max_len)
+        self._host_active = np.zeros(n_slots, bool)
+        self._host_active[:active] = True
+        self._host_ncached = np.full(n_slots, ncached, np.int64)
+
+
+def _scripted_source(lengths):
+    probs = [Problem([1] * n, 0) for n in lengths]
+
+    def source():
+        return probs.pop(0) if probs else None
+
+    return source
+
+
+def test_router_fifo_passthrough_order():
+    r = PoolRouter(_scripted_source([3, 10, 5, 8]), policy="fifo")
+    r.attach([_FakeEngine(), _FakeEngine()])
+    lens = [len(r.request(i % 2).prompt_ids) for i in range(4)]
+    assert lens == [3, 10, 5, 8]          # arrival order, untouched
+    assert r.request(0) is None           # source exhausted
+    st = r.stats()
+    assert [e["assigned"] for e in st["engines"]] == [2, 2]
+
+
+def test_router_length_affinity_routes_long_to_fast():
+    r = PoolRouter(_scripted_source([3, 10, 5, 8]),
+                   policy="length_affinity", lookahead=4)
+    r.attach([_FakeEngine(), _FakeEngine()], speeds=[2.0, 1.0])
+    assert len(r.request(0).prompt_ids) == 10   # fast: longest pending
+    assert len(r.request(1).prompt_ids) == 3    # slow: shortest pending
+    assert len(r.request(0).prompt_ids) == 8
+    assert len(r.request(1).prompt_ids) == 5
+    st = r.stats()
+    assert st["engines"][0]["prompt_tokens"] == 18
+    assert st["engines"][1]["prompt_tokens"] == 8
+
+
+def test_router_shortest_queue_declines_deep_engine():
+    # engine 0 is saturated (4 active slots, ~56 outstanding tokens);
+    # engine 1 is idle — with the default slack (max_len=16) engine 0's
+    # pull is declined, engine 1's granted
+    e0 = _FakeEngine(active=4, ncached=1)
+    e1 = _FakeEngine(active=0)
+    r = PoolRouter(_scripted_source([4, 4, 4]), policy="shortest_queue")
+    r.attach([e0, e1])
+    assert r.request(0) is None
+    assert r.request(1) is not None
+    st = r.stats()
+    assert st["engines"][0]["declined"] == 1
+    assert st["engines"][1]["assigned"] == 1
+    # once engine 0 drains, it is granted again
+    e0._host_active[:] = False
+    assert r.request(0) is not None
+
+
+def test_router_rejects_unknown_policy():
+    with pytest.raises(ValueError):
+        PoolRouter(lambda: None, policy="round_robin")
+
+
+def test_router_determinism_under_sim_clock(setup):
+    """Two identically-seeded hetero runs with length-affinity routing
+    must be bit-identical: same log timeline, same per-engine admission
+    counts, same tokens — routing reads only the prompt stream and host
+    mirrors, never wall-clock or RNG."""
+    task_cls = lambda: MathTask(max_operand=5, ops="+", seed=3)
+    _, cfg, params = setup
+
+    def run():
+        task = task_cls()
+        pc = PipelineConfig(batch_size=4, n_opt_steps=3, n_chips=8,
+                            train_chips=4, pack_rows=2, pack_seq=48,
+                            n_engines=2, engine_speeds=[2.0, 1.0],
+                            router="length_affinity")
+        p = PipelineRL(cfg, params, task,
+                       EngineConfig(n_slots=4, max_len=20), pc, seed=7)
+        log = p.run()
+        return p, log
+
+    p1, log1 = run()
+    p2, log2 = run()
+    assert [r["time"] for r in log1] == [r["time"] for r in log2]
+    assert [r["reward"] for r in log1] == [r["reward"] for r in log2]
+    assert p1.router_stats() == p2.router_stats()
+    assert [e.tokens_generated for e in p1.engines] == \
+        [e.tokens_generated for e in p2.engines]
+
+
+# ---------------------------------------------------------------------------
+# long-prompt admission: reject-and-count (satellite bugfix)
+# ---------------------------------------------------------------------------
+
+def test_engine_rejects_long_prompt_and_counts(setup):
+    _, cfg, params = setup
+    seen = []
+    probs = [Problem([1] + [3] * 9, 0),      # 10 > max_len-2: rejected
+             Problem([1, 3, 4, 5], 0)]       # fits
+    eng = GenerationEngine(cfg, params, EngineConfig(n_slots=1, max_len=8),
+                           lambda: probs.pop(0) if probs else None, seed=0)
+    eng.on_prompt_rejected = seen.append
+    # the rejected prompt re-offers its slot in the SAME refill: the
+    # short prompt behind it is admitted without idling the slot a tick
+    assert eng.refill() == 1
+    assert eng.prompts_rejected == 1
+    assert len(seen) == 1 and len(seen[0].prompt_ids) == 10
+    assert eng.prompts_truncated == 0
+    # the admitted prompt is the FULL short one, not a clipped long one
+    assert int(eng._host_prompt_len[0]) == 4
+
+
+def test_engine_truncate_policy_is_opt_in(setup):
+    _, cfg, params = setup
+    probs = [Problem([1] + [3] * 9, 0)]
+    eng = GenerationEngine(
+        cfg, params, EngineConfig(n_slots=1, max_len=8,
+                                  long_prompt="truncate"),
+        lambda: probs.pop(0) if probs else None, seed=0)
+    assert eng.refill() == 1
+    assert eng.prompts_truncated == 1
+    assert eng.prompts_rejected == 0
+    assert int(eng._host_prompt_len[0]) == 6   # max_len-2 legacy clip
+
+
+def test_server_rejects_long_request(setup):
+    from repro.core.serving import Server
+    task, cfg, params = setup
+    srv = Server(cfg, params, EngineConfig(n_slots=2, max_len=8))
+    rid_long = srv.submit([1] + [3] * 12)
+    rid_ok = srv.submit(task.sample().prompt_ids)
+    for _ in range(100):
+        srv.step()
+        if len(srv.done) == 1:
+            break
+    m = srv.metrics()
+    assert m["prompts_rejected"] == 1
+    assert m["prompts_truncated"] == 0
+    assert len(srv.rejected) == 1
+    rej = srv.rejected[0]
+    assert rej.rid == rid_long and rej.rejected
+    assert rej.finished_at is not None
+    # the rejected request is not served, not in flight, not hung
+    assert m["served"] == 1 and srv.done[0].rid == rid_ok
+    assert m["in_flight"] == 0 and m["waiting"] == 0
+
+
+def test_server_sjf_admission_prefers_short_prompts(setup):
+    from repro.core.serving import Server
+    _, cfg, params = setup
+    srv = Server(cfg, params, EngineConfig(n_slots=1, max_len=16),
+                 admission="sjf")
+    rid_long = srv.submit([1] + [3] * 8)     # 9 tokens, submitted first
+    rid_short = srv.submit([1, 3, 4])        # 3 tokens
+    srv.step()
+    # the single slot admitted the SHORT prompt despite FIFO submission
+    assert srv.in_flight and list(srv.in_flight) == [rid_short]
+    assert [r.rid for r in srv.waiting] == [rid_long]
+
+
+# ---------------------------------------------------------------------------
+# preprocessor length safety (satellite bugfixes)
+# ---------------------------------------------------------------------------
+
+def _mk_rollout(rng, length, prompt_len, vocab):
+    toks = rng.randint(3, vocab, size=length).astype(np.int32)
+    toks[0] = 1
+    return Rollout(tokens=toks, prompt_len=prompt_len,
+                   behavior_logprobs=rng.randn(length).astype(np.float32)
+                   * 0.1,
+                   reward=1.0, weight_versions=np.zeros(length, np.int32))
+
+
+def test_preprocessor_never_clips_rollouts(setup):
+    """The jitted ref forward buckets by next-pow2 of the longest rollout
+    (bounded by max_len); every rollout gets full-length ref_logprobs and
+    token_rewards — the KL tail is never dropped."""
+    task, cfg, params = setup
+    rng = np.random.RandomState(0)
+    pre = Preprocessor(cfg, params, PreprocessConfig(kl_coef=0.1, max_len=64))
+    rollouts = [_mk_rollout(rng, L, 3, cfg.vocab_size)
+                for L in (5, 11, 16, 23)]
+    out = pre.process(rollouts)
+    for r in out:
+        assert len(r.ref_logprobs) == r.length
+        assert len(r.token_rewards) == r.length
+        assert (r.token_rewards[:r.prompt_len] == 0).all()
+    # pow2 bucketing: 23 -> 32, bounded by the cap
+    assert Preprocessor._bucket(23, 64) == 32
+    assert Preprocessor._bucket(16, 64) == 16
+    assert Preprocessor._bucket(65, 64) == 64
+
+
+def test_preprocessor_raises_on_overlong_rollout(setup):
+    task, cfg, params = setup
+    rng = np.random.RandomState(0)
+    pre = Preprocessor(cfg, params, PreprocessConfig(kl_coef=0.1, max_len=16))
+    with pytest.raises(ValueError, match="exceeds"):
+        pre.process([_mk_rollout(rng, 20, 3, cfg.vocab_size)])
+
+
+def test_fused_ref_logprobs_parity_at_boundary(setup):
+    """Fused-vs-unfused ref-logprob parity for rollouts exactly at the
+    bucket boundary (length == padded T) and below it: every entry agrees
+    including the final position, and entry 0 is the alignment pad."""
+    import copy
+    task, cfg, params = setup
+    rng = np.random.RandomState(1)
+    cfg_fused = dataclasses.replace(cfg, fused_loss=True)
+    pcfg = PreprocessConfig(kl_coef=0.1, max_len=16)
+    rollouts = [_mk_rollout(rng, L, 3, cfg.vocab_size) for L in (16, 9, 16)]
+    out_u = Preprocessor(cfg, params, pcfg).process(
+        [copy.copy(r) for r in rollouts])
+    out_f = Preprocessor(cfg_fused, params, pcfg).process(
+        [copy.copy(r) for r in rollouts])
+    for a, b in zip(out_u, out_f):
+        assert len(a.ref_logprobs) == len(b.ref_logprobs) == a.length
+        assert a.ref_logprobs[0] == b.ref_logprobs[0] == 0.0
+        np.testing.assert_allclose(a.ref_logprobs, b.ref_logprobs,
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(a.token_rewards, b.token_rewards,
+                                   rtol=1e-4, atol=1e-5)
+        # the final entry is a real logprob, not a duplicate-target score
+        assert a.ref_logprobs[-1] != 0.0
