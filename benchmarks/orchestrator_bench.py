@@ -17,22 +17,31 @@ new measurable surfaces.
 
 Emits ``BENCH_orchestrator.json`` (same schema discipline as
 ``BENCH_trainer.json``) so the perf trajectory covers the orchestration
-layer too.
+layer too, and ``BENCH_chaos.json`` for the fault-tolerance scenario
+(`chaos_benchmarks`, DESIGN.md §8): kill/restore one of two engines
+mid-run and measure throughput/lag degradation, in-flight work recovery,
+replay determinism, trainer crash-restart, and the serving front's
+zero-lost-request guarantee under deadlines + retries.
 
     PYTHONPATH=src python -m benchmarks.run --only orchestrator
+    PYTHONPATH=src python -m benchmarks.run --only chaos
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
-from typing import Dict, List, Tuple
+import tempfile
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from benchmarks.common import tiny_setup
 from repro.core.conventional import ConventionalConfig, ConventionalRL
+from repro.core.events import FaultPlan
 from repro.core.pipeline import PipelineConfig, PipelineRL
 from repro.core.rollout import EngineConfig
+from repro.core.serving import Server
 from repro.core.sim import HardwareModel
 from repro.core.trainer import Trainer
 from repro.optim.adam import AdamConfig
@@ -213,6 +222,151 @@ def orchestrator_benchmarks() -> List[Row]:
     return rows
 
 
+# ---------------------------------------------------------------------------
+# chaos scenario (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+CHAOS_JSON_PATH = "BENCH_chaos.json"
+CHAOS_STEPS = 4
+# engine 1 dies mid-generation and comes back two outage-lengths later —
+# timed against this HW's flash scale (the healthy 4-step run spans
+# ~600 flashes, first optimizer step ~220), so the kill hits live decode
+# slots between the first and second step
+KILL_AT, RESTORE_AFTER = 120.0, 240.0
+
+
+def _chaos_pipeline(plan: Optional[FaultPlan], steps: int = CHAOS_STEPS,
+                    ckpt_dir: Optional[str] = None,
+                    record: Optional[List[bytes]] = None) -> PipelineRL:
+    task, cfg, params = tiny_setup(d_model=64, n_layers=1)
+    trainer = Trainer(cfg, params, adam=AdamConfig(lr=1e-3))
+    p = PipelineRL(
+        cfg, params, task, EngineConfig(n_slots=8, max_len=16),
+        PipelineConfig(batch_size=BATCH, n_opt_steps=steps,
+                       n_chips=N_CHIPS, train_chips=TRAIN_CHIPS,
+                       pack_rows=2, pack_seq=48, n_engines=2,
+                       ckpt_every=2 if ckpt_dir else 0,
+                       ckpt_dir=ckpt_dir),
+        hw=HW, trainer=trainer, fault_plan=plan)
+    if record is not None:
+        orig_put = p.queue.put
+
+        def tap(rollouts):
+            for r in rollouts:
+                record.append(np.asarray(r.tokens).tobytes()
+                              + np.asarray(r.weight_versions).tobytes())
+            orig_put(rollouts)
+
+        p.queue.put = tap  # type: ignore[method-assign]
+    p.run()
+    return p
+
+
+def chaos_benchmarks() -> List[Row]:
+    rows: List[Row] = []
+    payload: Dict = {"config": {
+        "steps": CHAOS_STEPS, "batch": BATCH, "n_chips": N_CHIPS,
+        "train_chips": TRAIN_CHIPS, "n_engines": 2,
+        "kill_at": KILL_AT, "restore_after": RESTORE_AFTER}}
+
+    # --- 1. engine kill/restore vs healthy baseline -------------------
+    base = _chaos_pipeline(None)
+    base_t = base.log[-1]["time"]
+    base_tok = sum(e.tokens_generated for e in base.engines)
+    plan = FaultPlan().engine_crash(at=KILL_AT, engine=1,
+                                   restart_after=RESTORE_AFTER)
+    chaos = _chaos_pipeline(plan)
+    t = chaos.log[-1]["time"]
+    tok = sum(e.tokens_generated for e in chaos.engines)
+    ps = chaos.pool_stats()
+    degradation = t / max(base_t, 1e-9)
+    recovery = ps["requeue_latency_max"]
+    payload["engine_kill"] = {
+        "baseline": {"sim_time_flashes": base_t, "tokens_generated": base_tok,
+                     "tokens_per_flash": base_tok / max(base_t, 1e-9),
+                     "max_lag": max(r["max_lag"] for r in base.log)},
+        "chaos": {"sim_time_flashes": t, "tokens_generated": tok,
+                  "tokens_per_flash": tok / max(t, 1e-9),
+                  "max_lag": max(r["max_lag"] for r in chaos.log),
+                  "rollouts_lost": ps["rollouts_lost"],
+                  "prompts_salvaged": ps["prompts_salvaged"],
+                  "prompts_requeued": ps["prompts_requeued"],
+                  "requeues_readmitted": ps["requeues_readmitted"],
+                  "recovery_time_flashes": recovery,
+                  "downtime": ps["engines"][1]["downtime"],
+                  "fault_log": ps["fault_log"]},
+        "slowdown_vs_baseline": degradation,
+    }
+    rows.append(("chaos/baseline_e2", 0.0,
+                 f"sim_t={base_t:.0f}f;"
+                 f"tok_per_flash={base_tok / max(base_t, 1e-9):.4f}"))
+    rows.append(("chaos/engine_kill", 0.0,
+                 f"sim_t={t:.0f}f;slowdown={degradation:.2f}x;"
+                 f"lost={ps['rollouts_lost']};"
+                 f"requeued={ps['prompts_requeued']};"
+                 f"recovery={recovery:.0f}f"))
+
+    # --- 2. replay determinism: same plan, bit-equal rollout streams --
+    digests = []
+    for _ in range(2):
+        rec: List[bytes] = []
+        _chaos_pipeline(FaultPlan(seed=3)
+                        .engine_crash(at=KILL_AT, engine=1,
+                                      restart_after=RESTORE_AFTER)
+                        .degrade_link(at=KILL_AT, duration=RESTORE_AFTER,
+                                      drop_prob=0.3), record=rec)
+        digests.append(hashlib.sha256(b"".join(rec)).hexdigest())
+    bit_equal = digests[0] == digests[1]
+    payload["determinism"] = {"digests": digests, "bit_equal": bit_equal}
+    rows.append(("chaos/determinism", 0.0,
+                 f"bit_equal={bit_equal};digest={digests[0][:12]}"))
+
+    # --- 3. trainer crash-restart from checkpoint ---------------------
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        plan = FaultPlan().trainer_crash(at=KILL_AT + RESTORE_AFTER,
+                                         restart_after=60.0)
+        p = _chaos_pipeline(plan, ckpt_dir=ckpt_dir)
+        tr = p.pool_stats()["trainer"]
+        reached = p.trainer.version >= CHAOS_STEPS
+    payload["trainer_crash"] = {**tr, "reached_target": reached,
+                                "final_version": p.trainer.version}
+    rows.append(("chaos/trainer_crash", 0.0,
+                 f"reached_target={reached};crashes={tr['crashes']};"
+                 f"steps_lost={tr['steps_lost']};"
+                 f"ckpts={tr['ckpts_saved']}"))
+
+    # --- 4. serving front: zero lost requests under churn -------------
+    task, cfg, params = tiny_setup(d_model=64, n_layers=1)
+    srv = Server(cfg, params, EngineConfig(n_slots=4, max_len=16),
+                 deadline=24.0, max_retries=2, retry_backoff=4.0,
+                 queue_limit=16)
+    srv.connect_trainer(lambda: (params, srv._updates + 1))
+    for _ in range(24):
+        srv.submit(task.sample().prompt_ids)
+    steps = 0
+    while (srv.waiting or srv.in_flight or srv._backoff) and steps < 600:
+        srv.step()
+        steps += 1
+        if steps % 16 == 0:
+            srv.request_weight_update(streamed=True)
+    m = srv.metrics()
+    payload["serving"] = {k: m[k] for k in (
+        "served", "requests_rejected", "requests_retried", "requests_shed",
+        "deadline_misses", "requests_lost", "retry_p50_latency",
+        "retry_p99_latency", "p50_latency", "p99_latency")}
+    rows.append(("chaos/server_zero_lost", 0.0,
+                 f"lost={m['requests_lost']};served={m['served']};"
+                 f"retried={m['requests_retried']};shed={m['requests_shed']};"
+                 f"misses={m['deadline_misses']}"))
+
+    with open(CHAOS_JSON_PATH, "w") as f:
+        json.dump(payload, f, indent=2)
+    rows.append(("chaos/json", 0.0, os.path.abspath(CHAOS_JSON_PATH)))
+    return rows
+
+
 if __name__ == "__main__":
     for r in orchestrator_benchmarks():
+        print(",".join(str(c) for c in r))
+    for r in chaos_benchmarks():
         print(",".join(str(c) for c in r))

@@ -29,7 +29,8 @@ def main() -> None:
     from benchmarks import figures
     from benchmarks.engine_bench import engine_benchmarks
     from benchmarks.kernels_bench import kernel_benchmarks
-    from benchmarks.orchestrator_bench import orchestrator_benchmarks
+    from benchmarks.orchestrator_bench import (chaos_benchmarks,
+                                               orchestrator_benchmarks)
     from benchmarks.roofline_bench import roofline_rows
     from benchmarks.trainer_bench import trainer_benchmarks
 
@@ -47,14 +48,16 @@ def main() -> None:
         "engine": engine_benchmarks,
         "trainer": trainer_benchmarks,
         "orchestrator": orchestrator_benchmarks,
+        "chaos": chaos_benchmarks,
     }
     if args.smoke:
         # fast, deterministic-cost groups so per-PR CI can catch tokens/sec
         # regressions in the generation hot path, activation-memory /
-        # step-time regressions in the trainer hot path, and broadcast-pause
-        # / throughput regressions in the orchestration layer
+        # step-time regressions in the trainer hot path, broadcast-pause /
+        # throughput regressions in the orchestration layer, and recovery
+        # regressions in the fault-tolerance path (chaos scenario)
         groups = {k: groups[k] for k in ("engine", "trainer", "orchestrator",
-                                         "fig8", "fig9")}
+                                         "chaos", "fig8", "fig9")}
 
     print("name,us_per_call,derived")
     failed = []

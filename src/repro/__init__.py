@@ -12,8 +12,8 @@ Public API (the paper's contribution as a composable module):
 from repro.core.algo import RLConfig
 from repro.core.conventional import ConventionalConfig, ConventionalRL
 from repro.core.events import (
-    ActorStage, EventLoop, PoolRouter, PreprocessStage, TrainerStage,
-    WeightBroadcaster,
+    ActorStage, EventLoop, Fault, FaultPlan, PoolRouter, PreprocessStage,
+    TrainerStage, WeightBroadcaster,
 )
 from repro.core.pipeline import PipelineConfig, PipelineRL
 from repro.core.preprocess import PreprocessConfig, Preprocessor
@@ -24,8 +24,8 @@ from repro.core.trainer import Trainer
 
 __all__ = [
     "ActorStage", "ConventionalConfig", "ConventionalRL", "EngineConfig",
-    "EventLoop", "GenerationEngine", "HardwareModel", "PipelineConfig",
-    "PipelineRL", "PoolRouter", "PreprocessConfig", "Preprocessor",
-    "PreprocessStage", "RLConfig", "Server", "Trainer", "TrainerStage",
-    "WeightBroadcaster",
+    "EventLoop", "Fault", "FaultPlan", "GenerationEngine", "HardwareModel",
+    "PipelineConfig", "PipelineRL", "PoolRouter", "PreprocessConfig",
+    "Preprocessor", "PreprocessStage", "RLConfig", "Server", "Trainer",
+    "TrainerStage", "WeightBroadcaster",
 ]

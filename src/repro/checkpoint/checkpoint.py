@@ -1,13 +1,28 @@
 """Minimal tree checkpointing: flatten the pytree with '/'-joined key paths
-into an .npz. Enough for the RL driver's periodic checkpoints and the §5.1
-consecutive-checkpoint KL study."""
+into an .npz. Enough for the RL driver's periodic checkpoints, the §5.1
+consecutive-checkpoint KL study, and the trainer's crash-restart path
+(DESIGN.md §8) — which is why `save` is atomic: a crash mid-save must
+never corrupt the previous checkpoint (the restart would then have
+nothing to restore from)."""
 from __future__ import annotations
 
 import os
+import zipfile
 from typing import Any, Dict
 
 import jax
 import numpy as np
+
+
+class CheckpointError(ValueError):
+    """Checkpoint file unusable: corrupt archive, missing/unexpected keys,
+    or shape mismatch against the restore target."""
+
+
+def _norm(path: str) -> str:
+    """`np.savez` appends '.npz' to bare paths; normalize so
+    `save(p)`/`load(p)` round-trip with the same `p` either way."""
+    return path if path.endswith(".npz") else path + ".npz"
 
 
 def _flatten(tree) -> Dict[str, np.ndarray]:
@@ -19,18 +34,62 @@ def _flatten(tree) -> Dict[str, np.ndarray]:
 
 
 def save(path: str, tree) -> None:
+    """Atomic save: write to a sibling temp file, fsync, then
+    `os.replace` — a crash at any point leaves either the old complete
+    checkpoint or the new complete one, never a truncated archive."""
+    path = _norm(path)
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-    np.savez(path, **_flatten(tree))
+    tmp = path + ".tmp"
+    try:
+        # a file object keeps savez from appending another suffix to tmp
+        with open(tmp, "wb") as f:
+            np.savez(f, **_flatten(tree))
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.remove(tmp)
 
 
 def load(path: str, like) -> Any:
-    """Restore into the structure of `like` (shapes/dtypes preserved)."""
-    with np.load(path) as data:
-        flat = dict(data)
+    """Restore into the structure of `like` (shapes/dtypes preserved).
+    Raises CheckpointError naming the missing/unexpected keys or the
+    mismatched shapes instead of surfacing a bare KeyError deep in the
+    tree walk."""
+    path = _norm(path)
+    try:
+        with np.load(path) as data:
+            flat = dict(data)
+    except FileNotFoundError:
+        raise
+    except (zipfile.BadZipFile, ValueError, OSError, EOFError) as e:
+        raise CheckpointError(
+            f"corrupt or unreadable checkpoint {path!r}: "
+            f"{type(e).__name__}: {e}") from e
     leaves_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+    want = {}
+    for path_, leaf in leaves_like:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path_)
+        want[key] = leaf
+    missing = sorted(set(want) - set(flat))
+    unexpected = sorted(set(flat) - set(want))
+    if missing or unexpected:
+        raise CheckpointError(
+            f"checkpoint {path!r} does not match the restore target: "
+            f"missing keys {missing}, unexpected keys {unexpected}")
+    bad_shapes = [
+        f"{k}: checkpoint {flat[k].shape} vs target {tuple(leaf.shape)}"
+        for k, leaf in want.items()
+        if hasattr(leaf, "shape") and tuple(flat[k].shape) != tuple(leaf.shape)]
+    if bad_shapes:
+        raise CheckpointError(
+            f"checkpoint {path!r} shape mismatch: " + "; ".join(bad_shapes))
     vals = []
     for path_, leaf in leaves_like:
-        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path_)
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path_)
         arr = flat[key]
         vals.append(arr.astype(leaf.dtype) if hasattr(leaf, "dtype") else arr)
     return jax.tree_util.tree_unflatten(jax.tree.structure(like), vals)

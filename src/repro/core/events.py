@@ -50,6 +50,19 @@ its own cost model, e.g. the Server's step-denominated clock):
                     pauses `bcast_install_flash` per installed chunk and
                     pointer-swaps on the last one).
 
+  FaultPlan          failure as a first-class, deterministic event source
+                    (DESIGN.md §8): scripted or seed-deterministic
+                    stochastic faults — engine crash (permanent or
+                    restart-after-delay), trainer crash with
+                    checkpoint-restore, preprocessor failure (in-flight
+                    batch's samples re-queued, not lost), and interconnect
+                    degradation windows under which streamed broadcast
+                    chunks are lost and retransmitted with capped
+                    exponential backoff. All decisions are functions of
+                    (seed, fault identity, counter) — never of wall-clock
+                    or iteration order — so two identical-seed chaos runs
+                    are bit-equal.
+
 Clock invariants: events fire in nondecreasing time order (FIFO on
 ties); a stage's own timeline is nondecreasing; rollout `finished_at`
 stamps are the actor-tick completion times, so `SampleQueue` arrival
@@ -59,6 +72,8 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+import os
+import re
 from collections import deque
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -162,6 +177,203 @@ def span_bytes(leaves: Sequence[Any],
 
 
 # ---------------------------------------------------------------------------
+# fault plan (DESIGN.md §8 failure model)
+# ---------------------------------------------------------------------------
+
+# retransmit backstop: after this many lost transmissions of one chunk the
+# broadcaster delivers it anyway (a drop_prob<1 link terminates w.p. 1, but
+# a scripted drop_prob=1 window must not spin forever)
+_MAX_XMIT_ATTEMPTS = 16
+
+
+@dataclasses.dataclass
+class Fault:
+    """One scheduled fault. `kind`:
+
+      engine_crash     kill engine `engine` at `at` mid-decode (in-flight
+                       rollouts lost, prompts salvaged); restart after
+                       `restart_after` flashes, or permanent when None
+      trainer_crash    kill the trainer at `at` (in-flight step lost);
+                       restart from the last checkpoint after
+                       `restart_after` (None = permanent)
+      preprocess_fail  transient preprocessor failure at `at`: the
+                       in-flight batch's samples re-enter the SampleQueue
+      link_degrade     for [at, at+duration), streamed broadcast chunks to
+                       engine `engine` (None = every engine) are lost with
+                       probability `drop_prob` per transmission
+    """
+    kind: str
+    at: float
+    engine: Optional[int] = None
+    restart_after: Optional[float] = None
+    duration: float = 0.0
+    drop_prob: float = 1.0
+
+
+class FaultPlan:
+    """Deterministic, replayable fault schedule for the event substrate.
+
+    Faults are injected by the orchestrator (`PipelineRL._schedule_faults`)
+    as ordinary events on the simulated clock, so failure interleaves with
+    decode/train/broadcast exactly like any other stage activity — and the
+    chunk-loss oracle is counter-based (`default_rng((seed, tag, engine,
+    version, chunk, attempt))`), i.e. a pure function of the fault identity
+    rather than of draw order. Two runs with the same plan (same seed for
+    `chaos()` plans) therefore produce bit-identical rollout streams.
+
+    Build scripted plans with the fluent helpers::
+
+        FaultPlan().engine_crash(300.0, engine=1, restart_after=150.0) \\
+                   .degrade_link(200.0, duration=100.0, drop_prob=0.5)
+
+    or seed-deterministic stochastic ones with `FaultPlan.chaos(seed, ...)`,
+    or parse the launcher's compact `--fault-plan` spec with `parse()`.
+    """
+
+    def __init__(self, faults: Sequence[Fault] = (), seed: int = 0):
+        self.faults: List[Fault] = list(faults)
+        self.seed = int(seed)
+
+    # ---- fluent builders ----------------------------------------------
+    def add(self, fault: Fault) -> "FaultPlan":
+        self.faults.append(fault)
+        return self
+
+    def engine_crash(self, at: float, engine: int = 0,
+                     restart_after: Optional[float] = None) -> "FaultPlan":
+        return self.add(Fault("engine_crash", float(at), engine=int(engine),
+                              restart_after=restart_after))
+
+    def trainer_crash(self, at: float,
+                      restart_after: Optional[float] = None) -> "FaultPlan":
+        return self.add(Fault("trainer_crash", float(at),
+                              restart_after=restart_after))
+
+    def preprocess_fail(self, at: float) -> "FaultPlan":
+        return self.add(Fault("preprocess_fail", float(at)))
+
+    def degrade_link(self, at: float, duration: float,
+                     engine: Optional[int] = None,
+                     drop_prob: float = 1.0) -> "FaultPlan":
+        return self.add(Fault("link_degrade", float(at),
+                              engine=None if engine is None else int(engine),
+                              duration=float(duration),
+                              drop_prob=float(drop_prob)))
+
+    # ---- stochastic generation ----------------------------------------
+    @classmethod
+    def chaos(cls, seed: int, horizon: float, n_engines: int = 1,
+              n_crashes: int = 2, mean_outage: Optional[float] = None,
+              link_windows: int = 1, drop_prob: float = 0.3,
+              trainer_crashes: int = 0) -> "FaultPlan":
+        """Seed-deterministic stochastic churn over `horizon` flashes:
+        `n_crashes` engine kill/restore pairs (spot-instance churn),
+        `link_windows` interconnect-degradation windows, and optional
+        trainer crashes. Same seed => same plan, draw for draw."""
+        rng = np.random.default_rng(int(seed))
+        plan = cls(seed=seed)
+        mean_outage = horizon / 8 if mean_outage is None else mean_outage
+        for _ in range(max(int(n_crashes), 0)):
+            plan.engine_crash(
+                at=float(rng.uniform(0.05, 0.7)) * horizon,
+                engine=int(rng.integers(max(n_engines, 1))),
+                restart_after=float(rng.exponential(mean_outage)) + 1.0)
+        for _ in range(max(int(link_windows), 0)):
+            plan.degrade_link(
+                at=float(rng.uniform(0.0, 0.8)) * horizon,
+                duration=float(rng.uniform(0.05, 0.25)) * horizon,
+                drop_prob=drop_prob)
+        for _ in range(max(int(trainer_crashes), 0)):
+            plan.trainer_crash(
+                at=float(rng.uniform(0.2, 0.8)) * horizon,
+                restart_after=float(rng.exponential(mean_outage)) + 1.0)
+        plan.faults.sort(key=lambda f: (f.at, f.kind, f.engine or 0))
+        return plan
+
+    # ---- chunk-loss oracle (consulted by WeightBroadcaster) -----------
+    def has_link_faults(self) -> bool:
+        return any(f.kind == "link_degrade" for f in self.faults)
+
+    def chunk_lost(self, engine: int, version: int, chunk: int,
+                   attempt: int, t: float) -> bool:
+        """Is transmission `attempt` of chunk `chunk` of publication
+        `version` to `engine`, scheduled at time `t`, lost? Deterministic:
+        the Bernoulli draw is keyed on the fault identity, not draw order,
+        so replays agree regardless of event interleaving."""
+        for f in self.faults:
+            if f.kind != "link_degrade":
+                continue
+            if f.engine is not None and f.engine != engine:
+                continue
+            if not (f.at <= t < f.at + f.duration):
+                continue
+            if f.drop_prob >= 1.0:
+                return True
+            rng = np.random.default_rng(
+                (self.seed, 0x10ED, int(engine), int(version), int(chunk),
+                 int(attempt)))
+            return bool(rng.random() < f.drop_prob)
+        return False
+
+    # ---- launcher spec ------------------------------------------------
+    _SPEC_RES = (
+        ("engine_crash",
+         re.compile(r"^engine:(\d+)@([\d.]+)(?:r([\d.]+))?$")),
+        ("trainer_crash", re.compile(r"^trainer@([\d.]+)(?:r([\d.]+))?$")),
+        ("preprocess_fail", re.compile(r"^pre@([\d.]+)$")),
+        ("link_degrade",
+         re.compile(r"^link(?::(\d+))?@([\d.]+)d([\d.]+)(?:p([\d.]+))?$")),
+    )
+
+    @classmethod
+    def parse(cls, spec: str, n_engines: int = 1,
+              horizon: float = 2000.0) -> "FaultPlan":
+        """Compact `--fault-plan` spec: comma-separated faults —
+
+            engine:<i>@<t>[r<delay>]   kill engine i at t (restart after delay)
+            trainer@<t>[r<delay>]      trainer crash (checkpoint restore)
+            pre@<t>                    preprocessor failure
+            link[:<i>]@<t>d<dur>[p<p>] lossy interconnect window
+            chaos:<seed>[:<horizon>]   stochastic churn plan (see `chaos`)
+        """
+        spec = spec.strip()
+        m = re.match(r"^chaos:(\d+)(?::([\d.]+))?$", spec)
+        if m:
+            return cls.chaos(int(m.group(1)),
+                             float(m.group(2)) if m.group(2) else horizon,
+                             n_engines=n_engines, trainer_crashes=0)
+        plan = cls()
+        for part in filter(None, (p.strip() for p in spec.split(","))):
+            for kind, rx in cls._SPEC_RES:
+                m = rx.match(part)
+                if not m:
+                    continue
+                g = m.groups()
+                if kind == "engine_crash":
+                    plan.engine_crash(float(g[1]), engine=int(g[0]),
+                                      restart_after=(float(g[2])
+                                                     if g[2] else None))
+                elif kind == "trainer_crash":
+                    plan.trainer_crash(float(g[0]),
+                                       restart_after=(float(g[1])
+                                                      if g[1] else None))
+                elif kind == "preprocess_fail":
+                    plan.preprocess_fail(float(g[0]))
+                else:
+                    plan.degrade_link(
+                        float(g[1]), duration=float(g[2]),
+                        engine=int(g[0]) if g[0] else None,
+                        drop_prob=float(g[3]) if g[3] else 1.0)
+                break
+            else:
+                raise ValueError(f"unparseable fault spec {part!r}")
+        return plan
+
+    def __repr__(self) -> str:
+        return f"FaultPlan(seed={self.seed}, faults={self.faults!r})"
+
+
+# ---------------------------------------------------------------------------
 # shared metric helpers (exported to pipeline.py for API compatibility)
 # ---------------------------------------------------------------------------
 
@@ -235,6 +447,17 @@ class ActorStage:
         self._preempt: List[Tuple[float, float]] = []
         self.preempt_total = 0.0           # wall-time spent offline
         self.preemptions_taken = 0         # deferrals actually hit
+        # failure / recovery (DESIGN.md §8): `fail` crashes the engine
+        # mid-decode, `restore` brings it back after a catch-up sync
+        self.failed = False
+        self.failures = 0
+        self.recoveries = 0
+        self.rollouts_lost = 0             # in-flight sequences killed
+        self.prompts_salvaged = 0          # prompts handed back to the pool
+        self.failed_at: Optional[float] = None
+        self.downtime = 0.0                # wall-time spent crashed
+        self._epoch = 0                    # bumped on fail: stale queued
+        #                                    tick chains become no-ops
         # accounting (read by orchestrators / benchmarks)
         self.updates_applied = 0
         self.streams_completed = 0
@@ -246,7 +469,10 @@ class ActorStage:
     def deliver_atomic(self, arrive: float, params, version: int,
                        pause: float) -> None:
         """Whole-tree publication arriving at `arrive`; the engine pauses
-        `pause` flashes at the install boundary (the blocking transfer)."""
+        `pause` flashes at the install boundary (the blocking transfer).
+        Dropped when the engine is crashed — the restore path re-syncs."""
+        if self.failed:
+            return
         self._atomic.append((arrive, params, version, pause))
         self._atomic.sort(key=lambda x: x[0])
 
@@ -260,6 +486,8 @@ class ActorStage:
         forward progress even when `broadcast_time` exceeds the publish
         interval) — but only the newest waiting publication survives:
         superseded pending ones are counted in `streams_aborted`."""
+        if self.failed:
+            return
         rk = self.recompute_kv if recompute_kv is None else recompute_kv
         if self._stream is not None:
             if self._next_stream is not None:
@@ -344,11 +572,67 @@ class ActorStage:
         self._preempt = [(s, e) for (s, e) in self._preempt if e > t]
         return t if t > now else None
 
+    # ---- failure / recovery (DESIGN.md §8) -----------------------------
+    def fail(self, now: float) -> List[Any]:
+        """Crash the engine at `now`, mid-decode: every live slot's
+        rollout-in-progress is lost (its sampled tokens die with the
+        process — counted in `rollouts_lost`), but the slots' *prompts*
+        are salvaged and returned so the pool can re-offer them to
+        surviving engines. Pending weight deliveries (atomic and
+        streamed) are dropped; the restore path collapses everything the
+        engine missed into one catch-up atomic sync. Idempotent: failing
+        a failed stage salvages nothing."""
+        if self.failed:
+            return []
+        self.failed = True
+        self.failed_at = now
+        self.failures += 1
+        self._epoch += 1          # kill any queued tick chain
+        self.running = False
+        self._atomic.clear()
+        self._stream = None
+        self._next_stream = None
+        eng = self.engine
+        salvaged = [eng.problems[s] for s in np.where(eng._host_active)[0]
+                    if eng.problems[s] is not None]
+        self.rollouts_lost += eng.reset_slots()
+        self.prompts_salvaged += len(salvaged)
+        return salvaged
+
+    def restore(self, now: float, params=None,
+                version: Optional[int] = None) -> None:
+        """Bring a failed engine back online at `now` (crash restart or
+        elastic rejoin). `params`/`version` is the catch-up atomic weight
+        sync — every publication the engine missed while down, collapsed
+        to the newest — applied BEFORE admission resumes, so a rejoining
+        engine never decodes under stale weights and its per-token
+        version stamps stay exact from the first post-rejoin token."""
+        if not self.failed:
+            return
+        self.failed = False
+        self.recoveries += 1
+        if self.failed_at is not None:
+            self.downtime += now - self.failed_at
+            self.failed_at = None
+        if params is not None:
+            self.engine.set_weights(params, int(version or 0),
+                                    recompute_kv=self.recompute_kv)
+            self.updates_applied += 1
+        self.start(now)
+
     # ---- lifecycle -----------------------------------------------------
     def start(self, t: float) -> None:
-        if not self.running:
+        if not self.running and not self.failed:
             self.running = True
-            self.loop.post(t, self.tick)
+            self._post_tick(t)
+
+    def _post_tick(self, t: float) -> None:
+        """Schedule the next tick under the current failure epoch: a
+        crash between post and fire invalidates the chain (the closure's
+        epoch goes stale), so a restored stage never runs two interleaved
+        tick chains."""
+        epoch = self._epoch
+        self.loop.post(t, lambda now: self._tick(now, epoch))
 
     def _refill(self, now: float) -> float:
         inv0 = getattr(self.engine, "prefill_invocations", 0)
@@ -359,13 +643,20 @@ class ActorStage:
         return self.prefill_cost(self.engine.last_admit_prefill_tokens, inv)
 
     def tick(self, now: float) -> None:
+        """External tick entry point (the Server's step-driven mode);
+        self-scheduled chains go through `_post_tick`."""
+        self._tick(now, self._epoch)
+
+    def _tick(self, now: float, epoch: int) -> None:
         """One decode step: install weights -> (refill) -> step -> deliver
         -> (refill) -> reschedule."""
+        if epoch != self._epoch or self.failed:
+            return   # stale chain from before a crash, or still offline
         resume = self._preempt_until(now)
         if resume is not None:
             self.preempt_total += resume - now
             self.preemptions_taken += 1
-            self.loop.post(resume, self.tick)
+            self._post_tick(resume)
             return
         pause = self._install_weights(now)
         c_pre = 0.0
@@ -400,7 +691,7 @@ class ActorStage:
                 self.on_drained(t_done)
             return
         if self.chain:
-            self.loop.post(t_done, self.tick)
+            self._post_tick(t_done)
         else:
             self.running = False
 
@@ -443,18 +734,27 @@ class PoolRouter:
 
     def __init__(self, source: Callable[[], Optional[Any]],
                  policy: str = "fifo", lookahead: int = 0,
-                 slack: Optional[float] = None):
+                 slack: Optional[float] = None,
+                 clock: Optional[Callable[[], float]] = None):
         if policy not in self.POLICIES:
             raise ValueError(f"unknown router policy {policy!r}; "
                              f"choose from {self.POLICIES}")
         self.source, self.policy = source, policy
         self.lookahead, self.slack = int(lookahead), slack
+        # sim-clock accessor: only read for recovery telemetry (salvaged-
+        # prompt re-admission latency), never for routing decisions — so
+        # routing stays deterministic and clockless as before
+        self.clock = clock or (lambda: 0.0)
         self.pending: deque = deque()
         self.engines: List[Any] = []
         self.speeds: List[float] = []
         self.assigned: List[int] = []
         self.assigned_tokens: List[int] = []
         self.declined: List[int] = []
+        self.alive: List[bool] = []
+        # failure recovery (DESIGN.md §8)
+        self.requeued = 0
+        self.requeue_latency: List[float] = []
 
     def attach(self, engines: Sequence[Any],
                speeds: Optional[Sequence[float]] = None) -> None:
@@ -467,10 +767,40 @@ class PoolRouter:
         self.assigned = [0] * n
         self.assigned_tokens = [0] * n
         self.declined = [0] * n
+        self.alive = [True] * n
         if self.lookahead <= 0:
             self.lookahead = sum(e.ec.n_slots for e in self.engines)
         if self.slack is None:
             self.slack = float(max(e.ec.max_len for e in self.engines))
+
+    # ---- elastic pool / failure recovery (DESIGN.md §8) ----------------
+    def add_engine(self, engine, speed: float = 1.0) -> int:
+        """Elastic join: extend the pool with one engine at runtime."""
+        self.engines.append(engine)
+        self.speeds.append(float(speed))
+        self.assigned.append(0)
+        self.assigned_tokens.append(0)
+        self.declined.append(0)
+        self.alive.append(True)
+        return len(self.engines) - 1
+
+    def set_alive(self, i: int, alive: bool) -> None:
+        """Crashed/detached engines leave the routing population: load
+        comparisons and speed means ignore them (they cannot pull anyway
+        — a dead stage never refills)."""
+        self.alive[i] = bool(alive)
+
+    def requeue(self, problems: Sequence[Any],
+                now: Optional[float] = None) -> None:
+        """Recovery path: salvaged prompts from a failed engine re-enter
+        at the FRONT of the pending buffer — they are the pool's oldest
+        admitted work, so they must win the next pulls — and are
+        timestamped so `stats()` can report re-admission latency."""
+        t = self.clock() if now is None else now
+        for p in reversed(list(problems)):
+            p._salvaged_at = t  # type: ignore[attr-defined]
+            self.pending.appendleft(p)
+        self.requeued += len(problems)
 
     def source_for(self, i: int) -> Callable[[], Optional[Any]]:
         """The prompt-source callable engine `i` pulls from."""
@@ -493,13 +823,19 @@ class PoolRouter:
     def _grant(self, i: int, prob: Any) -> Any:
         self.assigned[i] += 1
         self.assigned_tokens[i] += len(prob.prompt_ids)
+        t0 = getattr(prob, "_salvaged_at", None)
+        if t0 is not None:
+            self.requeue_latency.append(self.clock() - t0)
+            prob._salvaged_at = None
         return prob
 
     # ---- the per-engine pull -------------------------------------------
     def request(self, i: int) -> Optional[Any]:
         if self.policy == "shortest_queue":
             loads = [self._load(j) for j in range(len(self.engines))]
-            if loads[i] - min(loads) > self.slack:
+            floor = min((l for l, ok in zip(loads, self.alive) if ok),
+                        default=0.0)
+            if loads[i] - floor > self.slack:
                 self.declined[i] += 1
                 return None
         if self.policy != "length_affinity":
@@ -514,7 +850,9 @@ class PoolRouter:
         if not self.pending:
             return None
         lens = [len(p.prompt_ids) for p in self.pending]
-        mean_speed = sum(self.speeds) / max(len(self.speeds), 1)
+        live = [s for s, ok in zip(self.speeds, self.alive) if ok] \
+            or self.speeds
+        mean_speed = sum(live) / max(len(live), 1)
         if self.speeds[i] >= mean_speed:
             # ties break toward the earliest pending prompt (FIFO within
             # equal lengths) so routing stays deterministic
@@ -526,13 +864,19 @@ class PoolRouter:
         return self._grant(i, prob)
 
     def stats(self) -> Dict[str, Any]:
+        lat = self.requeue_latency
         return {
             "policy": self.policy,
             "pending": len(self.pending),
+            "prompts_requeued": self.requeued,
+            "requeues_readmitted": len(lat),
+            "requeue_latency_mean": float(np.mean(lat)) if lat else 0.0,
+            "requeue_latency_max": float(np.max(lat)) if lat else 0.0,
             "engines": [
-                {"assigned": a, "prompt_tokens": t, "declined": d}
-                for a, t, d in zip(self.assigned, self.assigned_tokens,
-                                   self.declined)],
+                {"assigned": a, "prompt_tokens": t, "declined": d,
+                 "alive": ok}
+                for a, t, d, ok in zip(self.assigned, self.assigned_tokens,
+                                       self.declined, self.alive)],
         }
 
 
@@ -558,6 +902,11 @@ class PreprocessStage:
         self.busy = False
         self.busy_until = 0.0
         self.batches = 0
+        # failure recovery (DESIGN.md §8)
+        self.batches_failed = 0
+        self.rollouts_requeued = 0
+        self._epoch = 0
+        self._current: Optional[List[Rollout]] = None
 
     def kick(self, now: float) -> None:
         if self.busy or len(self.queue) < self.batch_size:
@@ -569,6 +918,7 @@ class PreprocessStage:
         if self.trainer_stage.inbox_waiting() > 0:
             return
         rollouts = self.queue.pop(self.batch_size)
+        self._current = rollouts   # salvageable until delivery
         raw_reward = float(np.mean([r.reward for r in rollouts]))
         t_avail = max((r.finished_at for r in rollouts), default=now)
         processed = self.pre.process(rollouts)
@@ -577,13 +927,38 @@ class PreprocessStage:
             sum(r.length for r in processed))
         self.busy, self.busy_until = True, done
         self.batches += 1
+        epoch = self._epoch
 
         def _deliver(t: float) -> None:
+            if epoch != self._epoch:
+                return   # the stage failed while this batch was in flight
             self.busy = False
+            self._current = None
             self.trainer_stage.submit(processed, t, raw_reward=raw_reward)
             self.kick(t)
 
         self.loop.post(done, _deliver)
+
+    def fail(self, now: float) -> int:
+        """Transient preprocessor failure (DESIGN.md §8): the in-flight
+        batch's *processing* is lost but its samples are not — the raw
+        rollouts go back to the FRONT of the SampleQueue (`requeue_front`:
+        oldest-first order preserved, `total_put` untouched) and are
+        reprocessed on the immediate restart kick. Returns the number of
+        rollouts salvaged."""
+        self._epoch += 1
+        n = 0
+        if self.busy and self._current is not None:
+            self.queue.requeue_front(self._current)
+            n = len(self._current)
+            self.rollouts_requeued += n
+        self.busy = False
+        self.busy_until = now   # the aborted batch's compute no longer
+        #                         gates the restarted stage
+        self._current = None
+        self.batches_failed += 1
+        self.kick(now)
+        return n
 
 
 # ---------------------------------------------------------------------------
@@ -596,7 +971,15 @@ class TrainerStage:
     runs the real optimizer step eagerly, stamps completion on the
     simulated clock, publishes weights via the broadcaster, and models
     checkpoint stalls (`ckpt_every`/`ckpt_pause` — the scenario the
-    SampleQueue's drop-oldest policy exists for)."""
+    SampleQueue's drop-oldest policy exists for).
+
+    When `ckpt_dir` is given, the stall is no longer just a pause: each
+    checkpoint step atomically persists the full TrainState to
+    `<ckpt_dir>/trainer_latest.npz`, and `crash`/`restore` implement the
+    crash-restart path of DESIGN.md §8 — a restore reloads
+    params + optimizer moments + version from the last durable
+    checkpoint, so the next optimizer step is bit-identical to the one
+    an uninterrupted run (from that checkpoint) would take."""
 
     def __init__(self, loop: EventLoop, trainer, *, queue=None,
                  batch_size: int = 0,
@@ -606,6 +989,7 @@ class TrainerStage:
                  broadcaster: Optional["WeightBroadcaster"] = None,
                  update_every: int = 1, group_baseline: bool = False,
                  ckpt_every: int = 0, ckpt_pause: float = 0.0,
+                 ckpt_dir: Optional[str] = None,
                  samples_per_step: Optional[int] = None,
                  on_free: Optional[Callable[[float], None]] = None):
         self.loop, self.trainer = loop, trainer
@@ -623,6 +1007,23 @@ class TrainerStage:
         self.free_at = 0.0
         self.stalls = 0
         self._inbox: deque = deque()   # (rollouts, raw_reward, avail, on_done)
+        # crash-restart checkpointing (DESIGN.md §8)
+        self.ckpt_dir = ckpt_dir
+        self.ckpt_path: Optional[str] = None
+        self.ckpts_saved = 0
+        self.last_ckpt_version = 0
+        self.failed = False
+        self.crashes = 0
+        self.recoveries = 0
+        self.steps_lost = 0
+        self._epoch = 0
+        self._prestep_state = None
+        if ckpt_dir is not None:
+            # version-0 seed checkpoint: a crash before the first periodic
+            # save must still have something durable to restore from
+            self.ckpt_path = self.trainer.save(
+                os.path.join(ckpt_dir, "trainer_latest"))
+            self.ckpts_saved += 1
 
     def inbox_depth(self) -> int:
         """Batches owned by the trainer: waiting in the inbox + in step."""
@@ -641,7 +1042,7 @@ class TrainerStage:
         self.kick(now)
 
     def kick(self, now: float) -> None:
-        if self.busy:
+        if self.busy or self.failed:
             return
         if self._inbox:
             rollouts, raw_reward, avail, on_done = self._inbox.popleft()
@@ -663,6 +1064,10 @@ class TrainerStage:
             rollouts = apply_group_baseline(rollouts)
         batch = pack(rollouts, self.pack_rows, self.pack_seq)
         stats = batch.pop("packing_stats")
+        # pre-step snapshot (free: the state is not donated, this is a
+        # tuple of references) — crash() rolls back to it so the eagerly
+        # computed step is truly lost if the trainer dies before `done`
+        self._prestep_state = self.trainer.state
         # host batch goes straight in: the trainer stages it with one
         # jitted donated transfer; returned metrics are device-resident
         # and sync only when the log entry below reads them
@@ -672,7 +1077,8 @@ class TrainerStage:
         version = self.trainer.version
         max_lag, mean_lag = lag_stats(rollouts, version - 1)
         stall = 0.0
-        if self.ckpt_every and version % self.ckpt_every == 0:
+        do_ckpt = bool(self.ckpt_every and version % self.ckpt_every == 0)
+        if do_ckpt:
             stall = self.ckpt_pause
             done += stall
             self.stalls += 1
@@ -691,8 +1097,20 @@ class TrainerStage:
             **metrics,
         })
 
+        epoch = self._epoch
+
         def _finish(t: float) -> None:
+            if epoch != self._epoch:
+                return   # the trainer crashed while this step was in flight
             self.busy = False
+            # the checkpoint becomes *durable* only when the step that
+            # produced it completes: a crash mid-step loses both the step
+            # and its would-be checkpoint (exactly a real crash's window)
+            if do_ckpt and self.ckpt_dir is not None:
+                self.ckpt_path = self.trainer.save(
+                    os.path.join(self.ckpt_dir, "trainer_latest"))
+                self.ckpts_saved += 1
+                self.last_ckpt_version = version
             if self.broadcaster is not None and \
                     version % self.update_every == 0:
                 self.broadcaster.publish(self.trainer.params, version, t)
@@ -703,6 +1121,46 @@ class TrainerStage:
                 self.on_free(t)
 
         self.loop.post(done, _finish)
+
+    # ---- crash-restart (DESIGN.md §8) ---------------------------------
+    def crash(self, now: float) -> None:
+        """Trainer process dies. The in-flight step (if any) is lost — its
+        completion callback is epoch-invalidated, its weights never
+        publish, and `steps_lost` counts it. Idempotent while down."""
+        if self.failed:
+            return
+        self.failed = True
+        self.crashes += 1
+        self._epoch += 1
+        if self.busy:
+            # the in-flight step was computed eagerly at schedule time;
+            # roll its effects back (state snapshot, log entry, history)
+            # so it is as if the crash interrupted the step itself
+            self.steps_lost += 1
+            self.trainer.state = self._prestep_state
+            if self.trainer.history:
+                self.trainer.history.pop()
+            if self.log:
+                self.log.pop()
+        self.busy = False
+
+    def restore(self, now: float) -> int:
+        """Restart the trainer. With a checkpoint directory, the full
+        TrainState (params + opt moments + version) reloads from the last
+        durable checkpoint — anything trained past it is rolled back, the
+        price of crash consistency. Without one this is a warm restart:
+        in-memory state survives (the single-process co-sim has no real
+        process boundary) but the in-flight step stays lost. Returns the
+        version training resumes from."""
+        if not self.failed:
+            return self.trainer.version
+        self.failed = False
+        self.recoveries += 1
+        self.free_at = max(self.free_at, now)
+        if self.ckpt_path is not None:
+            self.trainer.restore(self.ckpt_path)
+        self.kick(now)
+        return self.trainer.version
 
 
 # ---------------------------------------------------------------------------
@@ -725,36 +1183,88 @@ class WeightBroadcaster:
                  arrive every `broadcast_time/n_chunks`; the engine only
                  pauses `bcast_install_flash` per installed chunk and
                  pointer-swaps on the last (the paper's "brief pause")
-    """
+
+    Failure semantics (DESIGN.md §8): actors whose stage has `failed`
+    set are skipped entirely (no ghost deliveries into a dead engine; a
+    rejoining engine instead gets a catch-up atomic sync before
+    admission). With a `fault_plan` carrying link faults, the streamed
+    path models a lossy interconnect: each chunk transmission consults
+    `fault_plan.chunk_lost(engine, version, chunk, attempt, t)` — a pure
+    function of the fault identity, so replays are bit-equal — and lost
+    chunks retransmit after a capped exponential backoff
+    (`t_chunk * min(retransmit_backoff_chunks * 2**attempt,
+    backoff_cap_chunks)`), preserving in-order chunk installs."""
 
     def __init__(self, hw, actors: Sequence[ActorStage],
-                 mode: str = "streamed", n_chunks: int = 8):
+                 mode: str = "streamed", n_chunks: int = 8,
+                 fault_plan: Optional["FaultPlan"] = None,
+                 retransmit_backoff_chunks: float = 1.0,
+                 backoff_cap_chunks: float = 16.0):
         if mode not in ("free", "atomic", "streamed"):
             raise ValueError(f"unknown broadcast mode {mode!r}")
         self.hw, self.actors, self.mode = hw, list(actors), mode
         self.n_chunks = max(int(n_chunks), 1)
+        self.fault_plan = fault_plan
+        self.retransmit_backoff_chunks = retransmit_backoff_chunks
+        self.backoff_cap_chunks = backoff_cap_chunks
         self.published = 0
         self.bytes_published = 0
+        self.chunks_lost = 0
+        self.retransmit_wait = 0.0
+        self.deliveries_skipped = 0
+
+    def _lossy_arrivals(self, engine: int, version: int, base: float,
+                        t_chunk: float) -> List[float]:
+        """Serialized chunk cursor over a lossy link: chunk k cannot start
+        until chunk k-1 landed; each lost transmission burns its slot plus
+        a backoff before the retry."""
+        arrivals = []
+        cursor = base
+        for k in range(self.n_chunks):
+            attempt = 0
+            while True:
+                cursor += t_chunk
+                if attempt >= _MAX_XMIT_ATTEMPTS or not self.fault_plan.chunk_lost(
+                        engine, version, k, attempt, cursor):
+                    break
+                self.chunks_lost += 1
+                backoff = t_chunk * min(
+                    self.retransmit_backoff_chunks * (2.0 ** attempt),
+                    self.backoff_cap_chunks)
+                self.retransmit_wait += backoff
+                cursor += backoff
+                attempt += 1
+            arrivals.append(cursor)
+        return arrivals
 
     def publish(self, params, version: int, now: float) -> None:
         self.published += 1
+        targets = [(i, a) for i, a in enumerate(self.actors)
+                   if not getattr(a, "failed", False)]
+        self.deliveries_skipped += len(self.actors) - len(targets)
         nbytes = tree_bytes(params)
-        self.bytes_published += nbytes * len(self.actors)
+        self.bytes_published += nbytes * len(targets)
         if self.mode == "free":
-            for a in self.actors:
+            for _, a in targets:
                 a.deliver_atomic(now, params, version, pause=0.0)
             return
         t_full = self.hw.broadcast_time(nbytes)
         if self.mode == "atomic":
-            for i, a in enumerate(self.actors):
-                a.deliver_atomic(now + (i + 1) * t_full, params, version,
+            for j, (_, a) in enumerate(targets):
+                a.deliver_atomic(now + (j + 1) * t_full, params, version,
                                  pause=t_full)
             return
         t_chunk = t_full / self.n_chunks
-        for i, a in enumerate(self.actors):
-            base = now + i * t_full
-            arrivals = [base + (k + 1) * t_chunk
-                        for k in range(self.n_chunks)]
+        lossy = self.fault_plan is not None and self.fault_plan.has_link_faults()
+        for j, (i, a) in enumerate(targets):
+            base = now + j * t_full
+            if lossy:
+                arrivals = self._lossy_arrivals(i, version, base, t_chunk)
+            else:
+                # keep the exact pre-fault arithmetic on healthy links so
+                # no-fault runs stay bit-identical to earlier behavior
+                arrivals = [base + (k + 1) * t_chunk
+                            for k in range(self.n_chunks)]
             a.deliver_stream(params, version, arrivals,
                              install_pause=self.hw.bcast_install_flash)
 
@@ -774,5 +1284,8 @@ class WeightBroadcaster:
             "mode": self.mode,
             "published": self.published,
             "bytes_published": self.bytes_published,
+            "chunks_lost": self.chunks_lost,
+            "retransmit_wait": self.retransmit_wait,
+            "deliveries_skipped": self.deliveries_skipped,
             "engines": per_engine,
         }

@@ -75,6 +75,10 @@ class PipelineConfig:
     # --- trainer-stall scenario (checkpoint pause every k steps) ------
     ckpt_every: int = 0
     ckpt_pause: float = 0.0       # flashes the trainer stalls per ckpt
+    # when set, the stall actually persists the TrainState (atomically)
+    # to <ckpt_dir>/trainer_latest.npz and trainer crash-restart restores
+    # from it (DESIGN.md §8)
+    ckpt_dir: Optional[str] = None
 
 
 def _batch_to_device(batch: Dict[str, np.ndarray]):
@@ -94,13 +98,17 @@ class PipelineRL:
                  hw: HardwareModel = HardwareModel(),
                  trainer: Optional[Trainer] = None, seed: int = 0,
                  preprocessor=None,
-                 prompt_source: Optional[Callable] = None):
+                 prompt_source: Optional[Callable] = None,
+                 fault_plan=None):
         self.cfg, self.task, self.ec, self.pc, self.hw = cfg, task, ec, pc, hw
         self.trainer = trainer or Trainer(cfg, params)
         self.preprocessor = preprocessor  # paper Fig. 4 middle stage
         self.queue = SampleQueue(pc.queue_maxsize)
         self.log: List[Dict] = []
         self.loop = EventLoop()
+        self.seed = seed
+        self.fault_plan = fault_plan
+        self.fault_log: List[Dict] = []
 
         # --- actor pool: n_engines independent engines, each with its own
         # clock and an equal share of the N-T generation chips; identical
@@ -120,7 +128,8 @@ class PipelineRL:
         self.router = PoolRouter(prompt_source or task.sample,
                                  policy=pc.router,
                                  lookahead=pc.router_lookahead,
-                                 slack=pc.router_slack)
+                                 slack=pc.router_slack,
+                                 clock=lambda: self.loop.now)
         self.engines: List[GenerationEngine] = []
         for i in range(n_eng):
             donor = self.engines[0] if self.engines else None
@@ -137,6 +146,7 @@ class PipelineRL:
             pack_rows=pc.pack_rows, pack_seq=pc.pack_seq, log=self.log,
             update_every=pc.update_every, group_baseline=pc.group_baseline,
             ckpt_every=pc.ckpt_every, ckpt_pause=pc.ckpt_pause,
+            ckpt_dir=pc.ckpt_dir,
             samples_per_step=pc.batch_size)
         self.pre_stage = None
         if preprocessor is not None:
@@ -151,18 +161,31 @@ class PipelineRL:
             if rollouts:
                 consumer.kick(t)
 
+        self._deliver = _deliver
+        self._chips_per_engine = chips_per_engine
         self.actors: List[ActorStage] = [
-            ActorStage(
-                self.loop, eng, task=task, name=f"actor{i}",
-                step_cost=lambda h, c=chips_per_engine,
-                    m=hw.scaled(speeds[i]): m.step_cost(h / max(c, 1e-9)),
-                prefill_cost=lambda toks, inv, c=chips_per_engine,
-                    m=hw.scaled(speeds[i]): m.prefill_time(toks, max(c, 1)),
-                deliver=_deliver, recompute_kv=pc.recompute_kv)
+            self._make_actor(i, eng, speeds[i])
             for i, eng in enumerate(self.engines)]
         self.broadcaster = WeightBroadcaster(
-            hw, self.actors, mode=pc.broadcast, n_chunks=pc.broadcast_chunks)
+            hw, self.actors, mode=pc.broadcast, n_chunks=pc.broadcast_chunks,
+            fault_plan=fault_plan)
         self.trainer_stage.broadcaster = self.broadcaster
+        if fault_plan is not None:
+            self._schedule_faults(fault_plan)
+
+    def _make_actor(self, i: int, eng: GenerationEngine,
+                    speed: float) -> ActorStage:
+        """One pool member. The chip share stays fixed at the *configured*
+        pool size (gen_chips / pc.n_engines) — elastic joins add capacity
+        rather than re-slicing the incumbents' chips, matching how spare
+        capacity is attached in practice."""
+        c = self._chips_per_engine
+        m = self.hw.scaled(speed)
+        return ActorStage(
+            self.loop, eng, task=self.task, name=f"actor{i}",
+            step_cost=lambda h: m.step_cost(h / max(c, 1e-9)),
+            prefill_cost=lambda toks, inv: m.prefill_time(toks, max(c, 1)),
+            deliver=self._deliver, recompute_kv=self.pc.recompute_kv)
 
     # ----- compatibility surface ---------------------------------------
     @property
@@ -196,6 +219,165 @@ class PipelineRL:
             eng_stats["name"] = actor.name
             eng_stats["speed"] = speed
             eng_stats["preempt_total"] = actor.preempt_total
+        return st
+
+    # ----- fault injection + elastic pool (DESIGN.md §8) ----------------
+    def _schedule_faults(self, plan) -> None:
+        """Post the plan's faults onto the event loop. Link faults need no
+        events — the broadcaster consults the plan per chunk transmission;
+        everything else becomes a timed crash (+ optional timed restore)."""
+        n_eng = len(self.engines)
+        for f in plan.faults:
+            if f.kind == "engine_crash":
+                i = int(f.engine or 0)
+                if not 0 <= i < n_eng:
+                    raise ValueError(
+                        f"fault targets engine {i} of a {n_eng}-engine pool")
+                self.loop.post(f.at, lambda t, i=i: self._fail_engine(i, t))
+                if f.restart_after is not None:
+                    self.loop.post(f.at + f.restart_after,
+                                   lambda t, i=i: self.restore_engine(i, t))
+            elif f.kind == "trainer_crash":
+                self.loop.post(f.at, self._crash_trainer)
+                if f.restart_after is not None:
+                    self.loop.post(f.at + f.restart_after,
+                                   self._restore_trainer)
+            elif f.kind == "preprocess_fail":
+                self.loop.post(f.at, self._fail_preprocess)
+            elif f.kind != "link_degrade":
+                raise ValueError(f"unknown fault kind {f.kind!r}")
+
+    def _fail_engine(self, i: int, t: float) -> None:
+        """Kill engine i mid-decode: its live slots' prompts are salvaged
+        and re-offered (front of the router's pending buffer) to the
+        surviving engines; partially decoded tokens are lost
+        (`rollouts_lost`). Idle survivors are kicked so the salvaged work
+        is picked up immediately."""
+        a = self.actors[i]
+        if a.failed:
+            return
+        salvaged = a.fail(t)
+        self.router.set_alive(i, False)
+        if salvaged:
+            self.router.requeue(salvaged, now=t)
+        for j, other in enumerate(self.actors):
+            if j != i and not other.failed:
+                other.start(t)
+        self.fault_log.append({
+            "kind": "engine_crash", "engine": i, "at": t,
+            "prompts_salvaged": len(salvaged),
+            "rollouts_lost": a.rollouts_lost})
+
+    def restore_engine(self, i: int, t: Optional[float] = None) -> None:
+        """Bring a crashed engine back. Before re-admission it gets a
+        catch-up *atomic* weight sync to the trainer's newest params, so
+        its first post-restart rollouts carry the exact current version
+        stamp — a rejoining engine never generates with stale weights."""
+        t = self.loop.now if t is None else t
+        a = self.actors[i]
+        if not a.failed:
+            return
+        a.restore(t, params=self.trainer.params,
+                  version=self.trainer.version)
+        self.router.set_alive(i, True)
+        self.fault_log.append({
+            "kind": "engine_restore", "engine": i, "at": t,
+            "version": self.trainer.version, "downtime": a.downtime})
+
+    def _crash_trainer(self, t: float) -> None:
+        self.trainer_stage.crash(t)
+        self.fault_log.append({
+            "kind": "trainer_crash", "at": t,
+            "steps_lost": self.trainer_stage.steps_lost})
+
+    def _restore_trainer(self, t: float) -> None:
+        v = self.trainer_stage.restore(t)
+        self.fault_log.append({
+            "kind": "trainer_restore", "at": t, "version": v})
+
+    def _fail_preprocess(self, t: float) -> None:
+        n = self.pre_stage.fail(t) if self.pre_stage is not None else 0
+        self.fault_log.append({
+            "kind": "preprocess_fail", "at": t, "rollouts_requeued": n})
+
+    def add_engine(self, speed: float = 1.0,
+                   at: Optional[float] = None) -> int:
+        """Elastic join: attach one new engine to the pool at runtime.
+        The joiner shares the incumbents' compiled step functions
+        (jit_donor), receives a catch-up atomic weight sync to the current
+        params/version *before* admission, and only then starts pulling
+        prompts from the router. Returns the new engine's pool index."""
+        t = self.loop.now if at is None else at
+        idx = len(self.engines)
+        eng = GenerationEngine(
+            self.cfg, self.trainer.params, self.ec,
+            self.router.source_for(idx), seed=self.seed + 1009 * idx,
+            jit_donor=self.engines[0] if self.engines else None)
+        self.engines.append(eng)
+        self.engine_speeds.append(float(speed))
+        self.router.add_engine(eng, speed)
+        a = self._make_actor(idx, eng, speed)
+        self.actors.append(a)
+        self.broadcaster.actors.append(a)
+        # catch-up sync before admission: version stamps stay exact
+        eng.set_weights(self.trainer.params, self.trainer.version,
+                        recompute_kv=self.pc.recompute_kv)
+        a.updates_applied += 1
+        a.start(t)
+        self.fault_log.append({
+            "kind": "engine_join", "engine": idx, "at": t,
+            "version": self.trainer.version})
+        return idx
+
+    def detach_engine(self, i: int, at: Optional[float] = None) -> int:
+        """Elastic shrink: administratively remove engine i. Its in-flight
+        prompts are salvaged and requeued to the survivors (partial decode
+        work is lost, same as a crash — there is no drain protocol); the
+        slot stays in the pool lists (marked dead) so indices are stable.
+        Returns the number of prompts salvaged."""
+        t = self.loop.now if at is None else at
+        a = self.actors[i]
+        if a.failed:
+            return 0
+        salvaged = a.fail(t)
+        self.router.set_alive(i, False)
+        if salvaged:
+            self.router.requeue(salvaged, now=t)
+        for j, other in enumerate(self.actors):
+            if j != i and not other.failed:
+                other.start(t)
+        self.fault_log.append({
+            "kind": "engine_detach", "engine": i, "at": t,
+            "prompts_salvaged": len(salvaged)})
+        return len(salvaged)
+
+    def pool_stats(self) -> Dict:
+        """Recovery/elasticity accounting for the whole pool: per-engine
+        failure counters layered onto router + broadcaster stats."""
+        st = self.router_stats()
+        for eng_stats, actor in zip(st["engines"], self.actors):
+            eng_stats.update({
+                "failures": actor.failures,
+                "recoveries": actor.recoveries,
+                "rollouts_lost": actor.rollouts_lost,
+                "prompts_salvaged": actor.prompts_salvaged,
+                "downtime": actor.downtime,
+            })
+        st["rollouts_lost"] = sum(a.rollouts_lost for a in self.actors)
+        st["prompts_salvaged"] = sum(a.prompts_salvaged for a in self.actors)
+        st["trainer"] = {
+            "crashes": self.trainer_stage.crashes,
+            "recoveries": self.trainer_stage.recoveries,
+            "steps_lost": self.trainer_stage.steps_lost,
+            "ckpts_saved": self.trainer_stage.ckpts_saved,
+            "last_ckpt_version": self.trainer_stage.last_ckpt_version,
+        }
+        st["broadcast"] = {
+            "chunks_lost": self.broadcaster.chunks_lost,
+            "retransmit_wait": self.broadcaster.retransmit_wait,
+            "deliveries_skipped": self.broadcaster.deliveries_skipped,
+        }
+        st["fault_log"] = list(self.fault_log)
         return st
 
     # ----- run ----------------------------------------------------------

@@ -305,6 +305,29 @@ class GenerationEngine:
     def stream_active(self) -> bool:
         return self._wstream is not None
 
+    # ----- crash semantics (DESIGN.md §8 failure model) -----------------
+    def reset_slots(self) -> int:
+        """Kill every in-flight sequence — engine-process crash semantics.
+        All slots go inactive and their token/KV contents are abandoned
+        (safe: admission overwrites tokens and prefill rewrites every
+        cache position a later decode step may read, exactly as on normal
+        slot reuse); any half-filled weight-stream shadow buffer is
+        dropped (the restart's catch-up sync supersedes it). Returns the
+        number of live slots killed, i.e. the rollouts lost."""
+        n = int(self._host_active.sum())
+        H = self.ec.n_slots
+        self._host_active[:] = False
+        self._host_ncached[:] = 0
+        self._host_prompt_len[:] = 1
+        self.problems = [None] * H
+        self._wstream = None
+        self.state = dict(
+            self.state,
+            n_cached=jnp.zeros((H,), jnp.int32),
+            prompt_len=jnp.ones((H,), jnp.int32),
+            active=jnp.zeros((H,), bool))
+        return n
+
     @staticmethod
     def _recompute_impl(params, st, cfg: ModelConfig):
         H, T = st["tokens"].shape

@@ -17,6 +17,13 @@ orchestrators' flash-unit HardwareModel closures.
 Tracks per-request latency (admission wait, end-to-end) so serving SLOs
 are measurable across in-flight updates — the paper's headline property:
 the engine only *briefly pauses* for new weights, no request is dropped.
+Graceful degradation under faults (DESIGN.md §8): waiting requests carry
+admission `deadline`s; a miss re-submits with capped exponential backoff
+(up to `max_retries`, then a final reject), and `queue_limit` sheds new
+submissions at the door when the waiting queue is saturated. Every
+submitted request ends in exactly one of {done, in_flight, waiting,
+backoff-held, rejected, shed} — `metrics()["requests_lost"]` asserts
+that accounting is airtight (always 0).
 Admission is policy-driven (`admission="fifo"|"sjf"` — shortest prompt
 first, the serving analogue of the pool router's length affinity), and
 prompts longer than the engine's budget fail fast: the request comes
@@ -29,8 +36,9 @@ version flips only at the final pointer swap.
 from __future__ import annotations
 
 import dataclasses
+import heapq
 from collections import deque
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -44,18 +52,24 @@ from repro.data.math_task import Problem
 class Request:
     rid: int
     prompt_ids: List[int]
-    submitted_at: float = 0.0
+    submitted_at: float = 0.0    # latest (re-)submission time
     admitted_at: Optional[float] = None
     finished_at: Optional[float] = None
     completion_ids: Optional[np.ndarray] = None
     weight_versions: Optional[np.ndarray] = None
-    rejected: bool = False      # prompt longer than the engine's budget
+    rejected: bool = False      # prompt over budget OR retries exhausted
+    # graceful degradation (DESIGN.md §8)
+    first_submitted_at: float = 0.0   # latency anchors here, so retry
+    #                                   backoff time counts against SLO
+    deadline: Optional[float] = None  # admission deadline (absolute)
+    retries: int = 0
+    shed: bool = False          # refused at the door (queue_limit)
 
     @property
     def latency(self) -> Optional[float]:
         if self.finished_at is None:
             return None
-        return self.finished_at - self.submitted_at
+        return self.finished_at - self.first_submitted_at
 
 
 class _QueueSource:
@@ -94,12 +108,26 @@ class Server:
     """Continuous-batching server with in-flight weight updates."""
 
     def __init__(self, cfg: ModelConfig, params, ec: EngineConfig,
-                 seed: int = 0, admission: str = "fifo"):
+                 seed: int = 0, admission: str = "fifo",
+                 deadline: Optional[float] = None, max_retries: int = 0,
+                 retry_backoff: float = 4.0, backoff_cap: float = 64.0,
+                 queue_limit: Optional[int] = None):
         self.cfg, self.ec = cfg, ec
         self.waiting: deque = deque()
         self.in_flight: Dict[int, Request] = {}
         self.done: List[Request] = []
         self.rejected: List[Request] = []
+        self.shed: List[Request] = []
+        # per-request admission deadline + retry/backoff + load shedding
+        self.deadline = deadline
+        self.max_retries = int(max_retries)
+        self.retry_backoff = retry_backoff
+        self.backoff_cap = backoff_cap
+        self.queue_limit = queue_limit
+        self.requests_retried = 0
+        self.deadline_misses = 0
+        self._backoff: List[Tuple[float, int, Request]] = []  # heap
+        self._bseq = 0
         self._next_rid = 0
         self._trainer: Optional[Callable] = None
         self._source = _QueueSource(self, admission=admission)
@@ -125,8 +153,19 @@ class Server:
     def submit(self, prompt_ids: List[int]) -> int:
         rid = self._next_rid
         self._next_rid += 1
-        self.waiting.append(Request(rid, list(prompt_ids),
-                                    submitted_at=self.clock))
+        now = self.clock
+        req = Request(rid, list(prompt_ids), submitted_at=now,
+                      first_submitted_at=now)
+        if (self.queue_limit is not None
+                and len(self.waiting) >= self.queue_limit):
+            # load shedding: refuse at the door rather than letting the
+            # waiting queue (and every deadline in it) blow out
+            req.shed, req.rejected, req.finished_at = True, True, now
+            self.shed.append(req)
+            return rid
+        if self.deadline is not None:
+            req.deadline = now + self.deadline
+        self.waiting.append(req)
         return rid
 
     def connect_trainer(self, get_weights: Callable[[], tuple]) -> None:
@@ -185,12 +224,46 @@ class Server:
         # finished (the tick event itself fires at the tick *start* time)
         self.loop.post(t, lambda now: None)
 
+    def _sweep_deadlines(self, now: float) -> None:
+        """Graceful degradation sweep, run before each admission tick:
+        (1) requests whose backoff hold expired re-enter the waiting
+        queue with a fresh deadline; (2) waiting requests past their
+        deadline either retry — exponential backoff hold, capped at
+        `backoff_cap` — or, with retries exhausted, reject for good.
+        Deadlines only govern *admission*: once a request holds a decode
+        slot it runs to completion."""
+        while self._backoff and self._backoff[0][0] <= now:
+            _, _, req = heapq.heappop(self._backoff)
+            req.submitted_at = now
+            if self.deadline is not None:
+                req.deadline = now + self.deadline
+            self.waiting.append(req)
+        still: deque = deque()
+        for req in self.waiting:
+            if req.deadline is None or now <= req.deadline:
+                still.append(req)
+                continue
+            self.deadline_misses += 1
+            if req.retries < self.max_retries:
+                req.retries += 1
+                self.requests_retried += 1
+                hold = min(self.retry_backoff * (2.0 ** (req.retries - 1)),
+                           self.backoff_cap)
+                heapq.heappush(self._backoff, (now + hold, self._bseq, req))
+                self._bseq += 1
+            else:
+                req.rejected, req.finished_at = True, now
+                self.rejected.append(req)
+        self.waiting = still
+
     def step(self, dt: float = 1.0) -> List[Request]:
         """Admit waiting requests, decode one token for every in-flight
         request; returns requests completed this step. One call = one
         tick of the shared event scheduler."""
         self._dt = dt
         self._completed_now = []
+        if (self.deadline is not None or self._backoff):
+            self._sweep_deadlines(self.clock)
         self.loop.post(self.loop.now, self.actor.tick)
         self.loop.run()
         return self._completed_now
@@ -200,10 +273,28 @@ class Server:
         lat = [r.latency for r in self.done if r.latency is not None]
         wait = [r.admitted_at - r.submitted_at for r in self.done
                 if r.admitted_at is not None]
+        # retried requests' total time — backoff holds included, since
+        # latency anchors at first_submitted_at (the SLO the client sees)
+        rlat = [r.latency for r in self.done
+                if r.retries and r.latency is not None]
+        accounted = (len(self.done) + len(self.in_flight)
+                     + len(self.waiting) + len(self._backoff)
+                     + len(self.rejected) + len(self.shed))
         return {
             "served": len(self.done),
             "in_flight": len(self.in_flight),
             "waiting": len(self.waiting),
+            # graceful-degradation accounting (DESIGN.md §8)
+            "requests_rejected": len(self.rejected),
+            "requests_retried": self.requests_retried,
+            "requests_shed": len(self.shed),
+            "deadline_misses": self.deadline_misses,
+            "backoff_held": len(self._backoff),
+            "requests_lost": self._next_rid - accounted,   # invariant: 0
+            "retry_p50_latency": float(np.percentile(rlat, 50)) if rlat
+            else 0.0,
+            "retry_p99_latency": float(np.percentile(rlat, 99)) if rlat
+            else 0.0,
             "p50_latency": float(np.percentile(lat, 50)) if lat else 0.0,
             "p99_latency": float(np.percentile(lat, 99)) if lat else 0.0,
             "mean_admission_wait": float(np.mean(wait)) if wait else 0.0,

@@ -192,6 +192,25 @@ class Trainer:
         self.history.append(m)
         return m
 
+    # ---- crash-restart checkpointing (DESIGN.md §8) -------------------
+    def save(self, path: str) -> str:
+        """Atomic checkpoint of the full TrainState (params + optimizer
+        moments + version) — everything a crash-restart needs to resume
+        with a bit-identical next optimizer step."""
+        from repro.checkpoint import checkpoint
+        checkpoint.save(path, self.state)
+        return checkpoint._norm(path)
+
+    def restore(self, path: str) -> int:
+        """Restore params/opt-state/version from `path`; returns the
+        restored version. The compiled step function is untouched (same
+        cfg), so the next `step` after a restore is bit-identical to the
+        step an uninterrupted run would have taken on the same batch."""
+        from repro.checkpoint import checkpoint
+        loaded = checkpoint.load(path, self.state)
+        self.state = jax.tree.map(jnp.asarray, loaded)
+        return self.version
+
     def fetch_metrics(self) -> List[Dict[str, float]]:
         """Materialize the whole history in one batched device_get (the
         on-demand sync point of the device-resident loop)."""

@@ -80,6 +80,14 @@ def main() -> None:
     ap.add_argument("--recompute-kv", action="store_true",
                     help="§5.1 ablation: recompute cache at weight updates")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--fault-plan", default=None,
+                    help="chaos testing (DESIGN.md §8): comma-separated "
+                         "fault specs, e.g. 'engine:0@300r200' (crash engine "
+                         "0 at t=300, restart 200 flashes later), "
+                         "'trainer@500r100', 'pre@400', "
+                         "'link:1@600d300p0.5' (lossy broadcast link), or "
+                         "'chaos:<seed>[:<horizon>]' for a seeded random "
+                         "plan; pipeline mode only")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--eval-every", type=int, default=0,
@@ -115,6 +123,12 @@ def main() -> None:
     if args.engine_speeds:
         engine_speeds = [float(x) for x in args.engine_speeds.split(",")]
 
+    fault_plan = None
+    if args.fault_plan:
+        from repro.core.events import FaultPlan
+        fault_plan = FaultPlan.parse(args.fault_plan,
+                                     n_engines=args.engines)
+
     if args.mode == "pipeline":
         runner = PipelineRL(
             cfg, params, task, ec,
@@ -126,9 +140,11 @@ def main() -> None:
                            broadcast_chunks=args.bcast_chunks,
                            engine_speeds=engine_speeds, router=args.router,
                            ckpt_every=(args.ckpt_every if args.ckpt_pause
-                                       else 0),
-                           ckpt_pause=args.ckpt_pause),
-            trainer=trainer, seed=args.seed, preprocessor=preprocessor)
+                                       or args.ckpt_dir else 0),
+                           ckpt_pause=args.ckpt_pause,
+                           ckpt_dir=args.ckpt_dir),
+            trainer=trainer, seed=args.seed, preprocessor=preprocessor,
+            fault_plan=fault_plan)
     else:
         runner = ConventionalRL(
             cfg, params, task, ec,
@@ -173,6 +189,16 @@ def main() -> None:
                 f"{e['name']}(x{e['speed']:g})={e['assigned']}p/"
                 f"{e['prompt_tokens']}tok/{e['declined']}decl"
                 for e in rs["engines"]), flush=True)
+        if fault_plan is not None:
+            ps = runner.pool_stats()
+            tr = ps["trainer"]
+            print(f"faults: {len(runner.fault_log)} events, "
+                  f"rollouts_lost={ps['rollouts_lost']}, "
+                  f"prompts_salvaged={ps['prompts_salvaged']}, "
+                  f"requeued={ps['prompts_requeued']}, "
+                  f"trainer crashes={tr['crashes']} "
+                  f"(steps_lost={tr['steps_lost']}, "
+                  f"restored from v{tr['last_ckpt_version']})", flush=True)
 
     if args.log_out:
         os.makedirs(os.path.dirname(args.log_out) or ".", exist_ok=True)

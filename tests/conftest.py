@@ -1,3 +1,7 @@
+import os
+import signal
+import threading
+
 import jax
 import pytest
 
@@ -5,6 +9,51 @@ from repro.configs.tiny import config as tiny_config
 from repro.data.math_task import MathTask
 from repro.models import model as M
 from repro.sharding import tree_values
+
+# ---------------------------------------------------------------------------
+# per-test timeout: use pytest-timeout when installed (CI), else fall back
+# to a SIGALRM watchdog so a hung event loop / chaos test fails loudly
+# instead of wedging the whole suite. The fallback only arms on the main
+# thread of a platform that has SIGALRM (i.e. not Windows).
+# ---------------------------------------------------------------------------
+
+_TIMEOUT_S = float(os.environ.get("PYTEST_PER_TEST_TIMEOUT", "300"))
+
+try:
+    import pytest_timeout  # noqa: F401
+    _HAVE_PYTEST_TIMEOUT = True
+except ImportError:
+    _HAVE_PYTEST_TIMEOUT = False
+
+
+def pytest_configure(config):
+    if _HAVE_PYTEST_TIMEOUT and config.getoption("timeout", None) is None \
+            and not config.getini("timeout"):
+        config.option.timeout = _TIMEOUT_S
+
+
+if not _HAVE_PYTEST_TIMEOUT:
+    @pytest.hookimpl(hookwrapper=True)
+    def pytest_runtest_call(item):
+        can_alarm = (hasattr(signal, "SIGALRM") and _TIMEOUT_S > 0
+                     and threading.current_thread()
+                     is threading.main_thread())
+        if not can_alarm:
+            yield
+            return
+
+        def _on_alarm(signum, frame):
+            raise TimeoutError(
+                f"test exceeded {_TIMEOUT_S:.0f}s "
+                f"(PYTEST_PER_TEST_TIMEOUT fallback watchdog)")
+
+        prev = signal.signal(signal.SIGALRM, _on_alarm)
+        signal.setitimer(signal.ITIMER_REAL, _TIMEOUT_S)
+        try:
+            yield
+        finally:
+            signal.setitimer(signal.ITIMER_REAL, 0)
+            signal.signal(signal.SIGALRM, prev)
 
 
 @pytest.fixture(scope="session")

@@ -1,0 +1,478 @@
+"""Fault tolerance (DESIGN.md §8): fault injection, in-flight work
+recovery, crash-restart checkpointing, and the serving front's graceful
+degradation.
+
+The structural claims under test:
+  - chaos replay is deterministic: two identical-seed runs under the same
+    FaultPlan produce bit-equal rollout streams
+  - an engine kill loses only in-flight *decode* work: the victim's
+    prompts are salvaged, requeued at the front of the router's pending
+    buffer, and re-admitted by the survivors
+  - a trainer crash restores params + optimizer moments + version from
+    the last durable checkpoint, and the next optimizer step is
+    bit-identical to the one an uninterrupted run would take
+  - the Server never loses a request: every submission ends in exactly
+    one of done/in-flight/waiting/backoff/rejected/shed
+"""
+import hashlib
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpoint
+from repro.configs.tiny import config as tiny_config
+from repro.core.events import (
+    EventLoop, FaultPlan, PreprocessStage, TrainerStage, WeightBroadcaster,
+)
+from repro.core.pipeline import PipelineConfig, PipelineRL
+from repro.core.queues import QueueUnderflow, SampleQueue
+from repro.core.rollout import EngineConfig
+from repro.core.serving import Server
+from repro.core.sim import HardwareModel
+from repro.core.trainer import Trainer
+from repro.data.math_task import MathTask
+from repro.data.packing import Rollout, pack
+from repro.models import model as M
+from repro.sharding import tree_values
+
+# slow interconnect + saturated decode so the 4-step run spans ~600
+# flashes (first optimizer step ~220): fault times below are tuned to hit
+# live decode slots between the first and second step
+HW = HardwareModel(h_sat=16, bcast_bytes_per_flash=2e3,
+                   bcast_install_flash=1.0)
+KILL_AT, RESTORE_AFTER = 120.0, 240.0
+
+
+@pytest.fixture(scope="module")
+def setup():
+    task = MathTask(max_operand=5, ops="+")
+    cfg = tiny_config(vocab_size=task.tok.vocab_size, d_model=64, n_layers=1)
+    params = tree_values(M.init_params(cfg, jax.random.PRNGKey(0)))
+    return task, cfg, params
+
+
+def _pipe(setup, plan=None, steps=4, ckpt_dir=None, ckpt_every=0,
+          record=None):
+    task, cfg, params = setup
+    ec = EngineConfig(n_slots=8, max_len=16)
+    pc = PipelineConfig(batch_size=4, n_opt_steps=steps, n_chips=8,
+                        train_chips=4, pack_rows=2, pack_seq=48,
+                        n_engines=2, ckpt_every=ckpt_every,
+                        ckpt_dir=ckpt_dir)
+    p = PipelineRL(cfg, params, task, ec, pc, hw=HW, trainer=Trainer(cfg, params),
+                   seed=0, fault_plan=plan)
+    if record is not None:
+        orig_put = p.queue.put
+
+        def tap(rollouts):
+            for r in rollouts:
+                record.append(np.asarray(r.tokens).tobytes()
+                              + np.asarray(r.weight_versions).tobytes())
+            orig_put(rollouts)
+
+        p.queue.put = tap
+    return p
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan: construction, parse DSL, replayable chunk-loss oracle
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_parse_dsl():
+    plan = FaultPlan.parse(
+        "engine:1@300r150, trainer@500r100, pre@400, link:0@600d300p0.5")
+    kinds = [f.kind for f in plan.faults]
+    assert kinds == ["engine_crash", "trainer_crash", "preprocess_fail",
+                     "link_degrade"]
+    e, t, _, l = plan.faults
+    assert (e.engine, e.at, e.restart_after) == (1, 300.0, 150.0)
+    assert (t.at, t.restart_after) == (500.0, 100.0)
+    assert (l.engine, l.at, l.duration, l.drop_prob) == (0, 600.0, 300.0, 0.5)
+    # permanent crash: no restart group
+    assert FaultPlan.parse("engine:0@10").faults[0].restart_after is None
+    with pytest.raises(ValueError):
+        FaultPlan.parse("flux-capacitor@88")
+
+
+def test_fault_plan_chaos_seed_deterministic():
+    a = FaultPlan.chaos(42, horizon=1000.0, n_engines=4, n_crashes=3,
+                        link_windows=2)
+    b = FaultPlan.chaos(42, horizon=1000.0, n_engines=4, n_crashes=3,
+                        link_windows=2)
+    assert [vars(f) for f in a.faults] == [vars(f) for f in b.faults]
+    c = FaultPlan.chaos(43, horizon=1000.0, n_engines=4, n_crashes=3,
+                        link_windows=2)
+    assert [vars(f) for f in a.faults] != [vars(f) for f in c.faults]
+
+
+def test_chunk_loss_oracle_is_order_independent():
+    plan = FaultPlan(seed=9).degrade_link(at=0.0, duration=1e9,
+                                          drop_prob=0.5)
+    keys = [(e, v, k, a) for e in range(2) for v in range(3)
+            for k in range(4) for a in range(2)]
+    fwd = {key: plan.chunk_lost(*key, t=5.0) for key in keys}
+    rev = {key: plan.chunk_lost(*key, t=5.0) for key in reversed(keys)}
+    assert fwd == rev
+    assert any(fwd.values()) and not all(fwd.values())
+    # outside the window nothing is lost; drop_prob=1 loses everything
+    assert not plan.chunk_lost(0, 0, 0, 0, t=-1.0)
+    assert FaultPlan().degrade_link(at=0.0, duration=10.0).chunk_lost(
+        0, 0, 0, 0, t=5.0)
+
+
+def test_lossy_broadcast_deterministic_and_terminating():
+    class StubActor:
+        failed = False
+
+        def __init__(self):
+            self.streams = []
+
+        def deliver_stream(self, params, version, arrivals, **kw):
+            self.streams.append(list(arrivals))
+
+    params = {"w": np.zeros((64, 64), np.float32)}
+    plan = FaultPlan(seed=5).degrade_link(at=0.0, duration=1e9,
+                                          drop_prob=0.4)
+    runs = []
+    for _ in range(2):
+        actors = [StubActor(), StubActor()]
+        bc = WeightBroadcaster(HW, actors, mode="streamed", n_chunks=8,
+                               fault_plan=plan)
+        bc.publish(params, version=3, now=0.0)
+        runs.append([a.streams for a in actors])
+        assert bc.chunks_lost > 0
+        assert bc.retransmit_wait > 0
+    assert runs[0] == runs[1]
+    # arrivals stay strictly increasing (serialized cursor) per stream
+    for streams in runs[0]:
+        for arr in streams:
+            assert all(b > a for a, b in zip(arr, arr[1:]))
+
+
+def test_broadcaster_skips_failed_actors():
+    class StubActor:
+        def __init__(self, failed):
+            self.failed = failed
+            self.n = 0
+
+        def deliver_atomic(self, *a, **kw):
+            self.n += 1
+
+    alive, dead = StubActor(False), StubActor(True)
+    bc = WeightBroadcaster(HW, [alive, dead], mode="atomic")
+    bc.publish({"w": np.zeros((4,), np.float32)}, version=1, now=0.0)
+    assert (alive.n, dead.n) == (1, 0)
+    assert bc.deliveries_skipped == 1
+
+
+# ---------------------------------------------------------------------------
+# SampleQueue recovery surface
+# ---------------------------------------------------------------------------
+
+def _mk_rollout(i, length=4):
+    return Rollout(tokens=np.full(length, i % 7, np.int32), prompt_len=1,
+                   behavior_logprobs=np.zeros(length, np.float32),
+                   reward=float(i), weight_versions=np.zeros(length, np.int32),
+                   prompt_key=i)
+
+
+def test_requeue_front_order_and_counters():
+    q = SampleQueue()
+    q.put([_mk_rollout(i) for i in range(4)])
+    salvaged = q.pop(2)
+    q.requeue_front(salvaged)
+    # original order restored, total_put not inflated
+    assert [r.prompt_key for r in q.pop(4)] == [0, 1, 2, 3]
+    assert q.total_put == 4
+    assert q.requeued == 2
+
+
+def test_requeue_front_respects_maxsize():
+    q = SampleQueue(maxsize=3)
+    q.put([_mk_rollout(i) for i in range(3)])
+    q.requeue_front([_mk_rollout(97), _mk_rollout(98)])
+    # drop-oldest evicts the salvaged (oldest) entries first: 97 then 98
+    assert len(q) == 3
+    assert q.dropped == 2
+    assert [r.prompt_key for r in q.pop(3)] == [0, 1, 2]
+
+
+def test_queue_underflow_carries_depth():
+    q = SampleQueue()
+    q.put([_mk_rollout(0)])
+    with pytest.raises(QueueUnderflow) as ei:
+        q.pop(3)
+    assert (ei.value.depth, ei.value.requested) == (1, 3)
+    assert isinstance(ei.value, ValueError)  # pre-existing handlers hold
+
+
+# ---------------------------------------------------------------------------
+# checkpoint hardening
+# ---------------------------------------------------------------------------
+
+def _tree():
+    return {"layer": {"w": np.arange(6, dtype=np.float32).reshape(2, 3),
+                      "b": np.ones((3,), np.float32)},
+            "step": np.asarray(7, np.int32)}
+
+
+def test_checkpoint_roundtrip_normalizes_suffix(tmp_path):
+    bare = str(tmp_path / "ckpt")           # no .npz
+    checkpoint.save(bare, _tree())
+    assert os.path.exists(bare + ".npz")
+    like = jax.tree.map(np.zeros_like, _tree())
+    out = checkpoint.load(bare, like)       # bare path loads too
+    assert all(np.array_equal(a, b) for a, b in zip(
+        jax.tree.leaves(out), jax.tree.leaves(_tree())))
+    # atomic save leaves no temp droppings
+    assert [f for f in os.listdir(tmp_path) if f.endswith(".tmp")] == []
+
+
+def test_checkpoint_corrupt_file_raises_checkpoint_error(tmp_path):
+    path = str(tmp_path / "bad.npz")
+    with open(path, "wb") as f:
+        f.write(b"this is not an npz archive")
+    with pytest.raises(checkpoint.CheckpointError, match="corrupt"):
+        checkpoint.load(path, _tree())
+    with pytest.raises(FileNotFoundError):
+        checkpoint.load(str(tmp_path / "absent.npz"), _tree())
+
+
+def test_checkpoint_key_and_shape_mismatches_are_named(tmp_path):
+    path = str(tmp_path / "ckpt.npz")
+    checkpoint.save(path, _tree())
+    like = _tree()
+    like["extra"] = np.zeros((2,), np.float32)
+    del like["step"]
+    with pytest.raises(checkpoint.CheckpointError) as ei:
+        checkpoint.load(path, like)
+    assert "extra" in str(ei.value) and "step" in str(ei.value)
+    like = _tree()
+    like["layer"]["w"] = np.zeros((5, 5), np.float32)
+    with pytest.raises(checkpoint.CheckpointError, match="layer/w"):
+        checkpoint.load(path, like)
+
+
+# ---------------------------------------------------------------------------
+# trainer crash-restart: checkpoint parity
+# ---------------------------------------------------------------------------
+
+def _batch(task, cfg, seed):
+    rng = np.random.default_rng(seed)
+    rolls = []
+    for i in range(4):
+        toks = rng.integers(0, cfg.vocab_size, size=10).astype(np.int32)
+        rolls.append(Rollout(
+            tokens=toks, prompt_len=3,
+            behavior_logprobs=rng.normal(size=10).astype(np.float32) - 2.0,
+            reward=float(rng.choice([-1.0, 1.0])),
+            weight_versions=np.zeros(10, np.int32), prompt_key=i))
+    b = pack(rolls, 2, 48)
+    b.pop("packing_stats")
+    return b
+
+
+def test_trainer_restore_step_parity(setup, tmp_path):
+    """After a crash, restoring the checkpoint and re-running the next
+    batch must be bit-identical to the uninterrupted run — params, opt
+    moments, and version all line up (same compiled step function)."""
+    task, cfg, params = setup
+    b1, b2 = _batch(task, cfg, 1), _batch(task, cfg, 2)
+    tr = Trainer(cfg, params)
+    tr.step(b1)
+    ckpt = tr.save(str(tmp_path / "trainer_latest"))
+    tr.step(b2)
+    uninterrupted = jax.tree.map(np.asarray, tr.state)
+    # crash: state diverges past the checkpoint; restore rolls it back
+    tr.step(_batch(task, cfg, 3))
+    assert tr.restore(ckpt) == 1
+    tr.step(b2)
+    restored = jax.tree.map(np.asarray, tr.state)
+    flat_u = jax.tree.leaves(uninterrupted)
+    flat_r = jax.tree.leaves(restored)
+    assert all(np.array_equal(a, b) for a, b in zip(flat_u, flat_r))
+    assert tr.version == 2
+
+
+def test_pipeline_trainer_crash_restores_and_finishes(setup, tmp_path):
+    plan = FaultPlan().trainer_crash(at=KILL_AT + RESTORE_AFTER,
+                                     restart_after=60.0)
+    p = _pipe(setup, plan, ckpt_dir=str(tmp_path), ckpt_every=2)
+    p.run()
+    tr = p.pool_stats()["trainer"]
+    assert p.trainer.version >= 4
+    assert tr["crashes"] == 1 and tr["recoveries"] == 1
+    assert tr["ckpts_saved"] >= 2          # seed ckpt + periodic
+    assert os.path.exists(os.path.join(str(tmp_path), "trainer_latest.npz"))
+    kinds = [e["kind"] for e in p.fault_log]
+    assert kinds.count("trainer_crash") == 1
+    assert kinds.count("trainer_restore") == 1
+
+
+# ---------------------------------------------------------------------------
+# engine kill, salvage, requeue, elastic rejoin
+# ---------------------------------------------------------------------------
+
+def test_engine_kill_salvages_and_requeues(setup):
+    plan = FaultPlan().engine_crash(at=KILL_AT, engine=1)  # permanent
+    p = _pipe(setup, plan)
+    p.run()
+    ps = p.pool_stats()
+    assert p.trainer.version >= 4          # survivor carries the run
+    victim = ps["engines"][1]
+    assert victim["failures"] == 1 and not victim["alive"]
+    assert victim["rollouts_lost"] > 0     # mid-decode kill
+    assert ps["prompts_salvaged"] == victim["prompts_salvaged"] > 0
+    assert ps["prompts_requeued"] == ps["prompts_salvaged"]
+    # every salvaged prompt was re-admitted by the survivor
+    assert ps["requeues_readmitted"] == ps["prompts_requeued"]
+    assert ps["requeue_latency_max"] >= ps["requeue_latency_mean"] >= 0.0
+
+
+def test_engine_restore_catches_up_weights(setup):
+    plan = FaultPlan().engine_crash(at=KILL_AT, engine=1,
+                                    restart_after=RESTORE_AFTER)
+    p = _pipe(setup, plan, steps=6)
+    p.run()
+    a = p.actors[1]
+    assert a.failures == 1 and a.recoveries == 1
+    assert a.downtime == pytest.approx(RESTORE_AFTER)
+    restores = [e for e in p.fault_log if e["kind"] == "engine_restore"]
+    assert len(restores) == 1
+    # the catch-up atomic sync hands the engine the restore-time version
+    assert p.engines[1].version >= restores[0]["version"] > 0
+    assert p.router.alive[1]
+
+
+def test_chaos_replay_is_bit_equal():
+    digests = []
+    for _ in range(2):
+        # a fresh task per run: the prompt stream's RNG is part of the
+        # replayed state (a shared task would advance between runs)
+        task = MathTask(max_operand=5, ops="+")
+        cfg = tiny_config(vocab_size=task.tok.vocab_size, d_model=64,
+                          n_layers=1)
+        params = tree_values(M.init_params(cfg, jax.random.PRNGKey(0)))
+        rec = []
+        plan = (FaultPlan(seed=3)
+                .engine_crash(at=KILL_AT, engine=1,
+                              restart_after=RESTORE_AFTER)
+                .degrade_link(at=KILL_AT, duration=RESTORE_AFTER,
+                              drop_prob=0.3))
+        p = _pipe((task, cfg, params), plan, record=rec)
+        p.run()
+        digests.append(hashlib.sha256(b"".join(rec)).hexdigest())
+    assert digests[0] == digests[1]
+
+
+def test_elastic_add_and_detach_engine(setup):
+    p = _pipe(setup, steps=2)
+    p.run()
+    i = p.add_engine(speed=1.0)
+    assert i == 2 and len(p.engines) == 3
+    # catch-up sync before admission: the joiner starts at the trainer's
+    # current version, never at 0
+    assert p.engines[i].version == p.trainer.version > 0
+    p.run(4)
+    assert p.router.assigned[i] > 0        # the joiner pulled real work
+    salvaged = p.detach_engine(i)
+    assert p.actors[i].failed and not p.router.alive[i]
+    assert salvaged >= 0
+    p.run(5)                               # survivors finish the run
+    assert p.trainer.version >= 5
+
+
+# ---------------------------------------------------------------------------
+# preprocessor failure: in-flight batch survives via requeue_front
+# ---------------------------------------------------------------------------
+
+def test_preprocess_fail_requeues_in_flight_batch():
+    class StubPre:
+        def process(self, rollouts):
+            return rollouts
+
+        def stage_time(self, n_tokens):
+            return 10.0
+
+    class StubTrainerStage:
+        def __init__(self):
+            self.got = []
+
+        def inbox_waiting(self):
+            return 0
+
+        def submit(self, rollouts, t, raw_reward=None):
+            self.got.append([r.prompt_key for r in rollouts])
+
+    loop = EventLoop()
+    q = SampleQueue()
+    ts = StubTrainerStage()
+    pre = PreprocessStage(loop, StubPre(), q, batch_size=4,
+                          trainer_stage=ts)
+    q.put([_mk_rollout(i) for i in range(4)])
+    pre.kick(0.0)
+    assert pre.busy
+    n = pre.fail(2.0)   # mid-flight: batch salvaged, stage auto-restarts
+    assert n == 4 and pre.batches_failed == 1
+    assert pre.rollouts_requeued == 4
+    assert pre.busy      # the immediate re-kick reprocesses the salvage
+    loop.run()           # stale delivery no-ops; the retry delivers once
+    assert ts.got == [[0, 1, 2, 3]]
+    # idle failure salvages nothing but still counts
+    assert pre.fail(20.0) == 0
+    assert pre.batches_failed == 2
+
+
+# ---------------------------------------------------------------------------
+# serving front: deadlines, retry/backoff, shedding, zero lost requests
+# ---------------------------------------------------------------------------
+
+def test_server_deadline_retry_shed_accounting(setup):
+    task, cfg, params = setup
+    srv = Server(cfg, params, EngineConfig(n_slots=4, max_len=16),
+                 deadline=24.0, max_retries=2, retry_backoff=4.0,
+                 queue_limit=16)
+    srv.connect_trainer(lambda: (params, srv._updates + 1))
+    n_sub = 24
+    for _ in range(n_sub):
+        srv.submit(task.sample().prompt_ids)
+    # queue_limit=16 bounds the *waiting* queue (admission is lazy — no
+    # step has run yet); the remaining 8 shed at the door
+    assert srv.metrics()["requests_shed"] == n_sub - 16
+    steps = 0
+    while (srv.waiting or srv.in_flight or srv._backoff) and steps < 600:
+        srv.step()
+        steps += 1
+        if steps % 16 == 0:
+            srv.request_weight_update(streamed=True)
+    m = srv.metrics()
+    assert m["requests_lost"] == 0                     # the invariant
+    assert m["requests_shed"] > 0
+    assert m["deadline_misses"] > 0 and m["requests_retried"] > 0
+    assert (m["served"] + m["requests_rejected"] + m["requests_shed"]
+            == n_sub)
+    assert m["retry_p99_latency"] >= m["retry_p50_latency"] >= 0.0
+    # retried-but-served requests paid their backoff in the SLO metric
+    retried_done = [r for r in srv.done if r.retries]
+    for r in retried_done:
+        assert r.latency > r.finished_at - r.submitted_at
+
+
+def test_server_no_deadline_is_unchanged(setup):
+    """Defaults (no deadline/retries/shed) keep the legacy behavior:
+    nothing rejected, nothing retried, everything eventually served."""
+    task, cfg, params = setup
+    srv = Server(cfg, params, EngineConfig(n_slots=4, max_len=16))
+    for _ in range(8):
+        srv.submit(task.sample().prompt_ids)
+    steps = 0
+    while (srv.waiting or srv.in_flight) and steps < 400:
+        srv.step()
+        steps += 1
+    m = srv.metrics()
+    assert m["served"] == 8
+    assert m["requests_lost"] == 0
+    assert m["deadline_misses"] == m["requests_retried"] == 0
+    assert m["requests_shed"] == 0
