@@ -13,6 +13,18 @@ plus a ring-buffer (sliding-window) variant: chunked admission over a
 CL=32 ring cache — the long-context serve path that used to fall back to
 the legacy loop.
 
+Paged-KV rows (DESIGN.md §9, written to BENCH_paged.json and folded into
+BENCH_engine.json):
+
+  - GRPO admission amortization: a G-way group of identical prompts is
+    prefilled ONCE on the paged engine (G-1 copy-on-write forks) vs G
+    full prefills on the slot array — prompt prefills, prefill tokens,
+    pages charged, and TTFT for the group
+  - capacity at fixed memory: with a pool holding HALF the slot-array's
+    cache footprint, the paged engine still admits every short prompt
+    (pages are allocated per block actually written) while the
+    slot-array equivalent covers half the batch
+
     PYTHONPATH=src python -m benchmarks.run --only engine
 """
 from __future__ import annotations
@@ -36,7 +48,9 @@ N_SLOTS = 8
 MAX_LEN = 96
 CHUNK = 16
 RING_WINDOW = 32
+PAGE_SIZE = 16
 JSON_PATH = "BENCH_engine.json"
+PAGED_JSON_PATH = "BENCH_paged.json"
 
 
 def _source(vocab: int, n: int):
@@ -82,6 +96,61 @@ def _bench(chunk: int, ring: bool = False):
     return ttft, invocations, sampled / total_t
 
 
+def _bench_paged_grpo(cache: str):
+    """G=N_SLOTS identical prompts (one GRPO group): admission cost and
+    TTFT, slots vs paged-with-prefix-sharing. Returns the stats dict."""
+    task, cfg, params = tiny_setup(d_model=64, n_layers=2)
+    prompt = [1 + j % (cfg.vocab_size - 3) for j in range(PROMPT_LEN)]
+    probs = [Problem(list(prompt), 0) for _ in range(2 * N_SLOTS)]
+    it = iter(probs)
+    ec = EngineConfig(n_slots=N_SLOTS, max_len=MAX_LEN, prefill_chunk=CHUNK,
+                      temperature=1.0, eos_id=-1, cache=cache,
+                      page_size=PAGE_SIZE)
+    eng = GenerationEngine(cfg, params, ec, lambda: next(it, None), seed=0)
+    eng.refill()                      # warm-up admission (jit compile)
+    while eng.n_active:
+        eng.step(task)
+    t0 = time.perf_counter()
+    eng.refill()
+    eng.step(task)
+    np.asarray(eng.state["tokens"])   # force device sync
+    ttft = time.perf_counter() - t0
+    return {
+        "prompt_prefills": eng.prompt_prefills,
+        "prefill_tokens": eng.last_admit_prefill_tokens,
+        "pages_allocated": eng.last_admit_pages,
+        "prefix_forks": getattr(eng, "prefix_forks", 0),
+        "group_ttft_s": ttft,
+    }
+
+
+def _bench_paged_capacity():
+    """Concurrent short prompts admitted under a fixed memory budget of
+    HALF the slot-array footprint. The slot array cannot shrink below one
+    max_len stripe per sequence; the paged pool backs only blocks that
+    are actually written."""
+    task, cfg, params = tiny_setup(d_model=64, n_layers=2)
+    short = 8
+    probs = [Problem([1 + (i + j) % (cfg.vocab_size - 3)
+                      for j in range(short)], 0) for i in range(N_SLOTS)]
+    it = iter(probs)
+    blocks_per_slot = MAX_LEN // PAGE_SIZE
+    half_pool = (N_SLOTS * blocks_per_slot) // 2 + 1   # + trash page
+    ec = EngineConfig(n_slots=N_SLOTS, max_len=MAX_LEN, prefill_chunk=CHUNK,
+                      temperature=1.0, eos_id=-1, cache="paged",
+                      page_size=PAGE_SIZE, n_pages=half_pool)
+    eng = GenerationEngine(cfg, params, ec, lambda: next(it, None), seed=0)
+    admitted_paged = eng.refill()
+    slot_equivalent = (half_pool - 1) // blocks_per_slot
+    return {
+        "pool_pages": half_pool - 1,
+        "slot_array_capacity": slot_equivalent,
+        "paged_admitted": admitted_paged,
+        "pages_allocated": eng.last_admit_pages,
+        "capacity_x": admitted_paged / max(slot_equivalent, 1),
+    }
+
+
 def engine_benchmarks() -> List[Row]:
     rows: List[Row] = []
     results = {}
@@ -105,6 +174,27 @@ def engine_benchmarks() -> List[Row]:
                  f"invocations_to_first_sample={inv};window={RING_WINDOW}"))
     rows.append(("engine/tokens_per_sec_chunked_ring", 1e6 / max(tps, 1e-9),
                  f"tok_s={tps:.1f}"))
+    # paged KV cache (DESIGN.md §9): GRPO admission amortization + fixed-
+    # memory capacity
+    grpo = {c: _bench_paged_grpo(c) for c in ("slots", "paged")}
+    cap = _bench_paged_capacity()
+    amort = (grpo["slots"]["prefill_tokens"]
+             / max(grpo["paged"]["prefill_tokens"], 1))
+    rows.append((
+        "engine/paged_grpo_prefill_tokens", grpo["paged"]["prefill_tokens"],
+        f"slots={grpo['slots']['prefill_tokens']};"
+        f"prefills {grpo['slots']['prompt_prefills']}->"
+        f"{grpo['paged']['prompt_prefills']};"
+        f"forks={grpo['paged']['prefix_forks']};amortization_x={amort:.1f}"))
+    rows.append((
+        "engine/paged_grpo_ttft", grpo["paged"]["group_ttft_s"] * 1e6,
+        f"slots_ttft_us={grpo['slots']['group_ttft_s'] * 1e6:.0f};"
+        f"pages={grpo['paged']['pages_allocated']}"))
+    rows.append((
+        "engine/paged_capacity_at_half_memory", cap["capacity_x"],
+        f"paged_admitted={cap['paged_admitted']};"
+        f"slot_capacity={cap['slot_array_capacity']};"
+        f"pages={cap['pages_allocated']}/{cap['pool_pages']}"))
     # machine-readable perf trajectory, same schema discipline as
     # BENCH_trainer.json: a config block + one record per variant + the
     # headline ratios (uploaded by CI next to the CSV)
@@ -120,9 +210,22 @@ def engine_benchmarks() -> List[Row]:
         "ttft_ratio": sp_ttft,
         "tokens_per_sec_ratio": sp_tps,
     }
+    paged_payload = {
+        "config": {"prompt_len": PROMPT_LEN, "n_slots": N_SLOTS,
+                   "max_len": MAX_LEN, "chunk": CHUNK,
+                   "page_size": PAGE_SIZE,
+                   "backend": jax.default_backend()},
+        "grpo_group": grpo,
+        "grpo_prefill_amortization_x": amort,
+        "capacity_at_half_memory": cap,
+    }
+    payload["paged"] = paged_payload
     with open(JSON_PATH, "w") as f:
         json.dump(payload, f, indent=2)
+    with open(PAGED_JSON_PATH, "w") as f:
+        json.dump(paged_payload, f, indent=2)
     rows.append(("engine/json", 0.0, os.path.abspath(JSON_PATH)))
+    rows.append(("engine/paged_json", 0.0, os.path.abspath(PAGED_JSON_PATH)))
     return rows
 
 

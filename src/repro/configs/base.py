@@ -214,6 +214,48 @@ def kv_cache_specs(cfg: ModelConfig, batch: int, cache_len: int) -> Dict[str, An
     return s
 
 
+def paged_layout(cfg: ModelConfig, cache_len: int,
+                 page_size: int) -> tuple:
+    """(page_size, n_blocks) for a paged attention cache of logical length
+    `cache_len`. page_size is reduced until it divides the cache length so
+    every logical ring position maps to exactly one (block, offset)."""
+    cl = effective_cache_len(cfg, cache_len)
+    if cl == 0:
+        return 0, 0
+    ps = max(1, min(int(page_size), cl))
+    while cl % ps:
+        ps -= 1
+    return ps, cl // ps
+
+
+def paged_cache_specs(cfg: ModelConfig, batch: int, cache_len: int,
+                      n_pages: int, page_size: int) -> Dict[str, Any]:
+    """ShapeDtypeStructs for the paged decode-state pytree (DESIGN.md §9).
+
+    Attention leaves become page *pools* shaped (L, n_pages, page_size,
+    ...): one physical page spans all layers of all attention leaves, so a
+    single host-side integer per logical block addresses every leaf. SSM
+    leaves are O(1) per slot — no paging win — and keep the slot layout
+    from `kv_cache_specs`. The (batch, n_blocks) block table itself lives
+    host-side (numpy) and rides into jit as an ordinary traced arg.
+    """
+    L = cfg.n_layers
+    s: Dict[str, Any] = {}
+    if cfg.has_attention:
+        ps, _ = paged_layout(cfg, cache_len, page_size)
+        if cfg.use_mla:
+            s["c_kv"] = jax.ShapeDtypeStruct((L, n_pages, ps, cfg.kv_lora_rank), cfg.dtype)
+            s["k_rope"] = jax.ShapeDtypeStruct((L, n_pages, ps, cfg.qk_rope_dim), cfg.dtype)
+        else:
+            s["k"] = jax.ShapeDtypeStruct((L, n_pages, ps, cfg.n_kv_heads, cfg.d_head), cfg.dtype)
+            s["v"] = jax.ShapeDtypeStruct((L, n_pages, ps, cfg.n_kv_heads, cfg.d_head), cfg.dtype)
+    if cfg.has_ssm:
+        ssm = kv_cache_specs(dataclasses.replace(cfg, arch_type="ssm"),
+                             batch, cache_len)
+        s.update(ssm)
+    return s
+
+
 def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
     """ShapeDtypeStruct stand-ins for every model input of a step function.
 

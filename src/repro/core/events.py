@@ -426,6 +426,7 @@ class ActorStage:
                  task=None, name: str = "actor0",
                  step_cost: Callable[[float], float] = lambda h: 1.0,
                  prefill_cost: Callable[[int, int], float] = lambda t, i: 0.0,
+                 page_cost: Callable[[int], float] = lambda p: 0.0,
                  deliver: Optional[Callable[[List[Rollout], float], None]] = None,
                  auto_refill: bool = True, refill_first: bool = False,
                  chain: bool = True,
@@ -433,6 +434,7 @@ class ActorStage:
                  recompute_kv: bool = False):
         self.loop, self.engine, self.task, self.name = loop, engine, task, name
         self.step_cost, self.prefill_cost = step_cost, prefill_cost
+        self.page_cost = page_cost
         self.deliver = deliver or (lambda rollouts, t: None)
         self.auto_refill, self.refill_first = auto_refill, refill_first
         self.chain, self.on_drained = chain, on_drained
@@ -595,6 +597,12 @@ class ActorStage:
         eng = self.engine
         salvaged = [eng.problems[s] for s in np.where(eng._host_active)[0]
                     if eng.problems[s] is not None]
+        # paged engines may hold prompts parked by page-exhaustion
+        # deferral/preemption — those were admitted work too, and must be
+        # pulled BEFORE reset_slots drops the deferral queue
+        drain = getattr(eng, "drain_deferred", None)
+        if drain is not None:
+            salvaged.extend(drain())
         self.rollouts_lost += eng.reset_slots()
         self.prompts_salvaged += len(salvaged)
         return salvaged
@@ -640,7 +648,12 @@ class ActorStage:
         if not admitted:
             return 0.0
         inv = getattr(self.engine, "prefill_invocations", 0) - inv0
-        return self.prefill_cost(self.engine.last_admit_prefill_tokens, inv)
+        # paged engines report the pages the admission actually allocated
+        # (a COW-forked GRPO group costs its prefix pages once) — the page
+        # cost models allocator/table traffic on top of the prefill flops
+        pages = getattr(self.engine, "last_admit_pages", 0)
+        return (self.prefill_cost(self.engine.last_admit_prefill_tokens, inv)
+                + self.page_cost(pages))
 
     def tick(self, now: float) -> None:
         """External tick entry point (the Server's step-driven mode);
@@ -820,6 +833,14 @@ class PoolRouter:
             return self.pending.popleft()
         return self.source()
 
+    def _admissible(self, i: int, prob: Any) -> bool:
+        """Page-costed admission gate (DESIGN.md §9): a paged engine that
+        cannot back the prompt's blocks right now declines the pull — the
+        prompt stays pooled for an engine with free pages instead of
+        parking in the full engine's deferral queue."""
+        fn = getattr(self.engines[i], "can_admit", None)
+        return fn is None or bool(fn(len(prob.prompt_ids)))
+
     def _grant(self, i: int, prob: Any) -> Any:
         self.assigned[i] += 1
         self.assigned_tokens[i] += len(prob.prompt_ids)
@@ -840,7 +861,13 @@ class PoolRouter:
                 return None
         if self.policy != "length_affinity":
             prob = self._draw()
-            return self._grant(i, prob) if prob is not None else None
+            if prob is None:
+                return None
+            if not self._admissible(i, prob):
+                self.pending.appendleft(prob)  # keep pool order
+                self.declined[i] += 1
+                return None
+            return self._grant(i, prob)
         # length_affinity: top up the pending buffer, then pick by length
         while len(self.pending) < self.lookahead:
             p = self.source()
@@ -860,6 +887,9 @@ class PoolRouter:
         else:
             k = min(range(len(lens)), key=lambda j: (lens[j], j))
         prob = self.pending[k]
+        if not self._admissible(i, prob):
+            self.declined[i] += 1
+            return None
         del self.pending[k]
         return self._grant(i, prob)
 

@@ -185,6 +185,7 @@ class PipelineRL:
             self.loop, eng, task=self.task, name=f"actor{i}",
             step_cost=lambda h: m.step_cost(h / max(c, 1e-9)),
             prefill_cost=lambda toks, inv: m.prefill_time(toks, max(c, 1)),
+            page_cost=m.page_touch_time,
             deliver=self._deliver, recompute_kv=self.pc.recompute_kv)
 
     # ----- compatibility surface ---------------------------------------

@@ -14,6 +14,7 @@ Eq. 8) and the weight version each token was sampled under (token lag).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
 from typing import Any, Callable, Dict, List, Optional, Tuple
@@ -22,9 +23,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig, kv_cache_specs
+from repro.configs.base import (ModelConfig, effective_cache_len,
+                                kv_cache_specs, paged_cache_specs,
+                                paged_layout)
 from repro.data.math_task import MathTask, Problem
 from repro.data.packing import Rollout
+from repro.kernels.paged_cache import BlockTables, OutOfPages, PageAllocator
 from repro.models import attention as attn
 from repro.models import model as M
 
@@ -56,6 +60,29 @@ class EngineConfig:
     # keeps the legacy clip-and-admit behavior, counted in
     # `prompts_truncated`.
     long_prompt: str = "reject"
+    # --- paged KV cache (DESIGN.md §9) ---------------------------------
+    # "slots": one contiguous max_len stripe per slot (the differential
+    # oracle). "paged": attention leaves become page pools addressed
+    # through a ref-counted block table — short requests stop reserving
+    # max_len of cache, a GRPO group's prompt is prefilled once and
+    # forked copy-on-write, and admission is costed in pages.
+    cache: str = "slots"
+    # logical tokens per page (reduced until it divides the cache length)
+    page_size: int = 16
+    # physical pages in the pool, including the reserved trash page 0.
+    # 0 = auto: n_slots * blocks_per_slot + 1, i.e. exactly the slot-array
+    # footprint (no eviction pressure); smaller values trade capacity for
+    # memory and rely on page-exhaustion preemption.
+    n_pages: int = 0
+    # prefill a GRPO group's identical prompt once and fork the rest over
+    # shared pages (paged mode with chunked prefill only)
+    prefix_sharing: bool = True
+    # paged decode read path: "gather" runs the unchanged attention on the
+    # gathered per-slot view (bit-identical to the slot engine); "kernel"
+    # opts into the scalar-prefetch paged flash-decode kernel (no gather;
+    # page-sized softmax blocks, so fp32-close rather than bitwise unless
+    # page_size == decode_block_k)
+    paged_attention: str = "gather"
 
 
 # backstop for refill's reject-retry loop: after this many rejections in
@@ -68,6 +95,26 @@ _MAX_REJECTS_PER_REFILL = 1024
 def _zero_cache(cfg: ModelConfig, n_slots: int, max_len: int):
     specs = kv_cache_specs(cfg, n_slots, max_len)
     return {k: jnp.zeros(v.shape, v.dtype) for k, v in specs.items()}
+
+
+def _zero_paged_cache(cfg: ModelConfig, n_slots: int, max_len: int,
+                      n_pages: int, page_size: int):
+    specs = paged_cache_specs(cfg, n_slots, max_len, n_pages, page_size)
+    return {k: jnp.zeros(v.shape, v.dtype) for k, v in specs.items()}
+
+
+def _paged_ring_view(cache, block_tables):
+    """Gather pool leaves (L,NP,PS,...) into slot-layout (L,H,CL,...)
+    views through the block table; SSM leaves (already per-slot) pass
+    through untouched."""
+    out = dict(cache)
+    for k in ("k", "v", "c_kv", "k_rope"):
+        if k in out:
+            v = jnp.take(out[k], block_tables, axis=1)    # (L,H,NB,PS,...)
+            out[k] = v.reshape(
+                (v.shape[0], v.shape[1], v.shape[2] * v.shape[3])
+                + v.shape[4:])
+    return out
 
 
 def _admit_impl(st: Dict[str, Any], new_tokens, new_plen, new_ncached,
@@ -98,34 +145,45 @@ def _admit_impl(st: Dict[str, Any], new_tokens, new_plen, new_ncached,
 
 
 def _prefill_impl(params, st: Dict[str, Any], offset, admit_mask,
-                  cfg: ModelConfig, chunk: int,
+                  block_tables, cfg: ModelConfig, chunk: int,
                   offset_hint: Optional[int] = None):
     """One chunked-prefill step over the slot state (cache update only).
 
     offset_hint (static): host-side bound on the valid cache-slot count,
     bucketed to the prefill kernel's block size; shrinks the kernel's
-    cache-block grid (grid-level early exit, like decode's kv_len_hint)."""
+    cache-block grid (grid-level early exit, like decode's kv_len_hint).
+    block_tables: (H,NB) int32 in paged mode, None for the slot array."""
     cache = M.prefill_chunk(params, st["tokens"], st["prompt_len"], offset,
                             admit_mask, st["cache"], cfg, chunk=chunk,
-                            offset_hint=offset_hint)
+                            offset_hint=offset_hint,
+                            block_tables=block_tables)
     return dict(st, cache=cache)
 
 
-def _engine_step(params, st: Dict[str, Any], cfg: ModelConfig,
-                 ec: EngineConfig, kv_len_hint: Optional[int] = None):
+def _engine_step(params, st: Dict[str, Any], block_tables,
+                 cfg: ModelConfig, ec: EngineConfig,
+                 kv_len_hint: Optional[int] = None):
     """One token for every active slot. st: tokens (H,T), n_cached (H,),
     prompt_len (H,), active (H,) bool, cache, lp (H,T), key.
 
     kv_len_hint (static): host-mirrored bound on the valid cache length,
     bucketed to the flash-decode block size so jit sees few values; shrinks
-    the decode kernel's KV grid (grid-level early exit)."""
+    the decode kernel's KV grid (grid-level early exit).
+
+    block_tables: (H,NB) int32 in paged mode (None for the slot array).
+    The host guarantees, before every step, that each active slot's write
+    block is backed by an exclusively-owned page (lazy alloc + COW), and
+    that inactive slots' rows are all trash-page zeros so their
+    static-shape stale writes land harmlessly."""
     H, T = st["tokens"].shape
     idx = jnp.arange(H)
     cur_tok = st["tokens"][idx, st["n_cached"]][:, None]          # (H,1)
     positions = st["n_cached"][:, None]                           # (H,1)
     out = M.decode_step(params, cur_tok, positions, st["cache"],
                         st["n_cached"], cfg, ring=False,
-                        kv_len_hint=kv_len_hint)
+                        kv_len_hint=kv_len_hint,
+                        block_tables=block_tables,
+                        paged_kernel=ec.paged_attention == "kernel")
     logits = out["logits"][:, 0] / jnp.maximum(ec.temperature, 1e-6)
     logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
 
@@ -174,13 +232,39 @@ class GenerationEngine:
         self.version = 0          # trainer version of μ
         self.prompt_source = prompt_source
         H, T = ec.n_slots, ec.max_len
+        # --- paged KV cache (DESIGN.md §9): page pool + block tables ----
+        # attention-free archs have nothing to page; they run the slot
+        # state machine under either setting (admission costs 0 pages)
+        self._paged = ec.cache == "paged" and cfg.has_attention
+        if ec.cache not in ("slots", "paged"):
+            raise ValueError(f"EngineConfig.cache: {ec.cache!r}")
+        self.allocator: Optional[PageAllocator] = None
+        self.tables: Optional[BlockTables] = None
+        self._bt_jax = None                 # device copy of the block table
+        self._bt_dirty = False
+        self._deferred: "collections.deque[Problem]" = collections.deque()
+        if self._paged:
+            ps, nb = paged_layout(cfg, T, ec.page_size)
+            n_pages = ec.n_pages or H * nb + 1
+            if n_pages - 1 < nb:
+                # a lone sequence must be able to fill its table even after
+                # preempting everyone else, or eviction cannot terminate
+                raise ValueError(
+                    f"n_pages={n_pages} cannot back one full sequence "
+                    f"({nb} blocks + trash page)")
+            self.allocator = PageAllocator(n_pages, ps)
+            self.tables = BlockTables(H, nb, self.allocator)
+            self._bt_jax = jnp.zeros((H, nb), jnp.int32)
+            cache = _zero_paged_cache(cfg, H, T, n_pages, ps)
+        else:
+            cache = _zero_cache(cfg, H, T)
         self.state: Dict[str, Any] = {
             "tokens": jnp.zeros((H, T), jnp.int32),
             "lp": jnp.zeros((H, T), jnp.float32),
             "n_cached": jnp.zeros((H,), jnp.int32),
             "prompt_len": jnp.ones((H,), jnp.int32),
             "active": jnp.zeros((H,), bool),
-            "cache": _zero_cache(cfg, H, T),
+            "cache": cache,
             "key": jax.random.PRNGKey(seed),
         }
         # host-side bookkeeping
@@ -194,13 +278,20 @@ class GenerationEngine:
         self._host_ncached = np.zeros(H, np.int64)
         self._host_prompt_len = np.ones(H, np.int64)
         # attention cache length (None for attention-free archs); a ring
-        # buffer when < T (sliding-window long-context decode)
+        # buffer when < T (sliding-window long-context decode). In paged
+        # mode the leaves are (L,NP,PS,...) pools, so the logical length
+        # comes from the layout, not the leaf shape.
         self._cache_len: Optional[int] = None
         if cfg.has_attention:
-            self._cache_len = (
-                self.state["cache"]["k"].shape[2]
-                if "k" in self.state["cache"]
-                else self.state["cache"]["c_kv"].shape[2])
+            if self._paged:
+                self._cache_len = (self.tables.n_blocks
+                                   * self.allocator.page_size)
+                assert self._cache_len == effective_cache_len(cfg, T)
+            else:
+                self._cache_len = (
+                    self.state["cache"]["k"].shape[2]
+                    if "k" in self.state["cache"]
+                    else self.state["cache"]["c_kv"].shape[2])
         # the decode-length hint only matters when gqa_decode actually
         # takes the flash-decode kernel path; computing it otherwise would
         # re-trace the jitted step once per hint bucket for no benefit
@@ -209,17 +300,26 @@ class GenerationEngine:
                                      cfg, self._cache_len))
         # chunked prefill: the effective chunk must divide T (chunk windows
         # never cross the token buffer end) and the cache length (modular
-        # ring writes stay contiguous — DESIGN.md §2 chunk geometry)
+        # ring writes stay contiguous — DESIGN.md §2 chunk geometry); in
+        # paged mode it must also divide the page size, so every chunk
+        # write lands inside exactly one logical block
         chunk = max(int(ec.prefill_chunk), 0)
         if chunk:
             cl = self._cache_len or T
-            chunk = min(chunk, T, cl)
-            while T % chunk or cl % chunk:
+            ps = self.allocator.page_size if self._paged else cl
+            chunk = min(chunk, T, cl, ps)
+            while T % chunk or cl % chunk or ps % chunk:
                 chunk -= 1
         self.prefill_chunk_size = chunk
         self.prefill_invocations = 0       # chunked-prefill model calls
         self.prefill_tokens = 0            # prompt tokens admitted via prefill
         self.last_admit_prefill_tokens = 0
+        # paged-mode accounting (all stay 0 for the slot array)
+        self.prompt_prefills = 0           # rows actually prefilled (leaders)
+        self.prefix_forks = 0              # rows admitted by COW fork
+        self.last_admit_pages = 0          # pages allocated by last refill
+        self.slots_preempted = 0           # page-exhaustion evictions
+        self.pages_copied = 0              # COW page copies materialized
         # long-prompt admission accounting (EngineConfig.long_prompt)
         self.prompts_rejected = 0
         self.prompts_truncated = 0
@@ -240,7 +340,9 @@ class GenerationEngine:
             return
         self._step = jax.jit(functools.partial(_engine_step, cfg=cfg, ec=ec),
                              static_argnames=("kv_len_hint",))
-        self._recompute = jax.jit(functools.partial(self._recompute_impl, cfg=cfg))
+        rc = (self._recompute_impl_paged if self._paged
+              else self._recompute_impl)
+        self._recompute = jax.jit(functools.partial(rc, cfg=cfg))
         self._admit = jax.jit(functools.partial(_admit_impl, cfg=cfg),
                               donate_argnums=(0,))
         if chunk:
@@ -263,7 +365,18 @@ class GenerationEngine:
         self.params = params
         self.version = version
         if recompute_kv:
-            self.state["cache"] = self._recompute(params, self.state)
+            if self._paged:
+                # unshare every shared block first: the recompute scatter
+                # overwrites all positions of every referenced page, which
+                # must not clobber a page other forks still read — and a
+                # page referenced twice in one scatter would be written
+                # nondeterministically
+                self._unshare_all()
+                self._sync_tables()
+                self.state["cache"] = self._recompute(params, self.state,
+                                                      self._bt_jax)
+            else:
+                self.state["cache"] = self._recompute(params, self.state)
 
     def begin_weight_stream(self, params, version: int, n_chunks: int = 8,
                             recompute_kv: bool = False) -> List[int]:
@@ -312,8 +425,13 @@ class GenerationEngine:
         (safe: admission overwrites tokens and prefill rewrites every
         cache position a later decode step may read, exactly as on normal
         slot reuse); any half-filled weight-stream shadow buffer is
-        dropped (the restart's catch-up sync supersedes it). Returns the
-        number of live slots killed, i.e. the rollouts lost."""
+        dropped (the restart's catch-up sync supersedes it). In paged
+        mode every page reference — including shared prefix pages, whose
+        refcounts drop once per holding slot — returns to the pool;
+        prompts deferred by page pressure are dropped with the slots (a
+        salvage path that wants them calls `drain_deferred()` first).
+        Returns the number of live slots killed, i.e. the rollouts
+        lost."""
         n = int(self._host_active.sum())
         H = self.ec.n_slots
         self._host_active[:] = False
@@ -321,12 +439,176 @@ class GenerationEngine:
         self._host_prompt_len[:] = 1
         self.problems = [None] * H
         self._wstream = None
+        self._deferred.clear()
+        if self._paged:
+            for s in range(H):
+                self.tables.release_row(s)
+            assert self.allocator.live_pages == 0, "pages leaked on reset"
+            self._bt_dirty = True
+            self._sync_tables()
         self.state = dict(
             self.state,
             n_cached=jnp.zeros((H,), jnp.int32),
             prompt_len=jnp.ones((H,), jnp.int32),
             active=jnp.zeros((H,), bool))
         return n
+
+    def drain_deferred(self) -> List[Problem]:
+        """Hand back prompts parked by page-exhaustion deferral/preemption
+        (salvage path: they re-enter the pool through the router like the
+        live slots' prompts)."""
+        out = list(self._deferred)
+        self._deferred.clear()
+        return out
+
+    # ----- paged-cache machinery (DESIGN.md §9) -------------------------
+    @property
+    def free_pages(self) -> int:
+        """Free pages in the pool (a large sentinel for the slot array /
+        attention-free engines, whose admission is slot-bounded only)."""
+        if not self._paged:
+            return 1 << 30
+        return self.allocator.free_pages
+
+    def pages_needed(self, prompt_len: int) -> int:
+        """Pages a prompt of `prompt_len` needs through admission and its
+        first decode write (its logical footprint is capped by the ring
+        length)."""
+        if not self._paged:
+            return 0
+        cl = self._cache_len
+        return self.tables.blocks_for(min(max(int(prompt_len), 1), cl))
+
+    def can_admit(self, prompt_len: int) -> bool:
+        """Page-costed admission check (serving/router gate): True when a
+        free slot exists AND the pool can back the prompt without evicting
+        in-flight work. Slot-array engines only check slots."""
+        if not (~self._host_active).any():
+            return False
+        return self.free_pages >= self.pages_needed(prompt_len)
+
+    def _sync_tables(self) -> None:
+        if self._paged and self._bt_dirty:
+            self._bt_jax = jnp.asarray(self.tables.table)
+            self._bt_dirty = False
+
+    def _unshare_all(self) -> None:
+        """Break every COW share: after this, each live page is referenced
+        by exactly one table entry (recompute_kv's full-scatter needs
+        exclusive pages; no device copy — the scatter overwrites every
+        position of every referenced page)."""
+        tb, alloc = self.tables, self.allocator
+        for s in range(self.ec.n_slots):
+            for j in range(tb.n_blocks):
+                p = int(tb.table[s, j])
+                if p and alloc.refcount[p] > 1:
+                    q = alloc.alloc()
+                    alloc.refcount[p] -= 1
+                    tb.table[s, j] = q
+                    self._bt_dirty = True
+
+    def _evict_one(self, requester: int) -> bool:
+        """Preempt the least-progressed active slot (ties: higher index)
+        to free its pages; its prompt re-enters through `_deferred` at the
+        front. Returns False when no victim exists."""
+        victims = [s for s in np.where(self._host_active)[0]
+                   if s != requester]
+        if not victims:
+            return False
+        progress = {s: int(self._host_ncached[s] - self._host_prompt_len[s])
+                    for s in victims}
+        victim = max(victims, key=lambda s: (-progress[s], s))
+        self.tables.release_row(victim)
+        self._bt_dirty = True
+        self._host_active[victim] = False
+        prob = self.problems[victim]
+        self.problems[victim] = None
+        if prob is not None:
+            self._deferred.appendleft(prob)
+        self.slots_preempted += 1
+        # the jitted step reads `active` from device state — push the kill
+        self.state = dict(self.state,
+                          active=jnp.asarray(self._host_active))
+        return True
+
+    def _ensure_block(self, s: int, j: int,
+                      copies: List[Tuple[int, int]]) -> None:
+        """Host side of the lazy alloc/COW discipline for one (slot,
+        block): allocate or copy-on-write, evicting under page pressure.
+        Termination: n_pages-1 >= n_blocks (checked at init) and the
+        requester holds < n_blocks pages when an alloc is needed, so
+        after evicting every other slot a free page must exist."""
+        while True:
+            before = int(self.tables.table[s, j])
+            try:
+                pair = self.tables.ensure_writable(s, j)
+            except OutOfPages:
+                if not self._evict_one(s):
+                    raise
+                continue
+            if pair is not None:
+                copies.append(pair)
+                self.pages_copied += 1
+            if int(self.tables.table[s, j]) != before:
+                self._bt_dirty = True
+            return
+
+    def _prepare_pages_for_step(self) -> None:
+        """Before every decode step: make each active slot's write block
+        (ring position n_cached mod CL) exclusively owned — lazy alloc at
+        block entry, COW at a fork's divergence block — and materialize
+        the COW copies on device. Establishes the invariant the jitted
+        step relies on: no write ever lands on a page with refcount > 1."""
+        if not self._paged:
+            return
+        ps = self.allocator.page_size
+        cl = self._cache_len
+        copies: List[Tuple[int, int]] = []
+        for s in np.where(self._host_active)[0]:
+            if not self._host_active[s]:
+                continue  # evicted mid-loop by an earlier slot's alloc
+            j = (int(self._host_ncached[s]) % cl) // ps
+            self._ensure_block(int(s), j, copies)
+        if copies:
+            src = np.array([c[0] for c in copies])
+            dst = np.array([c[1] for c in copies])
+            cache = dict(self.state["cache"])
+            for k in ("k", "v", "c_kv", "k_rope"):
+                if k in cache:
+                    cache[k] = cache[k].at[:, dst].set(cache[k][:, src])
+            self.state = dict(self.state, cache=cache)
+        self._sync_tables()
+
+    def _release_slot_pages(self, s: int) -> None:
+        """Rollout finished (or slot abandoned): drop the slot's page
+        references — shared prefix pages survive until the last fork
+        finishes — and zero its table row so the static-shape stale
+        writes of the now-inactive row land on the trash page."""
+        if self._paged:
+            self.tables.release_row(int(s))
+            self._bt_dirty = True
+
+    @staticmethod
+    def _recompute_impl_paged(params, st, block_tables, cfg: ModelConfig):
+        """Paged twin of `_recompute_impl`: recompute through the slot
+        twin's ring-gather, then scatter each row's ring view into its own
+        pages. The caller has unshared every block (refcount 1), so no
+        page is written twice except the trash page (unallocated entries
+        of inactive/short rows — never read)."""
+        view = GenerationEngine._recompute_impl(
+            params, dict(st, cache=_paged_ring_view(st["cache"],
+                                                    block_tables)), cfg)
+        new = dict(st["cache"])
+        NB = block_tables.shape[1]
+        for k in ("k", "v", "c_kv", "k_rope"):
+            if k not in new:
+                continue
+            pool = new[k]                         # (L,NP,PS,...)
+            L, NP, PS = pool.shape[:3]
+            v = view[k]                           # (L,H,CL,...)
+            vr = v.reshape((L, v.shape[1], NB, PS) + v.shape[3:])
+            new[k] = pool.at[:, block_tables].set(vr.astype(pool.dtype))
+        return new
 
     @staticmethod
     def _recompute_impl(params, st, cfg: ModelConfig):
@@ -376,8 +658,17 @@ class GenerationEngine:
         engine-state round trip through host numpy), then chunked prefill
         writes the prompts' K/V into the slot cache in ceil((P-1)/chunk)
         batched forwards (prefill_chunk=0: legacy token-at-a-time loop).
+
+        Paged mode (DESIGN.md §9): admission is page-costed — a prompt
+        only enters when the pool can back its blocks (otherwise it parks
+        in `_deferred`, consumed first next refill, and the engine stops
+        pulling for the tick); identical prompts admitted in the same
+        refill form a GRPO prefix-sharing group: the leader alone runs
+        prefill (and alone counts prefill tokens/pages), the rest fork
+        its pages copy-on-write and merely copy its recurrent SSM state.
         """
         self.last_admit_prefill_tokens = 0
+        self.last_admit_pages = 0
         free = np.where(~self._host_active)[0]
         if free.size == 0:
             return 0
@@ -386,14 +677,24 @@ class GenerationEngine:
         new_plen = np.zeros(H, np.int32)
         mask = np.zeros(H, bool)
         admitted = []
+        chunk = self.prefill_chunk_size
+        allocs0 = self.allocator.total_allocs if self._paged else 0
+        # prefix sharing needs the chunked path: forks resume at n_cached
+        # = P-1, which the legacy token-forcing loop never reaches
+        share = self._paged and chunk > 0 and self.ec.prefix_sharing
+        leaders: Dict[Tuple[int, ...], int] = {}
+        prefill_mask = np.zeros(H, bool)   # rows that run prefill
+        forks: List[Tuple[int, int]] = []  # (fork slot, leader slot)
         # a rejected prompt re-offers its slot immediately (otherwise one
         # overlong request idles a slot for a whole tick while admissible
         # prompts wait); the budget bounds the spin against a pathological
         # source that yields nothing but overlong prompts
         rejects_left = _MAX_REJECTS_PER_REFILL
+        out_of_pages = False
         for s in free:
             while True:
-                prob = self.prompt_source()
+                prob = (self._deferred.popleft() if self._deferred
+                        else self.prompt_source())
                 if prob is None:
                     break
                 pl = len(prob.prompt_ids)
@@ -417,6 +718,28 @@ class GenerationEngine:
                 if rejects_left <= 0:
                     break
                 continue
+            key = tuple(prob.prompt_ids[:pl]) if share else None
+            if share and key in leaders:
+                # COW fork: share the leader's pages, prefill nothing
+                forks.append((int(s), leaders[key]))
+            elif self._paged:
+                if self.allocator.free_pages < self.pages_needed(pl):
+                    # page-costed admission: park the prompt (front of the
+                    # deferral queue) and stop pulling — pages free up as
+                    # in-flight rollouts finish
+                    self._deferred.appendleft(prob)
+                    out_of_pages = True
+                    break
+                need = (self.tables.blocks_for(
+                    min(max(pl - 1, 0), self._cache_len)) if chunk else 0)
+                if need:
+                    self.tables.alloc_prefix(int(s), need)
+                    self._bt_dirty = True
+                if share:
+                    leaders[key] = int(s)
+                prefill_mask[s] = True
+            else:
+                prefill_mask[s] = True
             admitted.append(s)
             new_tokens[s, :pl] = prob.prompt_ids[:pl]
             new_plen[s] = pl
@@ -424,9 +747,9 @@ class GenerationEngine:
             self.problems[s] = prob
             self.ver_buf[s] = 0
             self.started_at[s] = now
+        del out_of_pages  # loop already stopped; counted via _deferred
         if not admitted:
             return 0
-        chunk = self.prefill_chunk_size
         # chunked path: the cache is prefilled below, so decode resumes at
         # the LAST prompt token (n_cached = P-1); legacy path starts at 0
         # and forces the prompt token by token
@@ -439,8 +762,11 @@ class GenerationEngine:
         self._host_active[mask] = True
         self._host_prompt_len[mask] = new_plen[mask]
         self._host_ncached[mask] = target_nc[mask]
+        self._sync_tables()
         if chunk:
-            n_pre = int(new_plen.max()) - 1   # tokens to prefill (max row)
+            # forks never prefill: their cache IS the leader's prefix
+            n_pre = (int(new_plen[prefill_mask].max()) - 1
+                     if prefill_mask.any() else 0)
             for off in range(0, max(n_pre, 0), chunk):
                 # grid-level early exit for the prefill kernel: bound the
                 # valid cache-slot count from the host-known chunk offset,
@@ -452,12 +778,31 @@ class GenerationEngine:
                     blk = attn.prefill_block_k(cl)
                     hint = int(min(cl, -(-min(off, cl) // blk) * blk))
                 self.state = self._prefill(self.params, self.state, off,
-                                           jnp.asarray(mask),
+                                           jnp.asarray(prefill_mask),
+                                           self._bt_jax,
                                            offset_hint=hint)
                 self.prefill_invocations += 1
             self.last_admit_prefill_tokens = int(
-                np.maximum(new_plen[mask] - 1, 0).sum())
+                np.maximum(new_plen[prefill_mask] - 1, 0).sum())
             self.prefill_tokens += self.last_admit_prefill_tokens
+            self.prompt_prefills += int(prefill_mask.sum())
+        if forks:
+            for f, ldr in forks:
+                self.tables.fork_row(f, ldr)
+            self._bt_dirty = True
+            self._sync_tables()
+            self.prefix_forks += len(forks)
+            # recurrent SSM state is per-slot (not paged): forks copy the
+            # leader's post-prefill conv/ssd rows
+            farr = np.array([f for f, _ in forks])
+            larr = np.array([ldr for _, ldr in forks])
+            cache = dict(self.state["cache"])
+            for k in ("conv", "ssd"):
+                if k in cache:
+                    cache[k] = cache[k].at[:, farr].set(cache[k][:, larr])
+            self.state = dict(self.state, cache=cache)
+        if self._paged:
+            self.last_admit_pages = self.allocator.total_allocs - allocs0
         return len(admitted)
 
     @property
@@ -469,6 +814,11 @@ class GenerationEngine:
              now: float = 0.0) -> List[Rollout]:
         """Generate one token on every active slot; returns rollouts that
         finished this step."""
+        if self._paged:
+            # host-side COW hook: every active slot's next write lands on
+            # an exclusively-owned page (may preempt a slot on OutOfPages,
+            # which deactivates it before the mirrors are snapshotted)
+            self._prepare_pages_for_step()
         prev_active = self._host_active.copy()
         prev_ncached = self._host_ncached.copy()
         # grid-level early exit for flash-decode: bound the valid cache
@@ -485,7 +835,7 @@ class GenerationEngine:
                    if self._host_active.any() else 1)
             hint = int(min(cl, -(-cur // blk) * blk))
         self.state, finished = self._step(self.params, self.state,
-                                          kv_len_hint=hint)
+                                          self._bt_jax, kv_len_hint=hint)
         finished = np.asarray(finished)
         # record weight version for tokens written this step — only tokens
         # actually *sampled* under μ; prompt-forced tokens keep version 0
@@ -504,6 +854,10 @@ class GenerationEngine:
             tokens = np.asarray(self.state["tokens"])
             lp = np.asarray(self.state["lp"])
             for s in np.where(finished)[0]:
+                if self._paged:
+                    # finished slots return their pages (shared-prefix
+                    # pages only truly free once every fork finishes)
+                    self._release_slot_pages(int(s))
                 L = int(self._host_ncached[s]) + 1  # incl. just-sampled token
                 L = min(L, self.ec.max_len)
                 prob = self.problems[s]

@@ -93,10 +93,18 @@ class _QueueSource:
         if self.admission == "sjf":
             k = min(range(len(waiting)),
                     key=lambda i: (len(waiting[i].prompt_ids), i))
-            req = waiting[k]
-            del waiting[k]
         else:
-            req = waiting.popleft()
+            k = 0
+        req = waiting[k]
+        # page-costed admission (DESIGN.md §9): a paged engine that cannot
+        # back the candidate's KV blocks leaves it WAITING — its admission
+        # deadline keeps ticking, so sustained page pressure degrades into
+        # counted deadline misses/retries, never a hang or a silent drop
+        can = getattr(self.server.engine, "can_admit", None)
+        if can is not None and not can(len(req.prompt_ids)):
+            self.server.admissions_deferred += 1
+            return None
+        del waiting[k]
         req.admitted_at = self.server.clock
         self.server.in_flight[req.rid] = req
         prob = Problem(req.prompt_ids, 0)
@@ -126,6 +134,7 @@ class Server:
         self.queue_limit = queue_limit
         self.requests_retried = 0
         self.deadline_misses = 0
+        self.admissions_deferred = 0  # paged: candidate left waiting for pages
         self._backoff: List[Tuple[float, int, Request]] = []  # heap
         self._bseq = 0
         self._next_rid = 0
@@ -289,6 +298,9 @@ class Server:
             "requests_retried": self.requests_retried,
             "requests_shed": len(self.shed),
             "deadline_misses": self.deadline_misses,
+            "admissions_deferred": self.admissions_deferred,
+            "free_pages": (self.engine.free_pages
+                           if getattr(self.engine, "_paged", False) else None),
             "backoff_held": len(self._backoff),
             "requests_lost": self._next_rid - accounted,   # invariant: 0
             "retry_p50_latency": float(np.percentile(rlat, 50)) if rlat

@@ -42,6 +42,12 @@ class HardwareModel:
     # installed chunk (shadow-buffer fill + pointer publish).
     bcast_bytes_per_flash: float = 1e4
     bcast_install_flash: float = 1.0
+    # paged-KV admission overhead (DESIGN.md §9): flashes charged per page
+    # the refill actually allocated — allocator bookkeeping plus the block
+    # table push. 0.0 by default so slot-array runs are cost-identical;
+    # prefix-shared GRPO admission shows up as fewer pages charged (the
+    # group's prefix pages are allocated once, forks cost nothing).
+    page_touch_flash: float = 0.0
 
     def U(self, h):
         """Utilization at per-chip batch h (0 at h=0)."""
@@ -73,6 +79,13 @@ class HardwareModel:
         if n_tokens <= 0:
             return 0.0
         return n_tokens * self.prefill_flash / max(n_chips, 1) / self.speed
+
+    def page_touch_time(self, n_pages: int) -> float:
+        """Wall-time (flashes) for a refill that allocated `n_pages` KV
+        pages (paged engines only; slot-array refills report 0 pages)."""
+        if n_pages <= 0:
+            return 0.0
+        return n_pages * self.page_touch_flash / self.speed
 
     def broadcast_time(self, n_bytes: float) -> float:
         """Wall-time (flashes) to move `n_bytes` of weights over the

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 
 from repro.kernels.common import default_interpret
 from repro.kernels.decode_attention import flash_decode as _flash_decode
+from repro.kernels.paged_cache import flash_decode_paged as _flash_decode_paged
 from repro.kernels.flash_attention import flash_attention as _flash_attention
 from repro.kernels.fused_logprob import fused_logprob as _fused_logprob
 from repro.kernels.prefill_attention import (
@@ -62,6 +63,32 @@ def flash_decode(q, k_cache, v_cache, lengths, *, scale: float,
     return _flash_decode(q, k_cache, v_cache, lengths, scale=scale,
                          block_k=block_k, max_len_hint=max_len_hint,
                          interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "max_len_hint",
+                                             "interpret"))
+def flash_decode_paged(q, k_pool, v_pool, block_tables, lengths, *,
+                       scale: float, max_len_hint: int | None = None,
+                       interpret: bool | None = None):
+    """One-token decode attention straight against the paged KV pool
+    (DESIGN.md §9) — no gathered per-slot copy.
+
+    q: (B,H,Dk); pools: (NP,PS,KV,D); block_tables: (B,NB) int32 mapping
+    each slot's logical ring block to its physical page (trash page 0 for
+    unallocated blocks); lengths: (B,) valid logical length per slot.
+    The block table and lengths are scalar-prefetch operands: the KV
+    BlockSpec index maps dereference `bt[b, ki]`, so each grid step DMAs
+    exactly the page backing logical block ki of row b. The online
+    softmax runs page-by-page (block_k = page_size); it matches
+    `flash_decode` on the gathered view bitwise only when page_size
+    equals that call's block_k, fp32-close otherwise. max_len_hint
+    (static, >= max(lengths)) shrinks the page grid axis like
+    `flash_decode`'s early exit.
+    """
+    interpret = default_interpret(interpret)
+    return _flash_decode_paged(q, k_pool, v_pool, block_tables, lengths,
+                               scale=scale, max_len_hint=max_len_hint,
+                               interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("scale", "block_k",

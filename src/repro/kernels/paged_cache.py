@@ -1,0 +1,365 @@
+"""Paged KV cache: block allocator, block tables, and the paged
+flash-decode kernel (DESIGN.md §9).
+
+The slot-array cache (DESIGN.md §1) reserves one contiguous `max_len`
+stripe per slot. The paged cache replaces the stripe with a *block table*:
+each slot maps logical cache block j (positions [j*PS, (j+1)*PS) of its
+ring layout) to a physical page in a shared pool, flashinfer-style. Pool
+leaves are shaped (L, n_pages, page_size, ...) — one allocation spans all
+layers of a leaf, so the host allocator hands out one integer per logical
+block regardless of depth.
+
+Host side (this module, pure numpy — no jax):
+
+  - `PageAllocator`: ref-counted free-list allocator. Page 0 is the
+    reserved TRASH page: the jitted engine step has static shapes, so
+    *inactive* slots still execute their cache write every step at a
+    stale position — their table rows point every block at page 0, which
+    absorbs those writes and is never read (positions are masked by
+    per-slot lengths). Frees are LIFO and the free list is seeded in
+    ascending order, so allocation order is deterministic given the call
+    sequence — chaos replay stays bit-equal.
+  - `BlockTables`: the (H, n_blocks) int32 table plus the copy-on-write
+    discipline. `fork_row` shares a prefix by bumping refcounts (GRPO
+    prefix sharing: prefill once, fork G rollouts); `ensure_writable`
+    enforces the COW invariant — a page with refcount > 1 is *never*
+    written: the writer first gets a fresh page and the device copies the
+    old page's contents (lazy COW at the divergence block).
+
+Device side:
+
+  - `gather_pages`: block-table gather producing the contiguous per-slot
+    view (B, CL, ...) — the default paged read path. Running the
+    *unchanged* decode/prefill attention (Pallas or jnp) on the gathered
+    view makes the paged engine bit-identical to the slot engine by
+    construction: the valid region of the view equals the slot cache
+    exactly, and invalid positions are NEG_INF-masked before they touch
+    the softmax in either engine.
+  - `flash_decode_paged`: the true paged kernel (opt-in,
+    `EngineConfig.paged_attention="kernel"`): the block table is a
+    scalar-prefetch operand and the KV BlockSpec index maps read it, so
+    pages stream HBM->VMEM directly — no gathered copy. Its online
+    softmax blocks are page-sized, so it matches the slot kernel
+    bitwise only when page_size == decode_block_k(CL); otherwise the
+    reductions reassociate and equality is fp32-tolerance (the parity
+    tests pin both cases).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+import numpy as np
+
+from repro.kernels.common import default_interpret
+
+NEG_INF = -1e30
+
+TRASH_PAGE = 0
+
+
+class OutOfPages(RuntimeError):
+    """The pool has no free page. The engine reacts by deferring
+    admission or preempting a sequence — never by corrupting a page."""
+
+
+class PageAllocator:
+    """Ref-counted page pool. Page 0 (TRASH_PAGE) is reserved forever.
+
+    Deterministic: the free list is seeded ascending and reused LIFO, so
+    the page sequence depends only on the alloc/free call order.
+    """
+
+    def __init__(self, n_pages: int, page_size: int):
+        if n_pages < 2:
+            raise ValueError(f"need >= 2 pages (1 is the trash page), "
+                             f"got {n_pages}")
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        self.n_pages = int(n_pages)
+        self.page_size = int(page_size)
+        self.refcount = np.zeros(n_pages, np.int32)
+        # pop() yields 1, 2, 3, ... on a fresh pool
+        self._free: List[int] = list(range(n_pages - 1, 0, -1))
+        # counters (page-costed admission + telemetry)
+        self.total_allocs = 0
+        self.cow_copies = 0
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def live_pages(self) -> int:
+        """Pages currently referenced by at least one block-table entry."""
+        return self.n_pages - 1 - len(self._free)
+
+    def alloc(self) -> int:
+        if not self._free:
+            raise OutOfPages(f"all {self.n_pages - 1} pages live")
+        p = self._free.pop()
+        assert self.refcount[p] == 0, f"free-list page {p} has refs"
+        self.refcount[p] = 1
+        self.total_allocs += 1
+        return p
+
+    def share(self, p: int) -> None:
+        """One more block-table entry references page p (COW fork)."""
+        if p == TRASH_PAGE:
+            raise ValueError("cannot share the trash page")
+        if self.refcount[p] <= 0:
+            raise ValueError(f"share of dead page {p}")
+        self.refcount[p] += 1
+
+    def release(self, p: int) -> None:
+        """Drop one reference; the page returns to the pool at zero."""
+        if p == TRASH_PAGE:
+            raise ValueError("cannot release the trash page")
+        if self.refcount[p] <= 0:
+            raise ValueError(f"double free of page {p}")
+        self.refcount[p] -= 1
+        if self.refcount[p] == 0:
+            self._free.append(p)
+
+    def check(self) -> None:
+        """Conservation invariants (exercised by the property suite)."""
+        free = set(self._free)
+        assert len(free) == len(self._free), "duplicate page in free list"
+        assert TRASH_PAGE not in free, "trash page leaked into free list"
+        assert self.refcount[TRASH_PAGE] == 0
+        for p in range(1, self.n_pages):
+            if p in free:
+                assert self.refcount[p] == 0, f"free page {p} has refs"
+            else:
+                assert self.refcount[p] > 0, f"page {p} leaked (0 refs, " \
+                    f"not free)"
+        assert self.free_pages + self.live_pages == self.n_pages - 1
+
+
+class BlockTables:
+    """(H, n_blocks) block table + the copy-on-write write discipline.
+
+    Entry 0 means "unallocated": reads of such blocks are always masked
+    by per-slot lengths, and writes from inactive slots land on the
+    trash page by construction.
+    """
+
+    def __init__(self, n_slots: int, n_blocks: int, alloc: PageAllocator):
+        self.alloc = alloc
+        self.n_blocks = int(n_blocks)
+        self.table = np.zeros((n_slots, n_blocks), np.int32)
+
+    # ---- queries -------------------------------------------------------
+    def blocks_for(self, n_positions: int) -> int:
+        """Blocks needed to cover ring positions [0, n_positions)."""
+        if n_positions <= 0:
+            return 0
+        ps = self.alloc.page_size
+        return -(-min(n_positions, self.n_blocks * ps) // ps)
+
+    def owned_pages(self, s: int) -> List[int]:
+        return [int(p) for p in self.table[s] if p != TRASH_PAGE]
+
+    # ---- mutation (all invariant-preserving) ---------------------------
+    def alloc_prefix(self, s: int, n_blocks: int) -> int:
+        """Allocate fresh pages for blocks [0, n_blocks) of row s (prompt
+        admission). Rolls back on pool exhaustion. Returns pages taken."""
+        taken: List[Tuple[int, int]] = []
+        try:
+            for j in range(n_blocks):
+                assert self.table[s, j] == TRASH_PAGE, (s, j)
+                p = self.alloc.alloc()
+                self.table[s, j] = p
+                taken.append((j, p))
+        except OutOfPages:
+            for j, p in taken:
+                self.alloc.release(p)
+                self.table[s, j] = TRASH_PAGE
+            raise
+        return len(taken)
+
+    def fork_row(self, dst: int, src: int) -> int:
+        """dst shares every allocated block of src (refcount bump, no
+        copy) — GRPO prefix sharing. Returns #blocks shared."""
+        n = 0
+        for j in range(self.n_blocks):
+            p = int(self.table[src, j])
+            if p == TRASH_PAGE:
+                continue
+            self.alloc.share(p)
+            self.table[dst, j] = p
+            n += 1
+        return n
+
+    def ensure_writable(self, s: int, j: int) -> Optional[Tuple[int, int]]:
+        """Make block j of row s safe to write: allocate if unallocated,
+        COW if shared. Returns (src_page, dst_page) when the caller must
+        copy page contents on device (COW), else None. The invariant this
+        enforces: no write ever lands on a page with refcount > 1."""
+        p = int(self.table[s, j])
+        if p == TRASH_PAGE:
+            self.table[s, j] = self.alloc.alloc()
+            return None
+        if self.alloc.refcount[p] > 1:
+            q = self.alloc.alloc()       # may raise OutOfPages: no state
+            #                              was mutated yet, caller retries
+            self.alloc.refcount[p] -= 1  # >1 before, so never hits 0
+            self.table[s, j] = q
+            self.alloc.cow_copies += 1
+            return (p, q)
+        return None
+
+    def release_row(self, s: int) -> int:
+        """Free every allocated block of row s (rollout finished, slot
+        preempted, or engine killed). Returns #refs dropped."""
+        n = 0
+        for j in range(self.n_blocks):
+            p = int(self.table[s, j])
+            if p == TRASH_PAGE:
+                continue
+            self.alloc.release(p)
+            self.table[s, j] = TRASH_PAGE
+            n += 1
+        return n
+
+    def check(self) -> None:
+        """Cross-check table refcounts against the allocator (property
+        suite): every page's refcount equals the number of table entries
+        referencing it."""
+        refs = np.zeros(self.alloc.n_pages, np.int64)
+        vals, counts = np.unique(self.table, return_counts=True)
+        refs[vals] = counts
+        refs[TRASH_PAGE] = 0
+        np.testing.assert_array_equal(refs, self.alloc.refcount)
+        self.alloc.check()
+
+
+# ---------------------------------------------------------------------------
+# device side: block-table gather (default read path)
+# ---------------------------------------------------------------------------
+
+def gather_pages(pool, block_table):
+    """pool: (NP, PS, ...); block_table: (B, NB) int32. Returns the
+    contiguous per-slot view (B, NB*PS, ...) — logical ring position p of
+    row b lives at view[b, p]. Unallocated blocks gather the trash page;
+    every consumer masks those positions by per-slot length before the
+    softmax, so their contents never reach an output."""
+    v = jnp.take(pool, block_table, axis=0)          # (B, NB, PS, ...)
+    return v.reshape((v.shape[0], v.shape[1] * v.shape[2]) + v.shape[3:])
+
+
+# ---------------------------------------------------------------------------
+# paged flash-decode kernel (scalar-prefetch block table)
+# ---------------------------------------------------------------------------
+
+def _paged_decode_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_ref, l_ref, acc_ref, *, scale: float,
+                         page_size: int, n_blocks: int):
+    b, ki = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # skip pages entirely past this row's valid length (the index map
+    # already fetched the trash page for unallocated blocks; this avoids
+    # paying their dots too)
+    @pl.when(ki * page_size < len_ref[b])
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)                 # (rep, d)
+        k = k_ref[0, 0].astype(jnp.float32)                 # (ps, d)
+        v = v_ref[0, 0].astype(jnp.float32)                 # (ps, dv)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        valid = (ki * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, (q.shape[0], page_size), 1)) < len_ref[b]
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_prev * corr + p.sum(axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_blocks - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_decode_paged(q, k_pool, v_pool, block_tables, lengths, *,
+                       scale: float, max_len_hint: int | None = None,
+                       interpret: bool | None = None):
+    """One-token GQA decode directly against the page pool.
+
+    q: (B,H,Dk); pools: (NP,PS,KV,D); block_tables: (B,NB) int32;
+    lengths: (B,) valid logical cache length per row. Returns (B,H,Dv).
+
+    The block table and lengths ride in as *scalar-prefetch* operands
+    (`pltpu.PrefetchScalarGridSpec`): the KV BlockSpec index maps read
+    `bt_ref[b, ki]`, so each grid step DMAs exactly the physical page
+    backing logical block ki of row b — the pool is never gathered into a
+    contiguous copy. Online softmax runs page-by-page, i.e. with
+    block_k = page_size; bitwise equal to `flash_decode` on the gathered
+    view only when page_size == its block_k (same reduction order),
+    fp32-close otherwise.
+
+    max_len_hint (static, >= max(lengths)) shrinks the trailing grid axis
+    to ceil(hint/PS) pages, mirroring `flash_decode`'s grid-level early
+    exit.
+    """
+    interpret = default_interpret(interpret)
+    B, H, Dk = q.shape
+    NP, PS, KV, D = k_pool.shape
+    Dv = v_pool.shape[-1]
+    NB = block_tables.shape[1]
+    rep = H // KV
+    nb = NB
+    if max_len_hint is not None:
+        nb = max(1, min(nb, -(-int(max_len_hint) // PS)))
+
+    qr = q.reshape(B, KV, rep, Dk)
+    kr = jnp.swapaxes(k_pool, 1, 2)                    # (NP,KV,PS,D)
+    vr = jnp.swapaxes(v_pool, 1, 2)
+    bt = jnp.asarray(block_tables, jnp.int32)
+    lengths = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (B,))
+
+    kernel = functools.partial(_paged_decode_kernel, scale=scale,
+                               page_size=PS, n_blocks=nb)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KV, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, rep, Dk),
+                         lambda b, h, ki, bt_ref, len_ref: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, PS, D),
+                         lambda b, h, ki, bt_ref, len_ref:
+                         (bt_ref[b, ki], h, 0, 0)),
+            pl.BlockSpec((1, 1, PS, Dv),
+                         lambda b, h, ki, bt_ref, len_ref:
+                         (bt_ref[b, ki], h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, rep, Dv),
+            lambda b, h, ki, bt_ref, len_ref: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((rep, 1), jnp.float32),
+            pltpu.VMEM((rep, 1), jnp.float32),
+            pltpu.VMEM((rep, Dv), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, rep, Dv), q.dtype),
+        interpret=interpret,
+    )(bt, lengths, qr, kr, vr)
+    return out.reshape(B, H, Dv)

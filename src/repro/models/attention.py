@@ -173,6 +173,65 @@ def write_cache(cache, new, index):
     return cache * (1 - onehot) + new.astype(cache.dtype) * onehot
 
 
+# ---------------------------------------------------------------------------
+# paged cache plumbing (DESIGN.md §9)
+#
+# Pool leaves are (n_pages, page_size, ...); `block_tables` (B, n_blocks)
+# maps each slot's logical ring block to a physical page. The default read
+# path gathers the per-slot contiguous view and runs the UNCHANGED
+# attention math on it, which makes the paged engine bit-identical to the
+# slot engine by construction (the valid region of the view equals the
+# slot cache exactly; trash-page garbage only appears at positions every
+# mask already excludes). Writes scatter into the pool; the engine's COW
+# discipline guarantees the written page has refcount 1, so no scatter
+# ever races except on the trash page (never read).
+# ---------------------------------------------------------------------------
+
+def paged_gather(pool, block_tables):
+    """pool: (NP,PS,...) -> per-slot view (B, NB*PS, ...)."""
+    v = jnp.take(pool, block_tables, axis=0)
+    return v.reshape((v.shape[0], v.shape[1] * v.shape[2]) + v.shape[3:])
+
+
+def write_cache_paged(pool, new, index, block_tables):
+    """Paged twin of `write_cache`: write `new` (B,1,...) at ring position
+    index mod CL of each row. Inactive rows' block-table entries point at
+    the trash page, which absorbs their static-shape stale writes."""
+    B = new.shape[0]
+    PS, NB = pool.shape[1], block_tables.shape[1]
+    CL = NB * PS
+    pos = jnp.broadcast_to(jnp.mod(index, CL), (B,))
+    blk = pos // PS
+    off = pos - blk * PS
+    pages = jnp.take_along_axis(block_tables, blk[:, None], axis=1)[:, 0]
+    cur = jnp.take(pool, pages, axis=0)                       # (B,PS,...)
+    oh = (jnp.arange(PS)[None] == off[:, None]).astype(pool.dtype)
+    oh = oh.reshape(oh.shape + (1,) * (pool.ndim - 2))
+    merged = cur * (1 - oh) + new.astype(pool.dtype) * oh
+    return pool.at[pages].set(merged)
+
+
+def write_cache_chunk_paged(pool, new, offset, write_mask, block_tables):
+    """Paged twin of `write_cache_chunk`. The engine keeps chunk size a
+    divisor of page_size, so the chunk [offset, offset+C) lies inside ONE
+    logical block. Masked rows merge back exactly what they gathered
+    (identity write): live rows' pages are untouched and trash-page
+    duplicates all write identical bytes."""
+    C = new.shape[1]
+    PS = pool.shape[1]
+    blk = offset // PS
+    off = offset - blk * PS
+    pages = jnp.take(block_tables, blk[None], axis=1)[:, 0]   # (B,)
+    cur = jnp.take(pool, pages, axis=0)                       # (B,PS,...)
+    merged = new.astype(pool.dtype)
+    if write_mask is not None:
+        old = jax.lax.dynamic_slice_in_dim(cur, off, C, axis=1)
+        shape = write_mask.shape + (1,) * (pool.ndim - write_mask.ndim)
+        merged = jnp.where(write_mask.reshape(shape), merged, old)
+    cur = jax.lax.dynamic_update_slice_in_dim(cur, merged, off, axis=1)
+    return pool.at[pages].set(cur)
+
+
 def decode_block_k(cache_len: int) -> int:
     """flash_decode KV block size for a given cache length — shared with
     the engine's kv_len_hint bucketing so the two layers cannot desync."""
@@ -255,22 +314,48 @@ def gqa_forward(p, x, positions, cfg: ModelConfig, segment_ids=None,
 
 
 def gqa_decode(p, x, positions, cache_k, cache_v, cache_index, cfg: ModelConfig,
-               ring: bool, kv_len_hint=None):
-    """One-token decode. x: (B,1,d); caches (B,CL,KV,Dk). Returns y, new caches.
+               ring: bool, kv_len_hint=None, block_tables=None,
+               paged_kernel: bool = False):
+    """One-token decode. x: (B,1,d); caches (B,CL,KV,Dk), or page pools
+    (NP,PS,KV,Dk) when `block_tables` (B,NB) is given. Returns y, new caches.
 
     kv_len_hint: optional static upper bound on the valid cache length
     across the batch (host-mirrored by the engine); shrinks the flash-decode
-    KV grid instead of relying on per-block `pl.when` skips alone."""
+    KV grid instead of relying on per-block `pl.when` skips alone.
+
+    Paged path: write the token into its page, then either gather the
+    per-slot view and run the IDENTICAL attention below (default —
+    bit-equal to the slot cache), or, with paged_kernel, hand the block
+    table straight to `flash_decode_paged` (scalar-prefetch; no gather)."""
     B = x.shape[0]
-    CL = cache_k.shape[1]
     q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
     k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
     v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
     q, k = _maybe_qk_norm(cfg, p, q, k)
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
-    cache_k = write_cache(cache_k, k, cache_index)
-    cache_v = write_cache(cache_v, v, cache_index)
+    if block_tables is None:
+        CL = cache_k.shape[1]
+        cache_k = write_cache(cache_k, k, cache_index)
+        cache_v = write_cache(cache_v, v, cache_index)
+        view_k, view_v = cache_k, cache_v
+    else:
+        CL = block_tables.shape[1] * cache_k.shape[1]
+        cache_k = write_cache_paged(cache_k, k, cache_index, block_tables)
+        cache_v = write_cache_paged(cache_v, v, cache_index, block_tables)
+        if paged_kernel and uses_flash_decode(cfg, CL):
+            from repro.kernels import ops as kops
+            lengths = jnp.full((B,), CL, jnp.int32) if ring else \
+                jnp.broadcast_to(jnp.minimum(
+                    jnp.asarray(cache_index + 1, jnp.int32), CL), (B,))
+            y = kops.flash_decode_paged(
+                q[:, 0], cache_k, cache_v, block_tables, lengths,
+                scale=1.0 / np.sqrt(cfg.d_head), max_len_hint=kv_len_hint,
+                interpret=cfg.pallas_interpret)
+            y = jnp.einsum("bhk,hkd->bd", y, p["wo"])[:, None]
+            return y, (cache_k, cache_v)
+        view_k = paged_gather(cache_k, block_tables)
+        view_v = paged_gather(cache_v, block_tables)
     if uses_flash_decode(cfg, CL):
         from repro.kernels import ops as kops
         # clamp to CL: once a ring cache has wrapped (cache_index >= CL)
@@ -278,13 +363,13 @@ def gqa_decode(p, x, positions, cache_k, cache_v, cache_index, cfg: ModelConfig,
         lengths = jnp.full((B,), CL, jnp.int32) if ring else \
             jnp.broadcast_to(jnp.minimum(
                 jnp.asarray(cache_index + 1, jnp.int32), CL), (B,))
-        y = kops.flash_decode(q[:, 0], cache_k, cache_v, lengths,
+        y = kops.flash_decode(q[:, 0], view_k, view_v, lengths,
                               scale=1.0 / np.sqrt(cfg.d_head),
                               block_k=decode_block_k(CL),
                               max_len_hint=kv_len_hint,
                               interpret=cfg.pallas_interpret)
     else:
-        y = decode_attention(q[:, 0], cache_k, cache_v, cache_index + 1,
+        y = decode_attention(q[:, 0], view_k, view_v, cache_index + 1,
                              scale=1.0 / np.sqrt(cfg.d_head), ring=ring)
     y = jnp.einsum("bhk,hkd->bd", y, p["wo"])[:, None]
     return y, (cache_k, cache_v)
@@ -327,10 +412,14 @@ def mla_forward(p, x, positions, cfg: ModelConfig, segment_ids=None,
 
 
 def mla_decode(p, x, positions, cache_ckv, cache_krope, cache_index,
-               cfg: ModelConfig, ring: bool):
-    """Absorbed MLA decode: scores in latent space, cache stays compressed."""
+               cfg: ModelConfig, ring: bool, block_tables=None,
+               paged_kernel: bool = False):
+    """Absorbed MLA decode: scores in latent space, cache stays compressed.
+    With `block_tables`, the latent caches are page pools (NP,PS,r) —
+    write the token's latent into its page, gather the per-slot view, and
+    run the identical absorbed attention (bit-equal to the slot cache)."""
+    del paged_kernel  # MLA decodes through the absorbed jnp path
     B = x.shape[0]
-    CL = cache_ckv.shape[1]
     nope, rope = cfg.qk_nope_dim, cfg.qk_rope_dim
     q = jnp.einsum("bsd,dr->bsr", x, p["wq_a"])
     q = rms_norm(q, p["q_norm"], cfg.norm_eps)
@@ -341,14 +430,25 @@ def mla_decode(p, x, positions, cache_ckv, cache_krope, cache_index,
     kv = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"])
     c_kv = rms_norm(kv[..., :cfg.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
     k_rope = apply_rope(kv[..., cfg.kv_lora_rank:], positions, cfg.rope_theta)
-    cache_ckv = write_cache(cache_ckv, c_kv, cache_index)
-    cache_krope = write_cache(cache_krope, k_rope, cache_index)
+    if block_tables is None:
+        CL = cache_ckv.shape[1]
+        cache_ckv = write_cache(cache_ckv, c_kv, cache_index)
+        cache_krope = write_cache(cache_krope, k_rope, cache_index)
+        view_ckv, view_krope = cache_ckv, cache_krope
+    else:
+        CL = block_tables.shape[1] * cache_ckv.shape[1]
+        cache_ckv = write_cache_paged(cache_ckv, c_kv, cache_index,
+                                      block_tables)
+        cache_krope = write_cache_paged(cache_krope, k_rope, cache_index,
+                                        block_tables)
+        view_ckv = paged_gather(cache_ckv, block_tables)
+        view_krope = paged_gather(cache_krope, block_tables)
 
     # absorb W_uk into q: (B,H,nope) x (r,H,nope) -> (B,H,r)
     q_latent = jnp.einsum("bhk,rhk->bhr", q_nope, p["wk_b"])
-    s = jnp.einsum("bhr,bkr->bhk", q_latent, cache_ckv,
+    s = jnp.einsum("bhr,bkr->bhk", q_latent, view_ckv,
                    preferred_element_type=jnp.float32)
-    s += jnp.einsum("bhp,bkp->bhk", q_rope, cache_krope,
+    s += jnp.einsum("bhp,bkp->bhk", q_rope, view_krope,
                     preferred_element_type=jnp.float32)
     s *= 1.0 / np.sqrt(nope + rope)
     if not ring:
@@ -356,7 +456,7 @@ def mla_decode(p, x, positions, cache_ckv, cache_krope, cache_index,
         valid = jnp.arange(CL)[None, None] < idx
         s = jnp.where(valid, s, NEG_INF)
     pw = jax.nn.softmax(s, axis=-1)
-    o_latent = jnp.einsum("bhk,bkr->bhr", pw.astype(cache_ckv.dtype), cache_ckv,
+    o_latent = jnp.einsum("bhk,bkr->bhr", pw.astype(view_ckv.dtype), view_ckv,
                           preferred_element_type=jnp.float32).astype(x.dtype)
     o = jnp.einsum("bhr,rhk->bhk", o_latent, p["wv_b"])
     y = jnp.einsum("bhk,hkd->bd", o, p["wo"])[:, None]
@@ -453,32 +553,49 @@ def _chunk_attention_any(q, k_chunk, v_chunk, k_cache, v_cache, offset,
 
 
 def gqa_prefill_chunk(p, x, positions, cache_k, cache_v, offset, write_mask,
-                      cfg: ModelConfig, offset_hint: Optional[int] = None):
+                      cfg: ModelConfig, offset_hint: Optional[int] = None,
+                      block_tables=None):
     """One GQA layer over a C-token prompt chunk. x: (B,C,d). Attends the
     chunk against the cache prefix plus itself (attend-then-write: on a
     ring cache the chunk's writes evict exactly the slots leaving the
     window), then writes the chunk's K/V at [offset mod CL, ...) masked by
-    write_mask (B,) or (B,C). Returns y (B,C,d), (cache_k, cache_v)."""
+    write_mask (B,) or (B,C). With `block_tables` the caches are page
+    pools: attend against the gathered view, write into pages (the engine
+    keeps chunk | page_size, so the chunk lands in one block).
+    Returns y (B,C,d), (cache_k, cache_v)."""
     q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
     k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
     v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
     q, k = _maybe_qk_norm(cfg, p, q, k)
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
-    y = _chunk_attention_any(q, k, v, cache_k, cache_v, offset, cfg,
+    if block_tables is None:
+        view_k, view_v = cache_k, cache_v
+        CL = cache_k.shape[1]
+    else:
+        view_k = paged_gather(cache_k, block_tables)
+        view_v = paged_gather(cache_v, block_tables)
+        CL = view_k.shape[1]
+    y = _chunk_attention_any(q, k, v, view_k, view_v, offset, cfg,
                              1.0 / np.sqrt(cfg.d_head),
                              offset_hint=offset_hint)
-    CL = cache_k.shape[1]
     off_w = jnp.mod(offset, CL)
-    cache_k = write_cache_chunk(cache_k, k, off_w, write_mask)
-    cache_v = write_cache_chunk(cache_v, v, off_w, write_mask)
+    if block_tables is None:
+        cache_k = write_cache_chunk(cache_k, k, off_w, write_mask)
+        cache_v = write_cache_chunk(cache_v, v, off_w, write_mask)
+    else:
+        cache_k = write_cache_chunk_paged(cache_k, k, off_w, write_mask,
+                                          block_tables)
+        cache_v = write_cache_chunk_paged(cache_v, v, off_w, write_mask,
+                                          block_tables)
     y = jnp.einsum("bshk,hkd->bsd", y, p["wo"])
     return y, (cache_k, cache_v)
 
 
 def mla_prefill_chunk(p, x, positions, cache_ckv, cache_krope, offset,
                       write_mask, cfg: ModelConfig,
-                      offset_hint: Optional[int] = None):
+                      offset_hint: Optional[int] = None,
+                      block_tables=None):
     """One absorbed-MLA layer over a C-token prompt chunk: scores in latent
     space against the compressed cache (same math as mla_decode, C queries).
     Routed through the shared prefill-attention primitive by treating the
@@ -486,7 +603,13 @@ def mla_prefill_chunk(p, x, positions, cache_ckv, cache_krope, offset,
     dim (score = q_latent·c_kv + q_rope·k_rope) and the latent itself as
     the value. Returns y (B,C,d), (cache_ckv, cache_krope)."""
     B, C, _ = x.shape
-    CL = cache_ckv.shape[1]
+    if block_tables is None:
+        CL = cache_ckv.shape[1]
+        view_ckv, view_krope = cache_ckv, cache_krope
+    else:
+        view_ckv = paged_gather(cache_ckv, block_tables)
+        view_krope = paged_gather(cache_krope, block_tables)
+        CL = view_ckv.shape[1]
     nope, rope = cfg.qk_nope_dim, cfg.qk_rope_dim
     q = jnp.einsum("bsd,dr->bsr", x, p["wq_a"])
     q = rms_norm(q, p["q_norm"], cfg.norm_eps)
@@ -502,15 +625,21 @@ def mla_prefill_chunk(p, x, positions, cache_ckv, cache_krope, offset,
     q_latent = jnp.einsum("bqhk,rhk->bqhr", q_nope, p["wk_b"])
     q_cat = jnp.concatenate([q_latent, q_rope], axis=-1)     # (B,C,H,r+rope)
     kh_cat = jnp.concatenate([c_kv, k_rope], axis=-1)[:, :, None]
-    kc_cat = jnp.concatenate([cache_ckv, cache_krope], axis=-1)[:, :, None]
+    kc_cat = jnp.concatenate([view_ckv, view_krope], axis=-1)[:, :, None]
     o_latent = _chunk_attention_any(
-        q_cat, kh_cat, c_kv[:, :, None], kc_cat, cache_ckv[:, :, None],
+        q_cat, kh_cat, c_kv[:, :, None], kc_cat, view_ckv[:, :, None],
         offset, cfg, 1.0 / np.sqrt(nope + rope),
         offset_hint=offset_hint)                             # (B,C,H,r)
 
     off_w = jnp.mod(offset, CL)
-    cache_ckv = write_cache_chunk(cache_ckv, c_kv, off_w, write_mask)
-    cache_krope = write_cache_chunk(cache_krope, k_rope, off_w, write_mask)
+    if block_tables is None:
+        cache_ckv = write_cache_chunk(cache_ckv, c_kv, off_w, write_mask)
+        cache_krope = write_cache_chunk(cache_krope, k_rope, off_w, write_mask)
+    else:
+        cache_ckv = write_cache_chunk_paged(cache_ckv, c_kv, off_w,
+                                            write_mask, block_tables)
+        cache_krope = write_cache_chunk_paged(cache_krope, k_rope, off_w,
+                                              write_mask, block_tables)
     o = jnp.einsum("bqhr,rhk->bqhk", o_latent.astype(x.dtype), p["wv_b"])
     y = jnp.einsum("bqhk,hkd->bqd", o, p["wo"])
     return y, (cache_ckv, cache_krope)

@@ -334,7 +334,8 @@ def _cached_layer_step(cfg: ModelConfig, kind: str, h, lp, attn_fn, ssm_fn):
 
 def decode_step(params, tokens, positions, cache, cache_index,
                 cfg: ModelConfig, *, ring: Optional[bool] = None,
-                kv_len_hint: Optional[int] = None):
+                kv_len_hint: Optional[int] = None, block_tables=None,
+                paged_kernel: bool = False):
     """tokens: (B,1); cache: stacked (L,...) tree; cache_index: scalar or (B,).
     Returns (logits (B,1,V), values (B,1)?, new_cache).
 
@@ -342,7 +343,13 @@ def decode_step(params, tokens, positions, cache, cache_index,
     across the batch; forwarded to the flash-decode kernel to shrink its
     KV grid (the generation engine derives it from its host-side length
     mirrors). Must satisfy kv_len_hint >= max over the batch of
-    min(cache_index+1, CL); None disables the grid-level early exit."""
+    min(cache_index+1, CL); None disables the grid-level early exit.
+
+    block_tables: (B,NB) int32 when the attention cache leaves are page
+    pools (L,NP,PS,...) instead of slot arrays (DESIGN.md §9); SSM leaves
+    keep the slot layout either way. paged_kernel routes GQA decode
+    through the scalar-prefetch paged kernel instead of gather-then-
+    flash_decode."""
     B = tokens.shape[0]
     if ring is None:
         # ring addressing applies only to attention caches, and is on
@@ -367,11 +374,13 @@ def decode_step(params, tokens, positions, cache, cache_index,
                 if cfg.use_mla:
                     a, (nck, nkr) = attn.mla_decode(
                         pa, x, positions, cs["c_kv"], cs["k_rope"],
-                        cache_index, cfg, ring)
+                        cache_index, cfg, ring, block_tables=block_tables,
+                        paged_kernel=paged_kernel)
                     return a, {"c_kv": nck, "k_rope": nkr}
                 a, (nk, nv) = attn.gqa_decode(
                     pa, x, positions, cs["k"], cs["v"], cache_index,
-                    cfg, ring, kv_len_hint=kv_len_hint)
+                    cfg, ring, kv_len_hint=kv_len_hint,
+                    block_tables=block_tables, paged_kernel=paged_kernel)
                 return a, {"k": nk, "v": nv}
 
             def ssm_fn(ps, x):
@@ -410,7 +419,7 @@ def _merge_state(new, old, mask):
 
 def prefill_chunk(params, tokens, prompt_len, offset, admit_mask, cache,
                   cfg: ModelConfig, *, chunk: int,
-                  offset_hint: Optional[int] = None):
+                  offset_hint: Optional[int] = None, block_tables=None):
     """One fixed-size chunk of chunked-prefill admission (DESIGN.md §2).
 
     Runs `chunk` prompt tokens (positions [offset, offset+chunk)) of every
@@ -449,6 +458,12 @@ def prefill_chunk(params, tokens, prompt_len, offset, admit_mask, cache,
     computed: the first completion token is sampled by the normal decode
     step at n_cached = prompt_len-1.
 
+    block_tables: (B,NB) int32 when attention leaves are page pools
+    (DESIGN.md §9). The engine then additionally guarantees chunk |
+    page_size, so every chunk write lands inside one logical block; the
+    chunk attends against the gathered per-slot view, which keeps the
+    equivalence law above intact bit-for-bit versus the slot cache.
+
     Returns the updated cache tree.
     """
     B, T = tokens.shape
@@ -481,11 +496,13 @@ def prefill_chunk(params, tokens, prompt_len, offset, admit_mask, cache,
                 if cfg.use_mla:
                     a, (nck, nkr) = attn.mla_prefill_chunk(
                         pa, x, positions, cs["c_kv"], cs["k_rope"],
-                        offset, kv_write_mask, cfg, offset_hint=offset_hint)
+                        offset, kv_write_mask, cfg, offset_hint=offset_hint,
+                        block_tables=block_tables)
                     return a, {"c_kv": nck, "k_rope": nkr}
                 a, (nk, nv) = attn.gqa_prefill_chunk(
                     pa, x, positions, cs["k"], cs["v"], offset,
-                    kv_write_mask, cfg, offset_hint=offset_hint)
+                    kv_write_mask, cfg, offset_hint=offset_hint,
+                    block_tables=block_tables)
                 return a, {"k": nk, "v": nv}
 
             def ssm_fn(ps, x):

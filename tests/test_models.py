@@ -47,13 +47,18 @@ def test_smoke_forward(arch):
         assert out["mtp_logits"].shape == (B, S - 1, cfg.vocab_size)
 
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+# prefix-token (prompt-tuning) archs are excluded at parametrize time
+# rather than runtime-skipped: the RL trainer path is text-prompt based,
+# permanently — there is nothing a skip would be waiting on
+TRAIN_ARCH_IDS = [a for a in ARCH_IDS
+                  if not get_config(a).n_prefix_tokens]
+
+
+@pytest.mark.parametrize("arch", TRAIN_ARCH_IDS)
 def test_smoke_train_step(arch):
     cfg, params = _setup(arch)
     B, S = 2, 32
     toks, pos, _ = _inputs(cfg, B, S)
-    if cfg.n_prefix_tokens:
-        pytest.skip("RL trainer path is text-prompt based")
     batch = {
         "tokens": toks,
         "positions": pos,
