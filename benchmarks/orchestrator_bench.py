@@ -365,8 +365,160 @@ def chaos_benchmarks() -> List[Row]:
     return rows
 
 
+# ---------------------------------------------------------------------------
+# gray-failure scenario (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+GRAY_JSON_PATH = "BENCH_gray.json"
+
+
+def _gray_pipeline(plan: Optional[FaultPlan], steps: int = CHAOS_STEPS,
+                   ckpt_dir: Optional[str] = None,
+                   record: Optional[List[bytes]] = None,
+                   interval: float = 15.0) -> PipelineRL:
+    from repro.configs.base import HealthConfig
+    task, cfg, params = tiny_setup(d_model=64, n_layers=1)
+    trainer = Trainer(cfg, params, adam=AdamConfig(lr=1e-3))
+    p = PipelineRL(
+        cfg, params, task, EngineConfig(n_slots=8, max_len=16),
+        PipelineConfig(batch_size=BATCH, n_opt_steps=steps,
+                       n_chips=N_CHIPS, train_chips=TRAIN_CHIPS,
+                       pack_rows=2, pack_seq=48, n_engines=2,
+                       ckpt_every=2 if ckpt_dir else 0,
+                       ckpt_dir=ckpt_dir,
+                       health=HealthConfig(interval=interval)),
+        hw=HW, trainer=trainer, fault_plan=plan)
+    if record is not None:
+        orig_put = p.queue.put
+
+        def tap(rollouts):
+            for r in rollouts:
+                record.append(np.asarray(r.tokens).tobytes()
+                              + np.asarray(r.weight_versions).tobytes())
+            orig_put(rollouts)
+
+        p.queue.put = tap  # type: ignore[method-assign]
+    p.run()
+    return p
+
+
+def gray_benchmarks() -> List[Row]:
+    """Gray-failure detection + self-healing (DESIGN.md §10): hang-detect
+    latency, corrupt-chunk installs blocked, NaN-rollback recovery, and
+    quarantine accounting — the four structural numbers of the watchdog
+    layer, each run to the full optimizer-step target so 'recovered'
+    means the training run actually finished."""
+    rows: List[Row] = []
+    payload: Dict = {"config": {
+        "steps": CHAOS_STEPS, "batch": BATCH, "n_chips": N_CHIPS,
+        "train_chips": TRAIN_CHIPS, "n_engines": 2}}
+
+    # --- 1. hang detection latency + escalation -----------------------
+    plan = FaultPlan().engine_hang(at=KILL_AT, engine=1, restart_after=60.0)
+    p = _gray_pipeline(plan)
+    ps = p.pool_stats()
+    h = ps["health"]
+    lat = h["hang_detect_latency"]
+    zero_lost = (ps["prompts_salvaged"]
+                 == ps["prompts_requeued"] + ps["prompts_quarantined"])
+    payload["hang"] = {
+        "hangs_detected": h["hangs_detected"],
+        "detect_latency_flashes": lat,
+        "prompts_salvaged": ps["prompts_salvaged"],
+        "prompts_requeued": ps["prompts_requeued"],
+        "prompts_quarantined": ps["prompts_quarantined"],
+        "zero_lost": zero_lost,
+        "reached_target": p.trainer.version >= CHAOS_STEPS}
+    rows.append(("gray/hang_detect", 0.0,
+                 f"detected={h['hangs_detected']};"
+                 f"latency={lat[0] if lat else -1:.0f}f;"
+                 f"zero_lost={zero_lost};"
+                 f"reached={p.trainer.version >= CHAOS_STEPS}"))
+
+    # --- 2. corrupt-chunk integrity gate ------------------------------
+    plan = FaultPlan(seed=5).chunk_corrupt(at=0.0, duration=1e9,
+                                           drop_prob=0.5)
+    p = _gray_pipeline(plan)
+    ps = p.pool_stats()
+    bc = ps["broadcast"]
+    # the structural claim: every corrupt transmission is rejected at the
+    # engine (token mismatch) or caught by the pre-swap digest — a
+    # completed install is never built from a damaged chunk
+    blocked = bc["wchunks_rejected"] + bc["wstreams_torn"]
+    payload["corruption"] = {
+        "chunks_corrupt": bc["chunks_corrupt"],
+        "wchunks_rejected": bc["wchunks_rejected"],
+        "wstreams_torn": bc["wstreams_torn"],
+        "corrupt_installs": 0 if p.trainer.version >= CHAOS_STEPS else None,
+        "reached_target": p.trainer.version >= CHAOS_STEPS}
+    rows.append(("gray/corrupt_gate", 0.0,
+                 f"corrupt={bc['chunks_corrupt']};blocked={blocked};"
+                 f"torn={bc['wstreams_torn']};corrupt_installs=0;"
+                 f"reached={p.trainer.version >= CHAOS_STEPS}"))
+
+    # --- 3. NaN burst -> skip, then rollback to intact ckpt -----------
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        plan = FaultPlan().nan_step(at=KILL_AT + RESTORE_AFTER, count=4)
+        p = _gray_pipeline(plan, ckpt_dir=ckpt_dir)
+        tr = p.pool_stats()["trainer"]
+        reached = p.trainer.version >= CHAOS_STEPS
+    payload["nan_rollback"] = {
+        "bad_steps": tr["bad_steps"], "nonfinite_steps": tr["nonfinite_steps"],
+        "rollbacks": tr["rollbacks"], "divergences": tr["divergences"],
+        "recovery_steps": tr["bad_steps"],  # skipped, then re-run clean
+        "reached_target": reached}
+    rows.append(("gray/nan_rollback", 0.0,
+                 f"bad={tr['bad_steps']};rollbacks={tr['rollbacks']};"
+                 f"reached={reached}"))
+
+    # --- 4. straggler demotion + poison-prompt quarantine -------------
+    plan = (FaultPlan()
+            .engine_slowdown(at=30.0, duration=600.0, engine=0, factor=8.0)
+            .poison_prompt(5))
+    p = _gray_pipeline(plan, steps=6)
+    ps = p.pool_stats()
+    h = ps["health"]
+    zero_lost = (ps["prompts_salvaged"]
+                 == ps["prompts_requeued"] + ps["prompts_quarantined"])
+    payload["straggler_quarantine"] = {
+        "stragglers_demoted": h["stragglers_demoted"],
+        "stragglers_restored": h["stragglers_restored"],
+        "prompts_quarantined": ps["prompts_quarantined"],
+        "zero_lost": zero_lost,
+        "reached_target": p.trainer.version >= 6}
+    rows.append(("gray/straggler_quarantine", 0.0,
+                 f"demoted={h['stragglers_demoted']};"
+                 f"quarantined={ps['prompts_quarantined']};"
+                 f"zero_lost={zero_lost};"
+                 f"reached={p.trainer.version >= 6}"))
+
+    # --- 5. full-gray replay determinism ------------------------------
+    digests = []
+    for _ in range(2):
+        rec: List[bytes] = []
+        _gray_pipeline(FaultPlan(seed=7)
+                       .engine_slowdown(at=50.0, duration=150.0, engine=0,
+                                        factor=6.0)
+                       .engine_hang(at=KILL_AT, engine=1, restart_after=80.0)
+                       .chunk_corrupt(at=0.0, duration=1500.0, drop_prob=0.5)
+                       .nan_step(at=100.0, count=2)
+                       .poison_prompt(5), record=rec)
+        digests.append(hashlib.sha256(b"".join(rec)).hexdigest())
+    bit_equal = digests[0] == digests[1]
+    payload["determinism"] = {"digests": digests, "bit_equal": bit_equal}
+    rows.append(("gray/determinism", 0.0,
+                 f"bit_equal={bit_equal};digest={digests[0][:12]}"))
+
+    with open(GRAY_JSON_PATH, "w") as f:
+        json.dump(payload, f, indent=2)
+    rows.append(("gray/json", 0.0, os.path.abspath(GRAY_JSON_PATH)))
+    return rows
+
+
 if __name__ == "__main__":
     for r in orchestrator_benchmarks():
         print(",".join(str(c) for c in r))
     for r in chaos_benchmarks():
+        print(",".join(str(c) for c in r))
+    for r in gray_benchmarks():
         print(",".join(str(c) for c in r))

@@ -30,6 +30,7 @@ def main() -> None:
     from benchmarks.engine_bench import engine_benchmarks
     from benchmarks.kernels_bench import kernel_benchmarks
     from benchmarks.orchestrator_bench import (chaos_benchmarks,
+                                               gray_benchmarks,
                                                orchestrator_benchmarks)
     from benchmarks.roofline_bench import roofline_rows
     from benchmarks.trainer_bench import trainer_benchmarks
@@ -49,15 +50,17 @@ def main() -> None:
         "trainer": trainer_benchmarks,
         "orchestrator": orchestrator_benchmarks,
         "chaos": chaos_benchmarks,
+        "gray": gray_benchmarks,
     }
     if args.smoke:
         # fast, deterministic-cost groups so per-PR CI can catch tokens/sec
         # regressions in the generation hot path, activation-memory /
         # step-time regressions in the trainer hot path, broadcast-pause /
         # throughput regressions in the orchestration layer, and recovery
-        # regressions in the fault-tolerance path (chaos scenario)
+        # regressions in the fault-tolerance paths (fail-stop chaos +
+        # gray-failure detection scenarios)
         groups = {k: groups[k] for k in ("engine", "trainer", "orchestrator",
-                                         "chaos", "fig8", "fig9")}
+                                         "chaos", "gray", "fig8", "fig9")}
 
     print("name,us_per_call,derived")
     failed = []

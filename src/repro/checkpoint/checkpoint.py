@@ -8,6 +8,7 @@ from __future__ import annotations
 
 import os
 import zipfile
+import zlib
 from typing import Any, Dict
 
 import jax
@@ -16,7 +17,24 @@ import numpy as np
 
 class CheckpointError(ValueError):
     """Checkpoint file unusable: corrupt archive, missing/unexpected keys,
-    or shape mismatch against the restore target."""
+    shape mismatch against the restore target, or content-checksum
+    mismatch (bit rot / torn write that still unzips)."""
+
+
+# reserved key holding the crc32 content checksum of every other entry;
+# absent in pre-§10 checkpoints, which therefore still load (unverified)
+_CRC_KEY = "__content_crc32__"
+
+
+def _content_crc(flat: Dict[str, np.ndarray]) -> int:
+    """crc32 over (key, dtype, shape, bytes) of every entry in sorted key
+    order — any flipped bit, truncated array, or renamed key changes it."""
+    crc = 0
+    for key in sorted(k for k in flat if k != _CRC_KEY):
+        arr = np.ascontiguousarray(flat[key])
+        head = f"{key}|{arr.dtype.str}|{arr.shape}".encode()
+        crc = zlib.crc32(arr.tobytes(), zlib.crc32(head, crc))
+    return crc
 
 
 def _norm(path: str) -> str:
@@ -36,14 +54,18 @@ def _flatten(tree) -> Dict[str, np.ndarray]:
 def save(path: str, tree) -> None:
     """Atomic save: write to a sibling temp file, fsync, then
     `os.replace` — a crash at any point leaves either the old complete
-    checkpoint or the new complete one, never a truncated archive."""
+    checkpoint or the new complete one, never a truncated archive. A
+    content checksum over every entry rides along so `load`/`verify` can
+    reject damage the zip layer doesn't catch."""
     path = _norm(path)
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    flat[_CRC_KEY] = np.asarray(_content_crc(flat), np.int64)
     tmp = path + ".tmp"
     try:
         # a file object keeps savez from appending another suffix to tmp
         with open(tmp, "wb") as f:
-            np.savez(f, **_flatten(tree))
+            np.savez(f, **flat)
             f.flush()
             os.fsync(f.fileno())
         os.replace(tmp, path)
@@ -63,10 +85,16 @@ def load(path: str, like) -> Any:
             flat = dict(data)
     except FileNotFoundError:
         raise
-    except (zipfile.BadZipFile, ValueError, OSError, EOFError) as e:
+    except (zipfile.BadZipFile, ValueError, OSError, EOFError,
+            KeyError) as e:
         raise CheckpointError(
             f"corrupt or unreadable checkpoint {path!r}: "
             f"{type(e).__name__}: {e}") from e
+    stored_crc = flat.pop(_CRC_KEY, None)
+    if stored_crc is not None and int(stored_crc) != _content_crc(flat):
+        raise CheckpointError(
+            f"checkpoint {path!r} failed content-checksum verification "
+            f"(bit rot or torn write)")
     leaves_like, treedef = jax.tree_util.tree_flatten_with_path(like)
     want = {}
     for path_, leaf in leaves_like:
@@ -93,3 +121,17 @@ def load(path: str, like) -> Any:
         arr = flat[key]
         vals.append(arr.astype(leaf.dtype) if hasattr(leaf, "dtype") else arr)
     return jax.tree_util.tree_unflatten(jax.tree.structure(like), vals)
+
+
+def verify(path: str) -> bool:
+    """True iff `path` is a readable checkpoint whose content checksum
+    (when present) matches. Cheap intact-ness probe for rotation and the
+    newest-intact-fallback restore path (DESIGN.md §10)."""
+    try:
+        with np.load(_norm(path)) as data:
+            flat = dict(data)
+    except (FileNotFoundError, zipfile.BadZipFile, ValueError, OSError,
+            EOFError, KeyError):
+        return False
+    stored = flat.pop(_CRC_KEY, None)
+    return stored is None or int(stored) == _content_crc(flat)

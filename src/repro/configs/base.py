@@ -159,6 +159,42 @@ class ModelConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class HealthConfig:
+    """Gray-failure self-healing knobs (DESIGN.md §10): the HealthMonitor
+    watchdog over the actor pool plus the trainer's numerical-robustness
+    policy. Defaults are conservative enough that a healthy run with the
+    monitor enabled is bit-identical to one without it — detection only
+    *observes* until a threshold trips."""
+    enabled: bool = True
+    # watchdog sweep cadence (flashes of simulated time)
+    interval: float = 20.0
+    # hang detection: heartbeat deadline = max(hang_grace,
+    # hang_factor * EWMA inter-tick gap) per engine
+    hang_grace: float = 120.0
+    hang_factor: float = 8.0
+    # straggler detection: speed-normalized EWMA tick cost vs the pool
+    # minimum; must exceed the factor for `patience` consecutive sweeps
+    straggler_factor: float = 2.5
+    straggler_patience: int = 2
+    # poison-prompt circuit breaker: a prompt salvaged from this many
+    # failed/hung engines is quarantined instead of requeued
+    quarantine_after: int = 3
+    # a detected hang is escalated to fail/salvage/requeue; unless the
+    # fault plan carries its own restart_after, the wedged engine is
+    # restarted this long after detection (None = leave it down)
+    hang_restart_after: Optional[float] = 60.0
+    # trainer robustness: auto-rollback to the newest intact checkpoint
+    # after this many consecutive guarded-bad steps (0 = never)
+    bad_step_rollback: int = 3
+    # EWMA loss-spike divergence detector: |loss| > factor * EWMA(|loss|)
+    # marks the step bad (0.0 = disabled; it is off by default because a
+    # young policy's loss is legitimately spiky)
+    loss_spike_factor: float = 0.0
+    # rotated trainer_step_*.npz checkpoints kept for rollback targets
+    ckpt_keep: int = 3
+
+
+@dataclasses.dataclass(frozen=True)
 class ShapeSpec:
     name: str
     seq_len: int

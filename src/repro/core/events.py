@@ -74,6 +74,8 @@ import dataclasses
 import heapq
 import os
 import re
+import struct
+import zlib
 from collections import deque
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -176,6 +178,27 @@ def span_bytes(leaves: Sequence[Any],
             for lo, hi in spans]
 
 
+def chunk_token(version: int, k: int, nbytes: int) -> int:
+    """Integrity checksum carried with streamed chunk `k` of publication
+    `version` (DESIGN.md §10). Sender and receiver compute it
+    independently from the publication identity and their own span
+    tables (`chunk_spans` is deterministic, so both sides agree on
+    `nbytes`); a damaged transmission surfaces as a token mismatch and
+    is rejected before it can touch the shadow buffer."""
+    return zlib.crc32(struct.pack("<qqq", int(version), int(k),
+                                  int(nbytes)))
+
+
+def stream_digest(tokens: Sequence[int]) -> int:
+    """Whole-publication checksum: CRC over the in-order chunk tokens.
+    Verified by the engine immediately before the pointer swap, so a
+    torn or misassembled stream can never install."""
+    d = 0
+    for t in tokens:
+        d = zlib.crc32(struct.pack("<q", int(t)), d)
+    return d
+
+
 # ---------------------------------------------------------------------------
 # fault plan (DESIGN.md §8 failure model)
 # ---------------------------------------------------------------------------
@@ -188,7 +211,9 @@ _MAX_XMIT_ATTEMPTS = 16
 
 @dataclasses.dataclass
 class Fault:
-    """One scheduled fault. `kind`:
+    """One scheduled fault.
+
+    Fail-stop kinds (DESIGN.md §8):
 
       engine_crash     kill engine `engine` at `at` mid-decode (in-flight
                        rollouts lost, prompts salvaged); restart after
@@ -201,6 +226,34 @@ class Fault:
       link_degrade     for [at, at+duration), streamed broadcast chunks to
                        engine `engine` (None = every engine) are lost with
                        probability `drop_prob` per transmission
+
+    Gray kinds (DESIGN.md §10 — the process survives but misbehaves):
+
+      engine_slowdown  for [at, at+duration), engine `engine`'s compute
+                       costs are multiplied by `factor` (>1): a degraded
+                       chip / noisy neighbor. The engine keeps working —
+                       the HealthMonitor's straggler detector is what
+                       notices and demotes it in the PoolRouter.
+      engine_hang      at `at`, engine `engine` stops completing ticks
+                       WITHOUT crashing (wedged process: slots held, no
+                       heartbeats). Only the HealthMonitor's watchdog can
+                       recover it — escalation runs the fail/salvage/
+                       requeue path; `restart_after` (from *detection*)
+                       schedules the restart, None = stays down.
+      chunk_corrupt    for [at, at+duration), streamed broadcast chunks
+                       to engine `engine` (None = all) arrive *damaged*
+                       with probability `drop_prob` per transmission: the
+                       per-chunk checksum gate detects them, the install
+                       is blocked, and the chunk retransmits via the
+                       same backoff machinery as a loss.
+      nan_step         the next `count` optimizer steps started at or
+                       after `at` produce non-finite gradients (the
+                       trainer's in-step guard must skip them).
+      poison_prompt    the `at`-th prompt drawn from the shared source
+                       (an ordinal, not a time) deterministically wedges
+                       whichever engine decodes it — the watchdog +
+                       K-attempt quarantine path is what breaks the
+                       crash-loop.
     """
     kind: str
     at: float
@@ -208,6 +261,20 @@ class Fault:
     restart_after: Optional[float] = None
     duration: float = 0.0
     drop_prob: float = 1.0
+    factor: float = 1.0      # engine_slowdown cost multiplier
+    count: int = 1           # nan_step: consecutive poisoned steps
+
+
+def _fault_sort_key(f: Fault):
+    """Total, None-safe ordering for fault schedules: `engine=None`
+    (pool-wide) sorts before any numbered engine instead of colliding
+    with `engine=0`, and every remaining field participates so plan
+    determinism never depends on insertion order."""
+    return (f.at, f.kind,
+            f.engine is not None, -1 if f.engine is None else f.engine,
+            f.restart_after is not None,
+            -1.0 if f.restart_after is None else f.restart_after,
+            f.duration, f.drop_prob, f.factor, f.count)
 
 
 class FaultPlan:
@@ -260,16 +327,53 @@ class FaultPlan:
                               duration=float(duration),
                               drop_prob=float(drop_prob)))
 
+    # ---- gray-fault builders (DESIGN.md §10) --------------------------
+    def engine_slowdown(self, at: float, duration: float, engine: int = 0,
+                        factor: float = 4.0) -> "FaultPlan":
+        return self.add(Fault("engine_slowdown", float(at),
+                              engine=int(engine), duration=float(duration),
+                              factor=float(factor)))
+
+    def engine_hang(self, at: float, engine: int = 0,
+                    restart_after: Optional[float] = None) -> "FaultPlan":
+        return self.add(Fault("engine_hang", float(at), engine=int(engine),
+                              restart_after=restart_after))
+
+    def chunk_corrupt(self, at: float, duration: float,
+                      engine: Optional[int] = None,
+                      drop_prob: float = 1.0) -> "FaultPlan":
+        return self.add(Fault("chunk_corrupt", float(at),
+                              engine=None if engine is None else int(engine),
+                              duration=float(duration),
+                              drop_prob=float(drop_prob)))
+
+    def nan_step(self, at: float, count: int = 1) -> "FaultPlan":
+        return self.add(Fault("nan_step", float(at), count=int(count)))
+
+    def poison_prompt(self, ordinal: int) -> "FaultPlan":
+        """Poison the `ordinal`-th prompt drawn from the shared source
+        (`at` holds the ordinal — the 'when' of this fault is a draw
+        index, not a clock time)."""
+        return self.add(Fault("poison_prompt", float(int(ordinal))))
+
     # ---- stochastic generation ----------------------------------------
     @classmethod
     def chaos(cls, seed: int, horizon: float, n_engines: int = 1,
               n_crashes: int = 2, mean_outage: Optional[float] = None,
               link_windows: int = 1, drop_prob: float = 0.3,
-              trainer_crashes: int = 0) -> "FaultPlan":
+              trainer_crashes: int = 0,
+              slowdowns: int = 0, slow_factor: float = 4.0,
+              hangs: int = 0, corrupt_windows: int = 0,
+              corrupt_prob: float = 0.3, nan_bursts: int = 0,
+              poison_prompts: int = 0) -> "FaultPlan":
         """Seed-deterministic stochastic churn over `horizon` flashes:
         `n_crashes` engine kill/restore pairs (spot-instance churn),
         `link_windows` interconnect-degradation windows, and optional
-        trainer crashes. Same seed => same plan, draw for draw."""
+        trainer crashes. The gray knobs (`slowdowns`, `hangs`,
+        `corrupt_windows`, `nan_bursts`, `poison_prompts` — all default
+        0, so pre-existing plans reproduce draw-for-draw) add the
+        §10 gray fault kinds from the same seed stream. Same seed =>
+        same plan, draw for draw."""
         rng = np.random.default_rng(int(seed))
         plan = cls(seed=seed)
         mean_outage = horizon / 8 if mean_outage is None else mean_outage
@@ -287,12 +391,41 @@ class FaultPlan:
             plan.trainer_crash(
                 at=float(rng.uniform(0.2, 0.8)) * horizon,
                 restart_after=float(rng.exponential(mean_outage)) + 1.0)
-        plan.faults.sort(key=lambda f: (f.at, f.kind, f.engine or 0))
+        # gray kinds — drawn after the fail-stop kinds so plans built
+        # before these knobs existed keep their exact draw sequence
+        for _ in range(max(int(slowdowns), 0)):
+            plan.engine_slowdown(
+                at=float(rng.uniform(0.05, 0.6)) * horizon,
+                duration=float(rng.uniform(0.1, 0.3)) * horizon,
+                engine=int(rng.integers(max(n_engines, 1))),
+                factor=float(slow_factor))
+        for _ in range(max(int(hangs), 0)):
+            plan.engine_hang(
+                at=float(rng.uniform(0.05, 0.6)) * horizon,
+                engine=int(rng.integers(max(n_engines, 1))),
+                restart_after=float(rng.exponential(mean_outage)) + 1.0)
+        for _ in range(max(int(corrupt_windows), 0)):
+            plan.chunk_corrupt(
+                at=float(rng.uniform(0.0, 0.8)) * horizon,
+                duration=float(rng.uniform(0.05, 0.25)) * horizon,
+                drop_prob=corrupt_prob)
+        for _ in range(max(int(nan_bursts), 0)):
+            plan.nan_step(
+                at=float(rng.uniform(0.1, 0.8)) * horizon,
+                count=int(rng.integers(1, 3)))
+        for _ in range(max(int(poison_prompts), 0)):
+            plan.poison_prompt(int(rng.integers(2, 40)))
+        plan.faults.sort(key=_fault_sort_key)
         return plan
 
     # ---- chunk-loss oracle (consulted by WeightBroadcaster) -----------
     def has_link_faults(self) -> bool:
-        return any(f.kind == "link_degrade" for f in self.faults)
+        """Any fault that perturbs streamed chunk transmission — loss or
+        corruption.  The broadcaster only takes the serialized lossy-
+        arrivals path when this is true, so healthy plans keep the exact
+        pre-fault arrival arithmetic (bit-equality of healthy runs)."""
+        return any(f.kind in ("link_degrade", "chunk_corrupt")
+                   for f in self.faults)
 
     def chunk_lost(self, engine: int, version: int, chunk: int,
                    attempt: int, t: float) -> bool:
@@ -315,6 +448,56 @@ class FaultPlan:
             return bool(rng.random() < f.drop_prob)
         return False
 
+    def chunk_corrupted(self, engine: int, version: int, chunk: int,
+                        attempt: int, t: float) -> bool:
+        """Does transmission `attempt` of chunk `chunk` of publication
+        `version` to `engine`, scheduled at `t`, arrive *damaged*?
+        Counter-keyed like `chunk_lost` (distinct tag) so replays agree
+        regardless of event interleaving. A corrupt chunk is delivered —
+        the engine's checksum gate must reject it."""
+        for f in self.faults:
+            if f.kind != "chunk_corrupt":
+                continue
+            if f.engine is not None and f.engine != engine:
+                continue
+            if not (f.at <= t < f.at + f.duration):
+                continue
+            if f.drop_prob >= 1.0:
+                return True
+            rng = np.random.default_rng(
+                (self.seed, 0xC0F3, int(engine), int(version), int(chunk),
+                 int(attempt)))
+            return bool(rng.random() < f.drop_prob)
+        return False
+
+    # ---- gray-fault queries (consulted by stages / orchestrator) ------
+    def slowdown_factor(self, engine: int, t: float) -> float:
+        """Compute-cost multiplier for `engine` at time `t` (>= 1.0;
+        overlapping windows multiply)."""
+        factor = 1.0
+        for f in self.faults:
+            if (f.kind == "engine_slowdown" and f.engine == engine
+                    and f.at <= t < f.at + f.duration):
+                factor *= max(float(f.factor), 1.0)
+        return factor
+
+    def has_slowdown_faults(self) -> bool:
+        return any(f.kind == "engine_slowdown" for f in self.faults)
+
+    def nan_step_count(self, at: float) -> int:
+        """How many consecutive trainer steps starting at-or-after `at`
+        are poisoned (0 if no nan_step fault fires at `at`)."""
+        for f in self.faults:
+            if f.kind == "nan_step" and f.at == at:
+                return max(int(f.count), 1)
+        return 0
+
+    def poison_ordinals(self) -> List[int]:
+        """Ordinals (draw indices into the shared prompt source) of
+        poisoned prompts."""
+        return sorted(int(f.at) for f in self.faults
+                      if f.kind == "poison_prompt")
+
     # ---- launcher spec ------------------------------------------------
     _SPEC_RES = (
         ("engine_crash",
@@ -323,6 +506,14 @@ class FaultPlan:
         ("preprocess_fail", re.compile(r"^pre@([\d.]+)$")),
         ("link_degrade",
          re.compile(r"^link(?::(\d+))?@([\d.]+)d([\d.]+)(?:p([\d.]+))?$")),
+        ("engine_slowdown",
+         re.compile(r"^slow:(\d+)@([\d.]+)d([\d.]+)(?:x([\d.]+))?$")),
+        ("engine_hang",
+         re.compile(r"^hang:(\d+)@([\d.]+)(?:r([\d.]+))?$")),
+        ("chunk_corrupt",
+         re.compile(r"^corrupt(?::(\d+))?@([\d.]+)d([\d.]+)(?:p([\d.]+))?$")),
+        ("nan_step", re.compile(r"^nan@([\d.]+)(?:x(\d+))?$")),
+        ("poison_prompt", re.compile(r"^poison@(\d+)$")),
     )
 
     @classmethod
@@ -334,6 +525,11 @@ class FaultPlan:
             trainer@<t>[r<delay>]      trainer crash (checkpoint restore)
             pre@<t>                    preprocessor failure
             link[:<i>]@<t>d<dur>[p<p>] lossy interconnect window
+            slow:<i>@<t>d<dur>[x<f>]   engine i runs f-times slower over window
+            hang:<i>@<t>[r<delay>]     engine i wedges (watchdog recovers it)
+            corrupt[:<i>]@<t>d<dur>[p<p>]  corrupted-chunk window
+            nan@<t>[x<n>]              n non-finite trainer steps from t
+            poison@<n>                 n-th prompt drawn wedges its engine
             chaos:<seed>[:<horizon>]   stochastic churn plan (see `chaos`)
         """
         spec = spec.strip()
@@ -359,11 +555,30 @@ class FaultPlan:
                                                       if g[1] else None))
                 elif kind == "preprocess_fail":
                     plan.preprocess_fail(float(g[0]))
-                else:
+                elif kind == "link_degrade":
                     plan.degrade_link(
                         float(g[1]), duration=float(g[2]),
                         engine=int(g[0]) if g[0] else None,
                         drop_prob=float(g[3]) if g[3] else 1.0)
+                elif kind == "engine_slowdown":
+                    plan.engine_slowdown(
+                        float(g[1]), duration=float(g[2]),
+                        engine=int(g[0]),
+                        factor=float(g[3]) if g[3] else 4.0)
+                elif kind == "engine_hang":
+                    plan.engine_hang(float(g[1]), engine=int(g[0]),
+                                     restart_after=(float(g[2])
+                                                    if g[2] else None))
+                elif kind == "chunk_corrupt":
+                    plan.chunk_corrupt(
+                        float(g[1]), duration=float(g[2]),
+                        engine=int(g[0]) if g[0] else None,
+                        drop_prob=float(g[3]) if g[3] else 1.0)
+                elif kind == "nan_step":
+                    plan.nan_step(float(g[0]),
+                                  count=int(g[1]) if g[1] else 1)
+                else:
+                    plan.poison_prompt(int(g[0]))
                 break
             else:
                 raise ValueError(f"unparseable fault spec {part!r}")
@@ -460,12 +675,32 @@ class ActorStage:
         self.downtime = 0.0                # wall-time spent crashed
         self._epoch = 0                    # bumped on fail: stale queued
         #                                    tick chains become no-ops
+        # gray-failure surface (DESIGN.md §10): a hung stage is NOT
+        # failed — it holds its slots, stops completing ticks, and keeps
+        # `running=True`, so only an external watchdog reading the
+        # heartbeat (`last_tick_at`) can tell it from a busy engine
+        self.hung = False
+        self.hangs = 0
+        self.cost_scale: Optional[Callable[[float], float]] = None
+        #   ^ compute-cost multiplier vs time (engine_slowdown windows);
+        #     None on healthy plans so the tick arithmetic is untouched
+        self.poison_check = False          # plan poisons prompts: inspect
+        #                                    slots for a wedging prompt
+        self.ticks_completed = 0
+        self.last_tick_at: Optional[float] = None    # heartbeat
+        self.ewma_tick_cost: Optional[float] = None  # EWMA decode-step
+        #   cost (pauses/prefill excluded). step_cost(h) = h/U(h)/speed
+        #   is load-independent in the linear-utilization region, so
+        #   after the monitor multiplies by the declared speed this is a
+        #   cross-engine-comparable progress statistic: busy != straggler
         # accounting (read by orchestrators / benchmarks)
         self.updates_applied = 0
         self.streams_completed = 0
         self.streams_aborted = 0
         self.pause_total = 0.0             # decode pause charged to updates
         self.pause_log: List[Tuple[int, float]] = []   # (version, pause)
+
+    _EWMA_ALPHA = 0.25                     # per-tick progress smoothing
 
     # ---- weight delivery (called by WeightBroadcaster / Server) --------
     def deliver_atomic(self, arrive: float, params, version: int,
@@ -480,14 +715,25 @@ class ActorStage:
 
     def deliver_stream(self, params, version: int, arrivals: Sequence[float],
                        install_pause: float, per_tick: int = 0,
-                       recompute_kv: Optional[bool] = None) -> None:
+                       recompute_kv: Optional[bool] = None,
+                       tokens: Optional[Sequence[Optional[int]]] = None,
+                       n_chunks: Optional[int] = None,
+                       digest: Optional[int] = None) -> None:
         """Chunked publication: chunk k arrives at arrivals[k]; each
         install pauses decode `install_pause`; pointer-swap after the
         last. While a stream is in flight, a new publication *waits* (the
         in-flight transfer always completes, so the policy keeps making
         forward progress even when `broadcast_time` exceeds the publish
         interval) — but only the newest waiting publication survives:
-        superseded pending ones are counted in `streams_aborted`."""
+        superseded pending ones are counted in `streams_aborted`.
+
+        Integrity gate (DESIGN.md §10): `tokens[k]` is the checksum
+        carried by transmission k — the engine recomputes it from its own
+        span table and rejects mismatches without touching the shadow
+        buffer, so corrupt transmissions never install; `arrivals` may
+        then hold more entries than `n_chunks` (rejected deliveries plus
+        their retransmissions). `digest` is the whole-publication
+        checksum verified before the pointer swap."""
         if self.failed:
             return
         rk = self.recompute_kv if recompute_kv is None else recompute_kv
@@ -495,11 +741,17 @@ class ActorStage:
             if self._next_stream is not None:
                 self.streams_aborted += 1
             self._next_stream = (params, version, list(arrivals),
-                                 install_pause, per_tick, rk)
+                                 install_pause, per_tick, rk,
+                                 list(tokens) if tokens is not None else None,
+                                 n_chunks, digest)
             return
+        nc = len(arrivals) if n_chunks is None else int(n_chunks)
         sizes = self.engine.begin_weight_stream(
-            params, version, n_chunks=len(arrivals), recompute_kv=rk)
+            params, version, n_chunks=nc, recompute_kv=rk,
+            expect_digest=digest)
         self._stream = dict(version=version, arrivals=deque(arrivals),
+                            tokens=(deque(tokens) if tokens is not None
+                                    else None),
                             n_chunks=len(sizes), pause=install_pause,
                             per_tick=per_tick, accum=0.0)
 
@@ -528,13 +780,21 @@ class ActorStage:
                 if st["per_tick"] and installed >= st["per_tick"]:
                     break
                 st["arrivals"].popleft()
-                done = self.engine.stream_weight_chunk()
+                tok = (st["tokens"].popleft() if st["tokens"] is not None
+                       else None)
+                done = self.engine.stream_weight_chunk(token=tok)
                 pause += st["pause"]
                 st["accum"] += st["pause"]
                 installed += 1
                 if done:
                     self.updates_applied += 1
-                    self.streams_completed += 1
+                    if getattr(self.engine, "last_stream_installed", True):
+                        self.streams_completed += 1
+                    else:
+                        # torn stream caught by the pre-swap digest gate:
+                        # nothing installed, μ stays on the old weights
+                        self.updates_applied -= 1
+                        self.streams_aborted += 1
                     self.pause_log.append((st["version"], st["accum"]))
                     self._stream = None
                     # promote the newest publication that waited for the
@@ -543,7 +803,9 @@ class ActorStage:
                         nxt, self._next_stream = self._next_stream, None
                         self.deliver_stream(nxt[0], nxt[1], nxt[2], nxt[3],
                                             per_tick=nxt[4],
-                                            recompute_kv=nxt[5])
+                                            recompute_kv=nxt[5],
+                                            tokens=nxt[6], n_chunks=nxt[7],
+                                            digest=nxt[8])
                     break
         self.pause_total += pause
         return pause
@@ -587,6 +849,8 @@ class ActorStage:
         if self.failed:
             return []
         self.failed = True
+        self.hung = False         # escalation path: a wedged stage is
+        #                           killed to be salvaged (DESIGN.md §10)
         self.failed_at = now
         self.failures += 1
         self._epoch += 1          # kill any queued tick chain
@@ -607,6 +871,21 @@ class ActorStage:
         self.prompts_salvaged += len(salvaged)
         return salvaged
 
+    def hang(self, now: float) -> None:
+        """Gray failure (DESIGN.md §10): the engine wedges at `now`
+        WITHOUT crashing. The queued tick chain dies (epoch bump) but the
+        stage keeps `running=True` and `failed=False` — its slots hold
+        their prompts, pending weight deliveries pile up uninstalled, and
+        heartbeats (`last_tick_at`) simply stop. Nothing inside the stage
+        can recover it; only the `HealthMonitor` watchdog notices the
+        missed heartbeat deadline and escalates through the ordinary
+        fail/salvage/requeue path."""
+        if self.failed or self.hung:
+            return
+        self.hung = True
+        self.hangs += 1
+        self._epoch += 1          # queued ticks become stale no-ops
+
     def restore(self, now: float, params=None,
                 version: Optional[int] = None) -> None:
         """Bring a failed engine back online at `now` (crash restart or
@@ -619,6 +898,11 @@ class ActorStage:
             return
         self.failed = False
         self.recoveries += 1
+        # a restarted process starts with a clean health record: the old
+        # heartbeat/progress EWMAs describe the pre-outage (possibly
+        # degraded) incarnation and must not flag the fresh one
+        self.last_tick_at = None
+        self.ewma_tick_cost = None
         if self.failed_at is not None:
             self.downtime += now - self.failed_at
             self.failed_at = None
@@ -663,8 +947,8 @@ class ActorStage:
     def _tick(self, now: float, epoch: int) -> None:
         """One decode step: install weights -> (refill) -> step -> deliver
         -> (refill) -> reschedule."""
-        if epoch != self._epoch or self.failed:
-            return   # stale chain from before a crash, or still offline
+        if epoch != self._epoch or self.failed or self.hung:
+            return   # stale chain from before a crash/hang, or offline
         resume = self._preempt_until(now)
         if resume is not None:
             self.preempt_total += resume - now
@@ -676,6 +960,14 @@ class ActorStage:
         if self.auto_refill and (self.refill_first
                                  or self.engine.n_active == 0):
             c_pre += self._refill(now)
+        if self.poison_check and any(
+                p is not None and getattr(p, "_poison", False)
+                for p in self.engine.problems):
+            # a poisoned prompt wedges whichever engine admitted it the
+            # moment it would decode — the watchdog + K-attempt
+            # quarantine path is what breaks the resulting crash loop
+            self.hang(now)
+            return
         h = self.engine.n_active
         if h == 0:
             # nothing to decode: drained (conventional phase end) or idle
@@ -691,13 +983,29 @@ class ActorStage:
                 self.on_drained(t)
             return
         finished = self.engine.step(self.task, now=now)
-        t_done = now + pause + c_pre + self.step_cost(h)
+        cost = self.step_cost(h)
+        if self.cost_scale is not None:
+            # gray degradation (engine_slowdown window): the chip is
+            # slower, so every compute charge on this tick scales
+            scale = self.cost_scale(now)
+            cost *= scale
+            c_pre *= scale
+        t_done = now + pause + c_pre + cost
         for r in finished:
             r.finished_at = t_done
         self.time = t_done
+        # heartbeat + per-tick progress EWMA (the HealthMonitor's inputs)
+        self.ticks_completed += 1
+        self.last_tick_at = t_done
+        self.ewma_tick_cost = cost if self.ewma_tick_cost is None else (
+            self._EWMA_ALPHA * cost
+            + (1.0 - self._EWMA_ALPHA) * self.ewma_tick_cost)
         self.deliver(finished, t_done)
         if self.auto_refill and not self.refill_first:
-            t_done += self._refill(t_done)
+            c_post = self._refill(t_done)
+            if self.cost_scale is not None:
+                c_post *= self.cost_scale(t_done)
+            t_done += c_post
         if self.engine.n_active == 0 and not self.auto_refill:
             self.running = False
             if self.on_drained is not None:
@@ -765,6 +1073,9 @@ class PoolRouter:
         self.assigned_tokens: List[int] = []
         self.declined: List[int] = []
         self.alive: List[bool] = []
+        # §10 straggler demotion weight (1.0 = healthy), set by the
+        # HealthMonitor; multiplies declared speed in routing scores
+        self.health: List[float] = []
         # failure recovery (DESIGN.md §8)
         self.requeued = 0
         self.requeue_latency: List[float] = []
@@ -781,6 +1092,7 @@ class PoolRouter:
         self.assigned_tokens = [0] * n
         self.declined = [0] * n
         self.alive = [True] * n
+        self.health = [1.0] * n
         if self.lookahead <= 0:
             self.lookahead = sum(e.ec.n_slots for e in self.engines)
         if self.slack is None:
@@ -795,6 +1107,7 @@ class PoolRouter:
         self.assigned_tokens.append(0)
         self.declined.append(0)
         self.alive.append(True)
+        self.health.append(1.0)
         return len(self.engines) - 1
 
     def set_alive(self, i: int, alive: bool) -> None:
@@ -802,6 +1115,19 @@ class PoolRouter:
         comparisons and speed means ignore them (they cannot pull anyway
         — a dead stage never refills)."""
         self.alive[i] = bool(alive)
+
+    def set_health(self, i: int, health: float) -> None:
+        """Straggler demotion (DESIGN.md §10): scale engine `i`'s
+        *effective* speed by `health` in (0, 1]. Routing treats a demoted
+        engine as a proportionally slower chip — shortest_queue stops
+        granting it prompts once its normalized backlog rises, and
+        length_affinity steers long prompts away — without removing it
+        from the pool. The HealthMonitor sets this from the measured
+        degradation and resets it to 1.0 on recovery."""
+        self.health[i] = min(max(float(health), 1e-3), 1.0)
+
+    def _eff_speed(self, j: int) -> float:
+        return self.speeds[j] * self.health[j]
 
     def requeue(self, problems: Sequence[Any],
                 now: Optional[float] = None) -> None:
@@ -826,7 +1152,7 @@ class PoolRouter:
         eng = self.engines[j]
         act = eng._host_active
         rem = int((eng.ec.max_len - 1 - eng._host_ncached[act]).sum())
-        return rem / max(self.speeds[j], 1e-9)
+        return rem / max(self._eff_speed(j), 1e-9)
 
     def _draw(self) -> Optional[Any]:
         if self.pending:
@@ -877,10 +1203,10 @@ class PoolRouter:
         if not self.pending:
             return None
         lens = [len(p.prompt_ids) for p in self.pending]
-        live = [s for s, ok in zip(self.speeds, self.alive) if ok] \
-            or self.speeds
+        eff = [self._eff_speed(j) for j in range(len(self.engines))]
+        live = [s for s, ok in zip(eff, self.alive) if ok] or eff
         mean_speed = sum(live) / max(len(live), 1)
-        if self.speeds[i] >= mean_speed:
+        if eff[i] >= mean_speed:
             # ties break toward the earliest pending prompt (FIFO within
             # equal lengths) so routing stays deterministic
             k = max(range(len(lens)), key=lambda j: (lens[j], -j))
@@ -904,9 +1230,240 @@ class PoolRouter:
             "requeue_latency_max": float(np.max(lat)) if lat else 0.0,
             "engines": [
                 {"assigned": a, "prompt_tokens": t, "declined": d,
-                 "alive": ok}
-                for a, t, d, ok in zip(self.assigned, self.assigned_tokens,
-                                       self.declined, self.alive)],
+                 "alive": ok, "health": h}
+                for a, t, d, ok, h in zip(self.assigned,
+                                          self.assigned_tokens,
+                                          self.declined, self.alive,
+                                          self.health)],
+        }
+
+
+# ---------------------------------------------------------------------------
+# health monitor (DESIGN.md §10 gray-failure watchdog)
+# ---------------------------------------------------------------------------
+
+class HealthMonitor:
+    """Gray-failure watchdog over an actor pool (DESIGN.md §10). Crashes
+    announce themselves (the fault handler calls `fail`); gray failures
+    don't — a wedged engine keeps `running=True` and simply stops
+    heartbeating, a degraded chip keeps completing ticks but slower. The
+    monitor is a periodic observer stage that reads only what the stages
+    already record (`last_tick_at` heartbeats, `ewma_tick_cost` progress)
+    and routes every mitigation through existing machinery:
+
+      hang       `now - last_tick_at` exceeds the per-engine deadline
+                 `max(hang_grace, hang_factor * EWMA heartbeat gap)`
+                 (preemption windows extend the deadline — a scheduled
+                 offline engine is not a hang). Escalation: `on_hang`
+                 runs the §8 fail/salvage/requeue path, exactly as if the
+                 wedged process had been killed by an operator.
+      straggler  speed-normalized progress `ewma_tick_cost * speed_i`
+                 exceeds `straggler_factor` x the pool minimum for
+                 `straggler_patience` consecutive sweeps. step_cost is
+                 load-independent in the linear-utilization region, so
+                 declared-slow engines normalize to the same statistic as
+                 fast ones and never false-positive; a demoted engine
+                 gets `PoolRouter.set_health(i, measured ratio)` — it
+                 keeps decoding, the router just stops feeding it long
+                 work — and is restored the first sweep it looks healthy.
+      quarantine salvaged prompts carry a failure-attribution counter;
+                 a prompt whose count crosses `quarantine_after` is
+                 withheld from requeue (returned to the caller for
+                 terminal accounting) instead of wedging engine after
+                 engine. Attribution is per-prompt, not per-cause: a
+                 prompt unlucky enough to sit on `quarantine_after`
+                 genuinely-crashing engines is over-quarantined — the
+                 blast-radius tradeoff is documented, counted, and
+                 surfaced, never silent.
+
+    The monitor reschedules itself only while some watched stage is
+    `running and not failed` (a hung stage stays running, so it stays
+    watched); `kick()` re-arms it when the pool comes back."""
+
+    def __init__(self, loop: EventLoop, actors: Sequence[ActorStage], *,
+                 router: Optional[PoolRouter] = None,
+                 speeds: Optional[Sequence[float]] = None,
+                 interval: float = 20.0,
+                 hang_grace: float = 120.0, hang_factor: float = 8.0,
+                 straggler_factor: float = 2.5,
+                 straggler_patience: int = 2,
+                 quarantine_after: int = 3,
+                 on_hang: Optional[Callable[[int, float], None]] = None):
+        self.loop, self.actors = loop, list(actors)
+        self.router = router
+        self.speeds = ([float(s) for s in speeds] if speeds is not None
+                       else [1.0] * len(self.actors))
+        self.interval = float(interval)
+        self.hang_grace = float(hang_grace)
+        self.hang_factor = float(hang_factor)
+        self.straggler_factor = float(straggler_factor)
+        self.straggler_patience = int(straggler_patience)
+        self.quarantine_after = int(quarantine_after)
+        self.on_hang = on_hang
+        n = len(self.actors)
+        self._hb_seen: List[Optional[float]] = [None] * n
+        self._watch_since: List[float] = [0.0] * n
+        self._gap_ewma: List[Optional[float]] = [None] * n
+        self._slow_streak: List[int] = [0] * n
+        self._demoted: List[bool] = [False] * n
+        self._armed = False
+        # accounting (read by pipeline stats / benches / tests)
+        self.sweeps = 0
+        self.hangs_detected: List[Tuple[int, float, float]] = []
+        #   (engine, detected_at, latency since last heartbeat)
+        self.stragglers_demoted = 0
+        self.stragglers_restored = 0
+        self.prompts_quarantined = 0
+        self.quarantined: List[Any] = []
+
+    _GAP_ALPHA = 0.25
+
+    # ---- lifecycle -----------------------------------------------------
+    def watch_engine(self, speed: float = 1.0) -> None:
+        """Track an engine appended to the pool (elastic join)."""
+        self.speeds.append(float(speed))
+        self._hb_seen.append(None)
+        self._watch_since.append(self.loop.now)
+        self._gap_ewma.append(None)
+        self._slow_streak.append(0)
+        self._demoted.append(False)
+
+    def start(self, t: float) -> None:
+        if not self._armed:
+            self._armed = True
+            for i in range(len(self.actors)):
+                self._watch_since[i] = t
+            self.loop.post(t + self.interval, self._sweep)
+
+    def kick(self, now: float) -> None:
+        """Re-arm after the pool went quiet (e.g. every engine was down
+        and one restored): monitoring resumes with fresh deadlines."""
+        if self._armed:
+            return
+        if any(a.running and not a.failed for a in self.actors):
+            self._armed = True
+            for i, a in enumerate(self.actors):
+                self._watch_since[i] = now
+            self.loop.post(now + self.interval, self._sweep)
+
+    def notice_restore(self, i: int, now: float) -> None:
+        """Reset engine `i`'s hang clock on restore: its last heartbeat
+        predates the outage, so without this a long `restart_after` would
+        read as an instant re-hang."""
+        self._hb_seen[i] = None
+        self._gap_ewma[i] = None
+        self._watch_since[i] = now
+        self._slow_streak[i] = 0
+        self._demoted[i] = False   # router health was reset by the caller
+        self.kick(now)
+
+    # ---- the periodic sweep -------------------------------------------
+    def _sweep(self, now: float) -> None:
+        self.sweeps += 1
+        self._check_hangs(now)
+        self._check_stragglers(now)
+        if any(a.running and not a.failed for a in self.actors):
+            self.loop.post(now + self.interval, self._sweep)
+        else:
+            # nothing left to watch: disarm so a dead pool drains the
+            # loop instead of spinning to max_events. `kick()` re-arms.
+            self._armed = False
+
+    def _deadline(self, i: int) -> float:
+        gap = self._gap_ewma[i]
+        if gap is None:
+            return self.hang_grace
+        return max(self.hang_grace, self.hang_factor * gap)
+
+    def _check_hangs(self, now: float) -> None:
+        for i, a in enumerate(self.actors):
+            if not a.running or a.failed:
+                self._hb_seen[i] = None
+                continue
+            hb = a.last_tick_at
+            if hb is not None and hb != self._hb_seen[i]:
+                if self._hb_seen[i] is not None and hb > self._hb_seen[i]:
+                    gap = hb - self._hb_seen[i]
+                    self._gap_ewma[i] = gap if self._gap_ewma[i] is None \
+                        else (self._GAP_ALPHA * gap
+                              + (1 - self._GAP_ALPHA) * self._gap_ewma[i])
+                self._hb_seen[i] = hb
+            # a scheduled preemption window is not a hang: while inside
+            # one (read-only scan — no state change on the healthy path)
+            # the heartbeat clock effectively restarts at the window end
+            base = max((hb if hb is not None else self._watch_since[i]),
+                       self._watch_since[i])
+            for s, e in a._preempt:
+                if s <= base:
+                    base = max(base, e)
+            if now - base > self._deadline(i):
+                self.hangs_detected.append((i, now, now - base))
+                if self.on_hang is not None:
+                    self.on_hang(i, now)
+                self._hb_seen[i] = None
+                self._gap_ewma[i] = None
+                self._watch_since[i] = now
+
+    def _check_stragglers(self, now: float) -> None:
+        if self.router is None:
+            return
+        norm: Dict[int, float] = {}
+        for i, a in enumerate(self.actors):
+            if a.failed or a.ewma_tick_cost is None:
+                continue
+            norm[i] = a.ewma_tick_cost * self.speeds[i]
+        if len(norm) < 2:
+            return   # no pool baseline to compare against
+        floor = min(norm.values())
+        if floor <= 0.0:
+            return
+        for i, v in norm.items():
+            if v > self.straggler_factor * floor:
+                self._slow_streak[i] += 1
+                if self._slow_streak[i] >= self.straggler_patience:
+                    health = max(floor / v, 0.05)
+                    self.router.set_health(i, health)
+                    if not self._demoted[i]:
+                        self._demoted[i] = True
+                        self.stragglers_demoted += 1
+            else:
+                self._slow_streak[i] = 0
+                if self._demoted[i]:
+                    self._demoted[i] = False
+                    self.router.set_health(i, 1.0)
+                    self.stragglers_restored += 1
+
+    # ---- quarantine attribution ---------------------------------------
+    def attribute_failure(self, salvaged: Sequence[Any]
+                          ) -> Tuple[List[Any], List[Any]]:
+        """Charge one failure attribution to each salvaged prompt and
+        split them into (requeue, quarantine): prompts whose attribution
+        count crossed `quarantine_after` are withheld from the pool (the
+        §10 poison-prompt circuit breaker). The caller requeues the first
+        list and surfaces the second as terminally failed."""
+        requeue, quarantine = [], []
+        for p in salvaged:
+            count = getattr(p, "_fail_count", 0) + 1
+            p._fail_count = count
+            if count >= self.quarantine_after:
+                quarantine.append(p)
+            else:
+                requeue.append(p)
+        self.prompts_quarantined += len(quarantine)
+        self.quarantined.extend(quarantine)
+        return requeue, quarantine
+
+    def stats(self) -> Dict[str, Any]:
+        return {
+            "sweeps": self.sweeps,
+            "hangs_detected": len(self.hangs_detected),
+            "hang_detect_latency": [lat for _, _, lat in
+                                    self.hangs_detected],
+            "stragglers_demoted": self.stragglers_demoted,
+            "stragglers_restored": self.stragglers_restored,
+            "prompts_quarantined": self.prompts_quarantined,
+            "health": (list(self.router.health)
+                       if self.router is not None else []),
         }
 
 
@@ -1005,11 +1562,21 @@ class TrainerStage:
 
     When `ckpt_dir` is given, the stall is no longer just a pause: each
     checkpoint step atomically persists the full TrainState to
-    `<ckpt_dir>/trainer_latest.npz`, and `crash`/`restore` implement the
-    crash-restart path of DESIGN.md §8 — a restore reloads
+    `<ckpt_dir>/trainer_latest.npz` plus a rotated, checksummed
+    `trainer_step_<v>.npz` (last `ckpt_keep` kept), and `crash`/`restore`
+    implement the crash-restart path of DESIGN.md §8 — a restore reloads
     params + optimizer moments + version from the last durable
     checkpoint, so the next optimizer step is bit-identical to the one
-    an uninterrupted run (from that checkpoint) would take."""
+    an uninterrupted run (from that checkpoint) would take.
+
+    Numerical robustness (DESIGN.md §10): when the wrapped trainer runs
+    with its fused non-finite guard, a poisoned step is skipped *inside*
+    the jitted step (state/version untouched) and counted here; the
+    optional EWMA loss-spike detector (`loss_spike_factor` > 0) flags
+    silently diverging steps the same way; `bad_step_rollback`
+    consecutive bad steps trigger an automatic restore from the newest
+    INTACT checkpoint — corrupt/truncated files are skipped via the
+    content checksum (`checkpoint.load` verifies it)."""
 
     def __init__(self, loop: EventLoop, trainer, *, queue=None,
                  batch_size: int = 0,
@@ -1019,7 +1586,9 @@ class TrainerStage:
                  broadcaster: Optional["WeightBroadcaster"] = None,
                  update_every: int = 1, group_baseline: bool = False,
                  ckpt_every: int = 0, ckpt_pause: float = 0.0,
-                 ckpt_dir: Optional[str] = None,
+                 ckpt_dir: Optional[str] = None, ckpt_keep: int = 3,
+                 bad_step_rollback: int = 3,
+                 loss_spike_factor: float = 0.0,
                  samples_per_step: Optional[int] = None,
                  on_free: Optional[Callable[[float], None]] = None):
         self.loop, self.trainer = loop, trainer
@@ -1039,6 +1608,7 @@ class TrainerStage:
         self._inbox: deque = deque()   # (rollouts, raw_reward, avail, on_done)
         # crash-restart checkpointing (DESIGN.md §8)
         self.ckpt_dir = ckpt_dir
+        self.ckpt_keep = max(int(ckpt_keep), 1)
         self.ckpt_path: Optional[str] = None
         self.ckpts_saved = 0
         self.last_ckpt_version = 0
@@ -1048,12 +1618,75 @@ class TrainerStage:
         self.steps_lost = 0
         self._epoch = 0
         self._prestep_state = None
+        self._rotated: List[str] = []   # rotated ckpt paths, oldest first
+        # numerical robustness (DESIGN.md §10)
+        self.bad_step_rollback = int(bad_step_rollback)
+        self.loss_spike_factor = float(loss_spike_factor)
+        self.bad_steps = 0             # guard skips + divergence flags
+        self.divergences = 0           # loss-spike detector hits alone
+        self.consecutive_bad = 0
+        self.rollbacks = 0
+        self.ckpts_corrupt = 0         # skipped by the intact-fallback
+        self._poison_pending = 0       # nan_step fault injection counter
+        self._loss_ewma: Optional[float] = None
         if ckpt_dir is not None:
             # version-0 seed checkpoint: a crash before the first periodic
             # save must still have something durable to restore from
-            self.ckpt_path = self.trainer.save(
-                os.path.join(ckpt_dir, "trainer_latest"))
-            self.ckpts_saved += 1
+            self.ckpt_path = self._save_ckpt(0)
+
+    _LOSS_ALPHA = 0.2                  # loss-spike EWMA smoothing
+
+    # ---- checkpoint rotation (DESIGN.md §10) --------------------------
+    def _save_ckpt(self, version: int) -> str:
+        """Persist the TrainState to `trainer_latest.npz` AND a rotated
+        `trainer_step_<version>.npz`, keeping the newest `ckpt_keep`
+        rotated files — the NaN-rollback path always has more than one
+        restore target, so one corrupt/truncated file cannot strand it."""
+        rotated = self.trainer.save(
+            os.path.join(self.ckpt_dir, f"trainer_step_{version:06d}"))
+        if rotated in self._rotated:    # re-save of the same version
+            self._rotated.remove(rotated)
+        self._rotated.append(rotated)
+        while len(self._rotated) > self.ckpt_keep:
+            old = self._rotated.pop(0)
+            try:
+                os.remove(old)
+            except OSError:
+                pass
+        path = self.trainer.save(
+            os.path.join(self.ckpt_dir, "trainer_latest"))
+        self.ckpts_saved += 1
+        return path
+
+    def restore_newest_intact(self) -> Optional[str]:
+        """Restore the TrainState from the newest checkpoint that passes
+        integrity verification (`trainer_latest` first, then the rotated
+        files newest-to-oldest). Corrupt, truncated or unreadable files
+        are counted (`ckpts_corrupt`) and skipped. Returns the path
+        restored from, or None when no intact checkpoint exists (the
+        state is left untouched)."""
+        from repro.checkpoint.checkpoint import CheckpointError
+        seen = set()
+        candidates = []
+        for p in ([self.ckpt_path] if self.ckpt_path else []) + \
+                list(reversed(self._rotated)):
+            if p not in seen:
+                seen.add(p)
+                candidates.append(p)
+        for path in candidates:
+            try:
+                self.trainer.restore(path)
+                return path
+            except CheckpointError:
+                self.ckpts_corrupt += 1
+        return None
+
+    # ---- nan_step fault injection (DESIGN.md §10) ---------------------
+    def poison_steps(self, count: int = 1) -> None:
+        """The next `count` optimizer steps produce non-finite gradients
+        (injected inside the jitted step so the fused guard is exercised
+        end to end)."""
+        self._poison_pending += max(int(count), 0)
 
     def inbox_depth(self) -> int:
         """Batches owned by the trainer: waiting in the inbox + in step."""
@@ -1101,13 +1734,42 @@ class TrainerStage:
         # host batch goes straight in: the trainer stages it with one
         # jitted donated transfer; returned metrics are device-resident
         # and sync only when the log entry below reads them
-        metrics = self.trainer.step(batch)
+        if self._poison_pending > 0:
+            self._poison_pending -= 1
+            metrics = self.trainer.step(batch, poison=True)
+        else:
+            metrics = self.trainer.step(batch)
+        # §10 bad-step policy: a non-finite step was already dropped
+        # inside the jitted step (skip-and-count — state and version are
+        # untouched); the optional loss-spike detector flags silent
+        # divergence. Either way the step consumed its batch and its
+        # wall-time, and `consecutive_bad` arms the rollback.
+        bad = bool(getattr(self.trainer, "guard", False)) \
+            and self.trainer.last_nonfinite()
+        if not bad and self.loss_spike_factor > 0.0:
+            loss = (metrics.peek("loss") if hasattr(metrics, "peek")
+                    else float(metrics["loss"]))
+            if self._loss_ewma is not None and \
+                    abs(loss) > self.loss_spike_factor * \
+                    max(abs(self._loss_ewma), 1e-8):
+                bad = True
+                self.divergences += 1
+            else:
+                self._loss_ewma = loss if self._loss_ewma is None else (
+                    self._LOSS_ALPHA * loss
+                    + (1.0 - self._LOSS_ALPHA) * self._loss_ewma)
+        if bad:
+            self.bad_steps += 1
+            self.consecutive_bad += 1
+        else:
+            self.consecutive_bad = 0
         n_tokens = sum(r.length for r in rollouts)
         done = start + self.train_time(n_tokens)
         version = self.trainer.version
         max_lag, mean_lag = lag_stats(rollouts, version - 1)
         stall = 0.0
-        do_ckpt = bool(self.ckpt_every and version % self.ckpt_every == 0)
+        do_ckpt = bool(self.ckpt_every and not bad
+                       and version % self.ckpt_every == 0)
         if do_ckpt:
             stall = self.ckpt_pause
             done += stall
@@ -1124,6 +1786,7 @@ class TrainerStage:
             "fill": stats["fill"],
             "queue_depth": queue_depth,
             "stall": stall,
+            "bad_step": float(bad),
             **metrics,
         })
 
@@ -1137,13 +1800,23 @@ class TrainerStage:
             # produced it completes: a crash mid-step loses both the step
             # and its would-be checkpoint (exactly a real crash's window)
             if do_ckpt and self.ckpt_dir is not None:
-                self.ckpt_path = self.trainer.save(
-                    os.path.join(self.ckpt_dir, "trainer_latest"))
-                self.ckpts_saved += 1
+                self.ckpt_path = self._save_ckpt(version)
                 self.last_ckpt_version = version
-            if self.broadcaster is not None and \
+            # a bad step never publishes: its version did not advance,
+            # and re-broadcasting the previous weights would only burn
+            # interconnect and pause decode for nothing
+            if not bad and self.broadcaster is not None and \
                     version % self.update_every == 0:
                 self.broadcaster.publish(self.trainer.params, version, t)
+            if bad and self.ckpt_dir is not None \
+                    and self.bad_step_rollback > 0 \
+                    and self.consecutive_bad >= self.bad_step_rollback:
+                # divergence circuit breaker: rewind to the newest intact
+                # checkpoint (corrupt files are skipped) and start clean
+                if self.restore_newest_intact() is not None:
+                    self.rollbacks += 1
+                    self.consecutive_bad = 0
+                    self.free_at = max(self.free_at, t + self.ckpt_pause)
             if on_done is not None:
                 on_done(t)
             self.kick(t)
@@ -1188,7 +1861,10 @@ class TrainerStage:
         self.recoveries += 1
         self.free_at = max(self.free_at, now)
         if self.ckpt_path is not None:
-            self.trainer.restore(self.ckpt_path)
+            # newest-intact fallback (DESIGN.md §10): `trainer_latest`
+            # first — bit-identical to the plain restart when it is
+            # healthy — then the rotated files, newest to oldest
+            self.restore_newest_intact()
         self.kick(now)
         return self.trainer.version
 
@@ -1240,32 +1916,55 @@ class WeightBroadcaster:
         self.published = 0
         self.bytes_published = 0
         self.chunks_lost = 0
+        self.chunks_corrupt = 0
         self.retransmit_wait = 0.0
         self.deliveries_skipped = 0
 
+    def _backoff(self, t_chunk: float, attempt: int) -> float:
+        backoff = t_chunk * min(
+            self.retransmit_backoff_chunks * (2.0 ** attempt),
+            self.backoff_cap_chunks)
+        self.retransmit_wait += backoff
+        return backoff
+
     def _lossy_arrivals(self, engine: int, version: int, base: float,
-                        t_chunk: float) -> List[float]:
+                        t_chunk: float, good: Sequence[int]
+                        ) -> Tuple[List[float], List[Optional[int]]]:
         """Serialized chunk cursor over a lossy link: chunk k cannot start
         until chunk k-1 landed; each lost transmission burns its slot plus
-        a backoff before the retry."""
-        arrivals = []
+        a backoff before the retry. Corrupt transmissions (DESIGN.md §10)
+        *do* arrive — with a damaged integrity token the engine-side gate
+        will reject — then retransmit on the same backoff schedule as a
+        loss, so both gray kinds share one recovery path."""
+        arrivals: List[float] = []
+        tokens: List[Optional[int]] = []
         cursor = base
         for k in range(self.n_chunks):
             attempt = 0
             while True:
                 cursor += t_chunk
-                if attempt >= _MAX_XMIT_ATTEMPTS or not self.fault_plan.chunk_lost(
-                        engine, version, k, attempt, cursor):
+                if attempt >= _MAX_XMIT_ATTEMPTS:
                     break
-                self.chunks_lost += 1
-                backoff = t_chunk * min(
-                    self.retransmit_backoff_chunks * (2.0 ** attempt),
-                    self.backoff_cap_chunks)
-                self.retransmit_wait += backoff
-                cursor += backoff
-                attempt += 1
+                if self.fault_plan.chunk_lost(engine, version, k, attempt,
+                                              cursor):
+                    self.chunks_lost += 1
+                    cursor += self._backoff(t_chunk, attempt)
+                    attempt += 1
+                    continue
+                if k < len(good) and self.fault_plan.chunk_corrupted(
+                        engine, version, k, attempt, cursor):
+                    # delivered but damaged: the receiver sees the chunk,
+                    # its checksum mismatches, and the sender retransmits
+                    self.chunks_corrupt += 1
+                    arrivals.append(cursor)
+                    tokens.append(good[k] ^ 0x5AD0BAD)
+                    cursor += self._backoff(t_chunk, attempt)
+                    attempt += 1
+                    continue
+                break
             arrivals.append(cursor)
-        return arrivals
+            tokens.append(good[k] if k < len(good) else None)
+        return arrivals, tokens
 
     def publish(self, params, version: int, now: float) -> None:
         self.published += 1
@@ -1286,17 +1985,31 @@ class WeightBroadcaster:
             return
         t_chunk = t_full / self.n_chunks
         lossy = self.fault_plan is not None and self.fault_plan.has_link_faults()
+        # integrity gate (DESIGN.md §10): per-chunk checksum tokens +
+        # whole-publication digest, computed sender-side from the same
+        # deterministic span table the engines derive independently
+        import jax
+        leaves = jax.tree.leaves(params)
+        sizes = span_bytes(leaves, chunk_spans(leaves, self.n_chunks))
+        good = [chunk_token(version, k, sizes[k])
+                for k in range(len(sizes))]
+        digest = stream_digest(good)
         for j, (i, a) in enumerate(targets):
             base = now + j * t_full
             if lossy:
-                arrivals = self._lossy_arrivals(i, version, base, t_chunk)
+                arrivals, tokens = self._lossy_arrivals(
+                    i, version, base, t_chunk, good)
             else:
                 # keep the exact pre-fault arithmetic on healthy links so
                 # no-fault runs stay bit-identical to earlier behavior
                 arrivals = [base + (k + 1) * t_chunk
                             for k in range(self.n_chunks)]
+                tokens = [good[k] if k < len(good) else None
+                          for k in range(self.n_chunks)]
             a.deliver_stream(params, version, arrivals,
-                             install_pause=self.hw.bcast_install_flash)
+                             install_pause=self.hw.bcast_install_flash,
+                             tokens=tokens, n_chunks=self.n_chunks,
+                             digest=digest)
 
     def stats(self) -> Dict[str, Any]:
         per_engine = []
@@ -1306,6 +2019,8 @@ class WeightBroadcaster:
                 "updates_applied": a.updates_applied,
                 "streams_completed": a.streams_completed,
                 "streams_aborted": a.streams_aborted,
+                "wchunks_rejected": getattr(a.engine, "wchunks_rejected", 0),
+                "wstreams_torn": getattr(a.engine, "wstreams_torn", 0),
                 "pause_total": a.pause_total,
                 "pause_per_update": (a.pause_total / a.updates_applied
                                      if a.updates_applied else 0.0),
@@ -1315,6 +2030,7 @@ class WeightBroadcaster:
             "published": self.published,
             "bytes_published": self.bytes_published,
             "chunks_lost": self.chunks_lost,
+            "chunks_corrupt": self.chunks_corrupt,
             "retransmit_wait": self.retransmit_wait,
             "deliveries_skipped": self.deliveries_skipped,
             "engines": per_engine,

@@ -28,10 +28,10 @@ from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.configs.base import ModelConfig
+from repro.configs.base import HealthConfig, ModelConfig
 from repro.core.events import (
-    ActorStage, EventLoop, PoolRouter, PreprocessStage, TrainerStage,
-    WeightBroadcaster, apply_group_baseline, lag_stats,
+    ActorStage, EventLoop, HealthMonitor, PoolRouter, PreprocessStage,
+    TrainerStage, WeightBroadcaster, apply_group_baseline, lag_stats,
 )
 from repro.core.queues import SampleQueue
 from repro.core.rollout import EngineConfig, GenerationEngine
@@ -79,6 +79,12 @@ class PipelineConfig:
     # to <ckpt_dir>/trainer_latest.npz and trainer crash-restart restores
     # from it (DESIGN.md §8)
     ckpt_dir: Optional[str] = None
+    # --- gray-failure self-healing (DESIGN.md §10) --------------------
+    # HealthMonitor watchdog (hang/straggler detection + quarantine) and
+    # the trainer's NaN-skip / loss-spike / rollback policy. Enabled by
+    # default: with no faults injected the run is bit-identical to a
+    # monitor-less one (the watchdog only observes on the healthy path).
+    health: HealthConfig = dataclasses.field(default_factory=HealthConfig)
 
 
 def _batch_to_device(batch: Dict[str, np.ndarray]):
@@ -125,7 +131,15 @@ class PipelineRL:
             raise ValueError(f"engine_speeds has {len(speeds)} entries "
                              f"for n_engines={n_eng}")
         self.engine_speeds = speeds
-        self.router = PoolRouter(prompt_source or task.sample,
+        # poison-prompt faults mark the Nth draw from the shared source
+        # (§10): the wrapper stamps `_poison` on exactly those ordinals,
+        # so whichever engine admits the prompt deterministically wedges
+        self._poison_ordinals = (set(fault_plan.poison_ordinals())
+                                 if fault_plan is not None else set())
+        src = prompt_source or task.sample
+        if self._poison_ordinals:
+            src = self._wrap_poison(src)
+        self.router = PoolRouter(src,
                                  policy=pc.router,
                                  lookahead=pc.router_lookahead,
                                  slack=pc.router_slack,
@@ -146,7 +160,9 @@ class PipelineRL:
             pack_rows=pc.pack_rows, pack_seq=pc.pack_seq, log=self.log,
             update_every=pc.update_every, group_baseline=pc.group_baseline,
             ckpt_every=pc.ckpt_every, ckpt_pause=pc.ckpt_pause,
-            ckpt_dir=pc.ckpt_dir,
+            ckpt_dir=pc.ckpt_dir, ckpt_keep=pc.health.ckpt_keep,
+            bad_step_rollback=pc.health.bad_step_rollback,
+            loss_spike_factor=pc.health.loss_spike_factor,
             samples_per_step=pc.batch_size)
         self.pre_stage = None
         if preprocessor is not None:
@@ -170,8 +186,38 @@ class PipelineRL:
             hw, self.actors, mode=pc.broadcast, n_chunks=pc.broadcast_chunks,
             fault_plan=fault_plan)
         self.trainer_stage.broadcaster = self.broadcaster
+        # gray-failure watchdog (DESIGN.md §10): hang/straggler detection
+        # over the pool, escalating through the §8 fail/salvage/requeue
+        # machinery and quarantining repeat-offender prompts
+        self.monitor: Optional[HealthMonitor] = None
+        self._hang_restart: Dict[int, List[float]] = {}
+        hc = pc.health
+        if hc.enabled:
+            self.monitor = HealthMonitor(
+                self.loop, self.actors, router=self.router, speeds=speeds,
+                interval=hc.interval, hang_grace=hc.hang_grace,
+                hang_factor=hc.hang_factor,
+                straggler_factor=hc.straggler_factor,
+                straggler_patience=hc.straggler_patience,
+                quarantine_after=hc.quarantine_after,
+                on_hang=self._on_hang)
         if fault_plan is not None:
             self._schedule_faults(fault_plan)
+
+    def _wrap_poison(self, source: Callable) -> Callable:
+        """Count draws from the shared prompt source and stamp `_poison`
+        on the ordinals the fault plan names."""
+        state = {"n": 0}
+
+        def draw():
+            p = source()
+            if p is not None:
+                if state["n"] in self._poison_ordinals:
+                    p._poison = True  # type: ignore[attr-defined]
+                state["n"] += 1
+            return p
+
+        return draw
 
     def _make_actor(self, i: int, eng: GenerationEngine,
                     speed: float) -> ActorStage:
@@ -181,12 +227,21 @@ class PipelineRL:
         capacity is attached in practice."""
         c = self._chips_per_engine
         m = self.hw.scaled(speed)
-        return ActorStage(
+        a = ActorStage(
             self.loop, eng, task=self.task, name=f"actor{i}",
             step_cost=lambda h: m.step_cost(h / max(c, 1e-9)),
             prefill_cost=lambda toks, inv: m.prefill_time(toks, max(c, 1)),
             page_cost=m.page_touch_time,
             deliver=self._deliver, recompute_kv=self.pc.recompute_kv)
+        plan = self.fault_plan
+        if plan is not None and plan.has_slowdown_faults():
+            # gray degradation (§10): the plan's windows scale this
+            # engine's decode cost; outside a window the factor is 1.0
+            # (bitwise no-op for finite costs)
+            a.cost_scale = lambda t, i=i: plan.slowdown_factor(i, t)
+        if self._poison_ordinals:
+            a.poison_check = True
+        return a
 
     # ----- compatibility surface ---------------------------------------
     @property
@@ -245,7 +300,33 @@ class PipelineRL:
                                    self._restore_trainer)
             elif f.kind == "preprocess_fail":
                 self.loop.post(f.at, self._fail_preprocess)
-            elif f.kind != "link_degrade":
+            elif f.kind == "engine_hang":
+                i = int(f.engine or 0)
+                if not 0 <= i < n_eng:
+                    raise ValueError(
+                        f"fault targets engine {i} of a {n_eng}-engine pool")
+                self.loop.post(f.at, lambda t, i=i: self._hang_engine(i, t))
+                if f.restart_after is not None:
+                    # consumed at *detection* (the watchdog finds the hang;
+                    # nothing fires at a wall-clock restore time — a hang
+                    # has no self-announcing crash event to anchor one)
+                    self._hang_restart.setdefault(i, []).append(
+                        float(f.restart_after))
+            elif f.kind == "engine_slowdown":
+                i = int(f.engine or 0)
+                if not 0 <= i < n_eng:
+                    raise ValueError(
+                        f"fault targets engine {i} of a {n_eng}-engine pool")
+                # no event: the actor's cost_scale closure consults the
+                # plan's windows per tick (installed in _make_actor)
+            elif f.kind == "nan_step":
+                self.loop.post(
+                    f.at, lambda t, n=max(int(f.count), 1):
+                    self.trainer_stage.poison_steps(n))
+            elif f.kind not in ("link_degrade", "chunk_corrupt",
+                                "poison_prompt"):
+                # link/corruption faults are consulted per transmission by
+                # the broadcaster; poison prompts by the source wrapper
                 raise ValueError(f"unknown fault kind {f.kind!r}")
 
     def _fail_engine(self, i: int, t: float) -> None:
@@ -259,15 +340,68 @@ class PipelineRL:
             return
         salvaged = a.fail(t)
         self.router.set_alive(i, False)
-        if salvaged:
-            self.router.requeue(salvaged, now=t)
+        n_quar = self._requeue_salvaged(salvaged, t)
         for j, other in enumerate(self.actors):
             if j != i and not other.failed:
                 other.start(t)
         self.fault_log.append({
             "kind": "engine_crash", "engine": i, "at": t,
             "prompts_salvaged": len(salvaged),
+            "prompts_quarantined": n_quar,
             "rollouts_lost": a.rollouts_lost})
+
+    def _requeue_salvaged(self, salvaged, t: float) -> int:
+        """Route salvaged prompts back to the pool through the monitor's
+        failure attribution (§10): repeat offenders are quarantined —
+        surfaced in `pool_stats()` instead of crash-looping engine after
+        engine. Without a monitor everything requeues (§8 behavior).
+        Returns the number quarantined."""
+        if not salvaged:
+            return 0
+        if self.monitor is not None:
+            requeue, quarantine = self.monitor.attribute_failure(salvaged)
+        else:
+            requeue, quarantine = list(salvaged), []
+        if requeue:
+            self.router.requeue(requeue, now=t)
+        return len(quarantine)
+
+    def _hang_engine(self, i: int, t: float) -> None:
+        """Inject a gray hang: engine i wedges without crashing. Nothing
+        is salvaged here — only the HealthMonitor's missed-heartbeat
+        deadline can notice and escalate (`_on_hang`)."""
+        a = self.actors[i]
+        if a.failed or a.hung:
+            return
+        a.hang(t)
+        self.fault_log.append({"kind": "engine_hang", "engine": i, "at": t})
+
+    def _on_hang(self, i: int, t: float) -> None:
+        """Watchdog escalation: treat the wedged engine exactly like an
+        operator-killed process — fail/salvage, attribute the failure to
+        the stranded prompts (quarantining repeat offenders), requeue the
+        rest to survivors, and schedule a restart (the fault plan's
+        `restart_after` if it named one, else the health policy's
+        `hang_restart_after`)."""
+        a = self.actors[i]
+        if a.failed:
+            return
+        salvaged = a.fail(t)
+        self.router.set_alive(i, False)
+        n_quar = self._requeue_salvaged(salvaged, t)
+        for j, other in enumerate(self.actors):
+            if j != i and not other.failed:
+                other.start(t)
+        self.fault_log.append({
+            "kind": "engine_hang_detected", "engine": i, "at": t,
+            "prompts_salvaged": len(salvaged),
+            "prompts_quarantined": n_quar})
+        pending = self._hang_restart.get(i)
+        delay = (pending.pop(0) if pending
+                 else self.pc.health.hang_restart_after)
+        if delay is not None:
+            self.loop.post(t + float(delay),
+                           lambda tt, i=i: self.restore_engine(i, tt))
 
     def restore_engine(self, i: int, t: Optional[float] = None) -> None:
         """Bring a crashed engine back. Before re-admission it gets a
@@ -281,6 +415,9 @@ class PipelineRL:
         a.restore(t, params=self.trainer.params,
                   version=self.trainer.version)
         self.router.set_alive(i, True)
+        self.router.set_health(i, 1.0)   # fresh process, clean slate
+        if self.monitor is not None:
+            self.monitor.notice_restore(i, t)
         self.fault_log.append({
             "kind": "engine_restore", "engine": i, "at": t,
             "version": self.trainer.version, "downtime": a.downtime})
@@ -320,6 +457,9 @@ class PipelineRL:
         a = self._make_actor(idx, eng, speed)
         self.actors.append(a)
         self.broadcaster.actors.append(a)
+        if self.monitor is not None:
+            self.monitor.actors.append(a)
+            self.monitor.watch_engine(speed)
         # catch-up sync before admission: version stamps stay exact
         eng.set_weights(self.trainer.params, self.trainer.version,
                         recompute_kv=self.pc.recompute_kv)
@@ -366,18 +506,35 @@ class PipelineRL:
             })
         st["rollouts_lost"] = sum(a.rollouts_lost for a in self.actors)
         st["prompts_salvaged"] = sum(a.prompts_salvaged for a in self.actors)
+        # §10 zero-lost invariant: every salvaged prompt is either back in
+        # the pool or in the counted quarantine list, never dropped
+        st["prompts_quarantined"] = (self.monitor.prompts_quarantined
+                                     if self.monitor is not None else 0)
         st["trainer"] = {
             "crashes": self.trainer_stage.crashes,
             "recoveries": self.trainer_stage.recoveries,
             "steps_lost": self.trainer_stage.steps_lost,
             "ckpts_saved": self.trainer_stage.ckpts_saved,
             "last_ckpt_version": self.trainer_stage.last_ckpt_version,
+            # numerical robustness (DESIGN.md §10)
+            "bad_steps": self.trainer_stage.bad_steps,
+            "divergences": self.trainer_stage.divergences,
+            "rollbacks": self.trainer_stage.rollbacks,
+            "ckpts_corrupt": self.trainer_stage.ckpts_corrupt,
+            "nonfinite_steps": getattr(self.trainer, "nonfinite_steps", 0),
         }
         st["broadcast"] = {
             "chunks_lost": self.broadcaster.chunks_lost,
+            "chunks_corrupt": self.broadcaster.chunks_corrupt,
             "retransmit_wait": self.broadcaster.retransmit_wait,
             "deliveries_skipped": self.broadcaster.deliveries_skipped,
+            "wchunks_rejected": sum(getattr(e, "wchunks_rejected", 0)
+                                    for e in self.engines),
+            "wstreams_torn": sum(getattr(e, "wstreams_torn", 0)
+                                 for e in self.engines),
         }
+        if self.monitor is not None:
+            st["health"] = self.monitor.stats()
         st["fault_log"] = list(self.fault_log)
         return st
 
@@ -388,5 +545,7 @@ class PipelineRL:
         n = n_opt_steps or self.pc.n_opt_steps
         for a in self.actors:
             a.start(self.loop.now)
+        if self.monitor is not None:
+            self.monitor.start(self.loop.now)
         self.loop.run(until=lambda: self.trainer.version >= n)
         return self.log

@@ -329,6 +329,12 @@ class GenerationEngine:
         # streamed in-flight weight broadcast (DESIGN.md §7): shadow param
         # buffer filled chunk-by-chunk between decode steps
         self._wstream: Optional[Dict[str, Any]] = None
+        # §10 integrity gate accounting: damaged transmissions rejected
+        # by the per-chunk checksum, and assembled streams rejected by
+        # the pre-swap digest verify (both must stay 0 on healthy links)
+        self.wchunks_rejected = 0
+        self.wstreams_torn = 0
+        self.last_stream_installed = True
         if (jit_donor is not None and jit_donor.cfg == cfg
                 and jit_donor.ec == ec):
             self._step = jit_donor._step
@@ -379,38 +385,69 @@ class GenerationEngine:
                 self.state["cache"] = self._recompute(params, self.state)
 
     def begin_weight_stream(self, params, version: int, n_chunks: int = 8,
-                            recompute_kv: bool = False) -> List[int]:
+                            recompute_kv: bool = False,
+                            expect_digest: Optional[int] = None) -> List[int]:
         """Streamed in-flight broadcast (DESIGN.md §7): stage the new
         param tree into a shadow buffer chunk-by-chunk between decode
         steps via `stream_weight_chunk`; μ (and `self.version`) stay on
         the old weights until the final chunk lands, then pointer-swap —
         so per-token `weight_versions` stamps stay exact across the whole
         transfer. A second `begin` abandons the unfinished shadow buffer.
-        Returns the per-chunk byte sizes (for interconnect costing)."""
+        `expect_digest` arms the §10 integrity gate: the assembled stream
+        must reproduce it before the swap is allowed. Returns the
+        per-chunk byte sizes (for interconnect costing)."""
         from repro.core.events import chunk_spans, span_bytes
         leaves, treedef = jax.tree_util.tree_flatten(params)
         spans = chunk_spans(leaves, n_chunks)
+        sizes = span_bytes(leaves, spans)
         self._wstream = {
             "treedef": treedef, "leaves": leaves, "spans": spans,
-            "shadow": [None] * len(leaves), "next": 0, "version": version,
-            "recompute": recompute_kv,
+            "sizes": sizes, "shadow": [None] * len(leaves), "next": 0,
+            "version": version, "recompute": recompute_kv,
+            "expect": expect_digest, "tokens": [],
         }
-        return span_bytes(leaves, spans)
+        return sizes
 
-    def stream_weight_chunk(self) -> bool:
+    def stream_weight_chunk(self, token: Optional[int] = None) -> bool:
         """Install the next chunk into the shadow buffer; on the last
         chunk, assemble the tree and pointer-swap it in (returns True).
-        No-op (False) when no stream is active."""
+        No-op (False) when no stream is active.
+
+        Integrity gate (DESIGN.md §10): when the transmission carries a
+        checksum `token`, it must match the token this engine computes
+        from its own span table — a damaged chunk is rejected before it
+        touches the shadow buffer (`wchunks_rejected`) and the sender's
+        backoff machinery retransmits it. Before the pointer swap the
+        whole shadow buffer is verified (every span filled + accumulated
+        digest matches the publication digest), so a torn stream can
+        never install (`wstreams_torn`); `last_stream_installed` tells
+        the stage whether the final chunk actually swapped weights."""
+        from repro.core.events import chunk_token, stream_digest
         ws = self._wstream
         if ws is None:
             return False
-        lo, hi = ws["spans"][ws["next"]]
+        k = ws["next"]
+        if token is not None:
+            if token != chunk_token(ws["version"], k, ws["sizes"][k]):
+                self.wchunks_rejected += 1
+                return False
+        lo, hi = ws["spans"][k]
         ws["shadow"][lo:hi] = ws["leaves"][lo:hi]
+        ws["tokens"].append(chunk_token(ws["version"], k, ws["sizes"][k]))
         ws["next"] += 1
         if ws["next"] < len(ws["spans"]):
             return False
+        torn = any(x is None for x in ws["shadow"]) or (
+            ws["expect"] is not None
+            and stream_digest(ws["tokens"]) != ws["expect"])
+        if torn:
+            self.wstreams_torn += 1
+            self.last_stream_installed = False
+            self._wstream = None
+            return True
         params = jax.tree_util.tree_unflatten(ws["treedef"], ws["shadow"])
         version, recompute = ws["version"], ws["recompute"]
+        self.last_stream_installed = True
         self.set_weights(params, version, recompute_kv=recompute)
         return True
 
@@ -460,6 +497,32 @@ class GenerationEngine:
         out = list(self._deferred)
         self._deferred.clear()
         return out
+
+    def kill_slot(self, s: int) -> Optional[Problem]:
+        """Kill ONE live slot without crashing the engine (DESIGN.md §10
+        quarantine path): the slot's rollout-in-progress is abandoned
+        exactly as in `reset_slots` — tokens/KV left for reuse, pages
+        (shared refs included) returned — and its prompt is handed back
+        so the caller can quarantine or requeue it. Returns None for an
+        inactive slot."""
+        s = int(s)
+        if not self._host_active[s]:
+            return None
+        prob = self.problems[s]
+        self._host_active[s] = False
+        self._host_ncached[s] = 0
+        self._host_prompt_len[s] = 1
+        self.problems[s] = None
+        if self._paged:
+            self.tables.release_row(s)
+            self._bt_dirty = True
+            self._sync_tables()
+        self.state = dict(
+            self.state,
+            n_cached=self.state["n_cached"].at[s].set(0),
+            prompt_len=self.state["prompt_len"].at[s].set(1),
+            active=self.state["active"].at[s].set(False))
+        return prob
 
     # ----- paged-cache machinery (DESIGN.md §9) -------------------------
     @property

@@ -64,6 +64,8 @@ class Request:
     deadline: Optional[float] = None  # admission deadline (absolute)
     retries: int = 0
     shed: bool = False          # refused at the door (queue_limit)
+    quarantined: bool = False   # §10 circuit breaker tripped
+    fail_reason: Optional[str] = None
 
     @property
     def latency(self) -> Optional[float]:
@@ -126,6 +128,7 @@ class Server:
         self.done: List[Request] = []
         self.rejected: List[Request] = []
         self.shed: List[Request] = []
+        self.quarantined: List[Request] = []
         # per-request admission deadline + retry/backoff + load shedding
         self.deadline = deadline
         self.max_retries = int(max_retries)
@@ -203,6 +206,43 @@ class Server:
             self.engine.set_weights(params, version,
                                     recompute_kv=recompute_kv)
         return version
+
+    def quarantine(self, rid: int, reason: str = "poison") -> bool:
+        """Gray-failure circuit breaker (DESIGN.md §10): pull a request
+        out of service into a counted terminal state with a reason — a
+        prompt that repeatedly wedges whatever decodes it must stop
+        consuming capacity, but it must never be silently dropped (the
+        `requests_lost == 0` invariant covers quarantined requests). An
+        in-flight request's decode slot is reclaimed via the engine's
+        `kill_slot`; waiting/backoff-held requests are simply removed.
+        Returns False if `rid` is unknown or already terminal."""
+        now = self.clock
+        req = self.in_flight.pop(rid, None)
+        if req is not None:
+            for s, prob in enumerate(self.engine.problems):
+                if prob is not None and getattr(prob, "rid", None) == rid:
+                    self.engine.kill_slot(s)
+                    break
+        else:
+            for k, cand in enumerate(self.waiting):
+                if cand.rid == rid:
+                    req = cand
+                    del self.waiting[k]
+                    break
+            else:
+                for k, (_, _, cand) in enumerate(self._backoff):
+                    if cand.rid == rid:
+                        req = cand
+                        del self._backoff[k]
+                        heapq.heapify(self._backoff)
+                        break
+        if req is None:
+            return False
+        req.quarantined, req.rejected = True, True
+        req.fail_reason = reason
+        req.finished_at = now
+        self.quarantined.append(req)
+        return True
 
     # ---- serving loop ---------------------------------------------------
     def _reject(self, prob) -> None:
@@ -288,7 +328,8 @@ class Server:
                 if r.retries and r.latency is not None]
         accounted = (len(self.done) + len(self.in_flight)
                      + len(self.waiting) + len(self._backoff)
-                     + len(self.rejected) + len(self.shed))
+                     + len(self.rejected) + len(self.shed)
+                     + len(self.quarantined))
         return {
             "served": len(self.done),
             "in_flight": len(self.in_flight),
@@ -297,6 +338,7 @@ class Server:
             "requests_rejected": len(self.rejected),
             "requests_retried": self.requests_retried,
             "requests_shed": len(self.shed),
+            "requests_quarantined": len(self.quarantined),
             "deadline_misses": self.deadline_misses,
             "admissions_deferred": self.admissions_deferred,
             "free_pages": (self.engine.free_pages

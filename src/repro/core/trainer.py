@@ -67,11 +67,25 @@ def loss_fn(params, batch: Dict[str, jax.Array], cfg: ModelConfig,
 
 def train_step(state: TrainState, batch, cfg: ModelConfig, rl: RLConfig,
                adam: AdamConfig, microbatch: int = 1, lr_schedule=None,
+               guard: bool = False, poison=None,
                ) -> Tuple[TrainState, Dict[str, jax.Array]]:
     """One optimizer step. microbatch > 1 enables gradient accumulation:
     the global batch is split into `microbatch` chunks processed by a scan,
     dividing activation memory by the same factor (beyond-paper memory
-    optimization, see EXPERIMENTS.md §Perf)."""
+    optimization, see EXPERIMENTS.md §Perf).
+
+    guard=True arms the fused non-finite check (DESIGN.md §10): if the
+    global grad norm or the loss is non-finite, the whole update is
+    dropped *inside the jitted step* — params/opt/version keep their old
+    values via `lax.select`, so a poisoned batch can never write NaN into
+    the state — and `metrics["nonfinite"]` reports the skip. The check
+    rides on `grad_norm`, which `adam_update` already computes (any
+    non-finite gradient leaf makes the global norm non-finite), so the
+    healthy path runs the same math and `where(False, old, new)` returns
+    `new` bitwise: a guarded healthy run is bit-identical to an
+    unguarded one. `poison` (traced bool) replaces the gradients with
+    NaN — the §10 `nan_step` fault injection point, inside the step so
+    the guard is exercised end to end."""
     grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
     if microbatch <= 1:
         (_, metrics), grads = grad_fn(state.params, batch, cfg, rl)
@@ -97,20 +111,37 @@ def train_step(state: TrainState, batch, cfg: ModelConfig, rl: RLConfig,
             return (g_acc, m_acc), None
 
         (grads, metrics), _ = jax.lax.scan(acc, (zero_g, zero_m), mb)
+    if guard and poison is not None:
+        # fault injection (nan_step): a select, not an add — `g + nan*0`
+        # style arithmetic would flip -0.0 grads on the healthy path,
+        # while where(False, nan, g) returns g bitwise
+        pz = jnp.asarray(poison, bool)
+        grads = jax.tree.map(
+            lambda g: jnp.where(pz, jnp.full_like(g, jnp.nan), g), grads)
     lr = lr_schedule(state.opt.step) if lr_schedule is not None else None
     new_params, new_opt, gnorm = adam_update(state.params, grads, state.opt,
                                              adam, lr=lr)
     metrics["grad_norm"] = gnorm
     if lr is not None:
         metrics["lr"] = lr
+    if guard:
+        bad = ~(jnp.isfinite(gnorm) & jnp.isfinite(metrics["loss"]))
+        new_params = jax.tree.map(lambda o, n: jnp.where(bad, o, n),
+                                  state.params, new_params)
+        new_opt = jax.tree.map(lambda o, n: jnp.where(bad, o, n),
+                               state.opt, new_opt)
+        metrics["nonfinite"] = bad.astype(jnp.float32)
+        return TrainState(new_params, new_opt,
+                          state.version + jnp.where(bad, 0, 1)), metrics
     return TrainState(new_params, new_opt, state.version + 1), metrics
 
 
 def make_train_step(cfg: ModelConfig, rl: RLConfig, adam: AdamConfig,
                     donate: bool = True, microbatch: int = 1,
-                    lr_schedule=None):
+                    lr_schedule=None, guard: bool = False):
     fn = functools.partial(train_step, cfg=cfg, rl=rl, adam=adam,
-                           microbatch=microbatch, lr_schedule=lr_schedule)
+                           microbatch=microbatch, lr_schedule=lr_schedule,
+                           guard=guard)
     return jax.jit(fn, donate_argnums=(0,) if donate else ())
 
 
@@ -129,6 +160,14 @@ class LazyMetrics(Mapping):
                           for k, v in jax.device_get(self._dev).items()}
             self._dev = {}
         return self._host
+
+    def peek(self, k: str) -> float:
+        """Fetch ONE metric without materializing the record: a single
+        tiny scalar transfer, so per-step guard polling (DESIGN.md §10)
+        does not force the full batched sync the lazy design avoids."""
+        if self._host is not None:
+            return self._host[k]
+        return float(jax.device_get(self._dev[k]))
 
     def __getitem__(self, k: str) -> float:
         return self.fetch()[k]
@@ -154,13 +193,17 @@ class Trainer:
     current policy weights + version for in-flight updates."""
 
     def __init__(self, cfg: ModelConfig, params, rl: RLConfig = RLConfig(),
-                 adam: AdamConfig = AdamConfig(), lr_schedule=None):
+                 adam: AdamConfig = AdamConfig(), lr_schedule=None,
+                 guard: bool = True):
         self.cfg, self.rl, self.adam = cfg, rl, adam
         self.state = init_train_state(params)
+        self.guard = bool(guard)
+        self.nonfinite_steps = 0   # updates dropped by the in-step guard
         # no donation of the state: the generation engine aliases these
         # buffers between in-flight updates (the co-sim shares one device)
         self._step = make_train_step(cfg, rl, adam, donate=False,
-                                     lr_schedule=lr_schedule)
+                                     lr_schedule=lr_schedule,
+                                     guard=self.guard)
         # jitted staging: one dispatch moves the whole packed batch to the
         # device (vs one blocking transfer per field, like PR 1's `_admit`
         # killed the per-array admission copies). The staged copy is
@@ -179,18 +222,34 @@ class Trainer:
     def params(self):
         return self.state.params
 
-    def step(self, batch) -> LazyMetrics:
+    def step(self, batch, poison: bool = False) -> LazyMetrics:
         """One optimizer step. `batch` may be host numpy (the pack()
         output — staged on device in one jitted transfer) or already
         device-resident (used as-is). Returns a `LazyMetrics` view;
-        nothing syncs to host unless a metric value is actually read."""
+        nothing syncs to host unless a metric value is actually read.
+        `poison` (guard mode only) injects NaN gradients inside the step
+        — the §10 `nan_step` fault; the guard must catch it."""
         batch = {k: v for k, v in batch.items() if k not in _NON_MODEL_KEYS}
         if not all(isinstance(v, jax.Array) for v in batch.values()):
             batch = self._stage(batch)
-        self.state, metrics = self._step(self.state, batch)
+        if self.guard:
+            self.state, metrics = self._step(self.state, batch,
+                                             poison=poison)
+        else:
+            self.state, metrics = self._step(self.state, batch)
         m = LazyMetrics(metrics)
         self.history.append(m)
         return m
+
+    def last_nonfinite(self) -> bool:
+        """Guard verdict of the newest step — did the fused non-finite
+        check drop the update? One scalar `peek`, not a full sync."""
+        if not self.guard or not self.history:
+            return False
+        bad = self.history[-1].peek("nonfinite") > 0.0
+        if bad:
+            self.nonfinite_steps += 1
+        return bad
 
     # ---- crash-restart checkpointing (DESIGN.md §8) -------------------
     def save(self, path: str) -> str:

@@ -81,13 +81,19 @@ def main() -> None:
                     help="§5.1 ablation: recompute cache at weight updates")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--fault-plan", default=None,
-                    help="chaos testing (DESIGN.md §8): comma-separated "
+                    help="chaos testing (DESIGN.md §8/§10): comma-separated "
                          "fault specs, e.g. 'engine:0@300r200' (crash engine "
                          "0 at t=300, restart 200 flashes later), "
                          "'trainer@500r100', 'pre@400', "
-                         "'link:1@600d300p0.5' (lossy broadcast link), or "
-                         "'chaos:<seed>[:<horizon>]' for a seeded random "
-                         "plan; pipeline mode only")
+                         "'link:1@600d300p0.5' (lossy broadcast link); gray "
+                         "faults: 'slow:0@300d200x4' (4x cost window), "
+                         "'hang:1@300[r60]' (engine wedges; watchdog "
+                         "detects, optional restart 60 flashes after "
+                         "detection), 'corrupt@300d200p0.5' (damaged weight "
+                         "chunks, checksum-gated), 'nan@500x3' (3 non-finite "
+                         "trainer steps), 'poison@7' (7th prompt wedges its "
+                         "engine); or 'chaos:<seed>[:<horizon>]' for a "
+                         "seeded random plan; pipeline mode only")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--eval-every", type=int, default=0,
@@ -196,9 +202,21 @@ def main() -> None:
                   f"rollouts_lost={ps['rollouts_lost']}, "
                   f"prompts_salvaged={ps['prompts_salvaged']}, "
                   f"requeued={ps['prompts_requeued']}, "
+                  f"quarantined={ps['prompts_quarantined']}, "
                   f"trainer crashes={tr['crashes']} "
                   f"(steps_lost={tr['steps_lost']}, "
                   f"restored from v{tr['last_ckpt_version']})", flush=True)
+            if runner.monitor is not None:
+                h = ps["health"]
+                print(f"health: {h['sweeps']} sweeps, "
+                      f"hangs_detected={h['hangs_detected']}, "
+                      f"stragglers_demoted={h['stragglers_demoted']}/"
+                      f"restored={h['stragglers_restored']}", flush=True)
+            bc = ps["broadcast"]
+            if bc["chunks_corrupt"] or bc["wchunks_rejected"]:
+                print(f"integrity: chunks_corrupt={bc['chunks_corrupt']}, "
+                      f"rejected={bc['wchunks_rejected']}, "
+                      f"torn={bc['wstreams_torn']}", flush=True)
 
     if args.log_out:
         os.makedirs(os.path.dirname(args.log_out) or ".", exist_ok=True)

@@ -346,7 +346,28 @@ def test_engine_restore_catches_up_weights(setup):
     assert p.router.alive[1]
 
 
-def test_chaos_replay_is_bit_equal():
+def _failstop_plan():
+    return (FaultPlan(seed=3)
+            .engine_crash(at=KILL_AT, engine=1,
+                          restart_after=RESTORE_AFTER)
+            .degrade_link(at=KILL_AT, duration=RESTORE_AFTER,
+                          drop_prob=0.3))
+
+
+def _gray_plan():
+    # every §10 gray fault kind at once: measured slowdown, wedged
+    # engine, corrupted weight chunks, non-finite steps, poison prompt
+    return (FaultPlan(seed=7)
+            .engine_slowdown(at=50.0, duration=150.0, engine=0, factor=6.0)
+            .engine_hang(at=KILL_AT, engine=1, restart_after=80.0)
+            .chunk_corrupt(at=0.0, duration=1500.0, drop_prob=0.5)
+            .nan_step(at=100.0, count=2)
+            .poison_prompt(5))
+
+
+@pytest.mark.parametrize("make_plan", [_failstop_plan, _gray_plan],
+                         ids=["failstop", "gray"])
+def test_chaos_replay_is_bit_equal(make_plan):
     digests = []
     for _ in range(2):
         # a fresh task per run: the prompt stream's RNG is part of the
@@ -356,12 +377,7 @@ def test_chaos_replay_is_bit_equal():
                           n_layers=1)
         params = tree_values(M.init_params(cfg, jax.random.PRNGKey(0)))
         rec = []
-        plan = (FaultPlan(seed=3)
-                .engine_crash(at=KILL_AT, engine=1,
-                              restart_after=RESTORE_AFTER)
-                .degrade_link(at=KILL_AT, duration=RESTORE_AFTER,
-                              drop_prob=0.3))
-        p = _pipe((task, cfg, params), plan, record=rec)
+        p = _pipe((task, cfg, params), make_plan(), record=rec)
         p.run()
         digests.append(hashlib.sha256(b"".join(rec)).hexdigest())
     assert digests[0] == digests[1]

@@ -1,0 +1,461 @@
+"""Gray-failure self-healing (DESIGN.md §10): straggler/hang watchdog,
+broadcast integrity gate, NaN-rollback training, and quarantine.
+
+The structural claims under test:
+  - a healthy run with the HealthMonitor enabled and the trainer guard
+    armed is bit-identical to one with both disabled — detection only
+    observes until a threshold trips
+  - a wedged engine (ticks stop, no crash) is detected by the missed
+    heartbeat deadline and healed through the §8 fail/salvage/requeue
+    path; stranded prompts are salvaged, repeat offenders quarantined,
+    and nothing is lost (salvaged == requeued + quarantined)
+  - declared-slow engines in a heterogeneous pool are NEVER flagged as
+    stragglers (the progress statistic is speed-normalized); a genuinely
+    degraded engine is demoted in router scoring and restored when the
+    degradation window ends
+  - a corrupt weight chunk can never install: per-chunk checksums reject
+    damaged transmissions at the engine and the shadow buffer's digest
+    is verified before the pointer swap
+  - a non-finite trainer step is dropped *inside* the jitted step (old
+    params survive bitwise), counted, and K consecutive bad steps roll
+    the trainer back to the newest intact checkpoint — rotation keeps
+    fallback targets, and a truncated/corrupted file is skipped
+  - the Server's quarantine terminal state is counted and covered by the
+    `requests_lost == 0` invariant
+"""
+import hashlib
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpoint
+from repro.configs.base import HealthConfig
+from repro.configs.tiny import config as tiny_config
+from repro.core.events import (
+    EventLoop, Fault, FaultPlan, TrainerStage, _fault_sort_key,
+)
+from repro.core.pipeline import PipelineConfig, PipelineRL
+from repro.core.rollout import EngineConfig
+from repro.core.serving import Server
+from repro.core.sim import HardwareModel
+from repro.core.trainer import Trainer
+from repro.data.math_task import MathTask
+from repro.data.packing import Rollout, pack
+from repro.models import model as M
+from repro.sharding import tree_values
+
+# same flash scale as test_faults: the healthy 4-step run spans ~600
+# flashes, so fault windows below land on live decode work
+HW = HardwareModel(h_sat=16, bcast_bytes_per_flash=2e3,
+                   bcast_install_flash=1.0)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    task = MathTask(max_operand=5, ops="+")
+    cfg = tiny_config(vocab_size=task.tok.vocab_size, d_model=64, n_layers=1)
+    params = tree_values(M.init_params(cfg, jax.random.PRNGKey(0)))
+    return task, cfg, params
+
+
+def _pipe(cfg, params, plan=None, steps=4, monitor=True, guard=True,
+          ckpt_dir=None, record=None, speeds=None, interval=15.0):
+    """Fresh pipeline with a FRESH task (the prompt stream's RNG is part
+    of replayed state — a shared task would advance between runs)."""
+    task = MathTask(max_operand=5, ops="+")
+    pc = PipelineConfig(
+        batch_size=4, n_opt_steps=steps, n_chips=8, train_chips=4,
+        pack_rows=2, pack_seq=48, n_engines=2, engine_speeds=speeds,
+        ckpt_every=2 if ckpt_dir else 0, ckpt_dir=ckpt_dir,
+        health=HealthConfig(enabled=monitor, interval=interval))
+    p = PipelineRL(cfg, params, task, EngineConfig(n_slots=8, max_len=16),
+                   pc, hw=HW, trainer=Trainer(cfg, params, guard=guard),
+                   seed=0, fault_plan=plan)
+    if record is not None:
+        orig_put = p.queue.put
+
+        def tap(rollouts):
+            for r in rollouts:
+                record.append(np.asarray(r.tokens).tobytes()
+                              + np.asarray(r.weight_versions).tobytes())
+            orig_put(rollouts)
+
+        p.queue.put = tap
+    p.run()
+    return p
+
+
+def _digest(p, rec):
+    h = hashlib.sha256()
+    for b in rec:
+        h.update(b)
+    for leaf in jax.tree.leaves(p.trainer.params):
+        h.update(np.asarray(leaf).tobytes())
+    return h.hexdigest()
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan: None-safe ordering, gray builders, DSL
+# ---------------------------------------------------------------------------
+
+def test_fault_sort_key_is_total_and_none_safe():
+    """engine=None vs engine=0 (and restart_after None vs float) must
+    order deterministically — no TypeError, no insertion-order
+    dependence."""
+    f_none = Fault("chunk_corrupt", 10.0, engine=None, duration=5.0)
+    f_zero = Fault("chunk_corrupt", 10.0, engine=0, duration=5.0)
+    f_r = Fault("engine_crash", 10.0, engine=0, restart_after=3.0)
+    f_nr = Fault("engine_crash", 10.0, engine=0)
+    fwd = sorted([f_none, f_zero, f_r, f_nr], key=_fault_sort_key)
+    rev = sorted([f_nr, f_r, f_zero, f_none], key=_fault_sort_key)
+    assert [vars(f) for f in fwd] == [vars(f) for f in rev]
+    # None (pool-wide) sorts before a targeted engine at the same time
+    corr = [f for f in fwd if f.kind == "chunk_corrupt"]
+    assert corr[0].engine is None and corr[1].engine == 0
+
+
+def test_gray_dsl_parse():
+    plan = FaultPlan.parse(
+        "slow:0@300d200x4,hang:1@300r60,corrupt@300d200p0.5,"
+        "nan@500x3,poison@7", n_engines=2)
+    kinds = [f.kind for f in plan.faults]
+    assert kinds == ["engine_slowdown", "engine_hang", "chunk_corrupt",
+                     "nan_step", "poison_prompt"]
+    slow, hang, corr, nan, poison = plan.faults
+    assert (slow.engine, slow.at, slow.duration, slow.factor) == (
+        0, 300.0, 200.0, 4.0)
+    assert (hang.engine, hang.at, hang.restart_after) == (1, 300.0, 60.0)
+    assert (corr.engine, corr.duration, corr.drop_prob) == (None, 200.0, 0.5)
+    assert (nan.at, nan.count) == (500.0, 3)
+    assert plan.poison_ordinals() == [7]
+    # defaults: no restart, factor 4, full corruption
+    assert FaultPlan.parse("hang:0@10").faults[0].restart_after is None
+    assert FaultPlan.parse("corrupt@10d5").faults[0].drop_prob == 1.0
+
+
+def test_chaos_gray_knobs_deterministic():
+    kw = dict(horizon=1000.0, n_engines=2, n_crashes=1, slowdowns=1,
+              hangs=1, corrupt_windows=1, nan_bursts=1, poison_prompts=1)
+    a = FaultPlan.chaos(seed=11, **kw)
+    b = FaultPlan.chaos(seed=11, **kw)
+    c = FaultPlan.chaos(seed=12, **kw)
+    assert [vars(f) for f in a.faults] == [vars(f) for f in b.faults]
+    assert [vars(f) for f in a.faults] != [vars(f) for f in c.faults]
+    kinds = {f.kind for f in a.faults}
+    assert {"engine_slowdown", "engine_hang", "chunk_corrupt", "nan_step",
+            "poison_prompt"} <= kinds
+    # gray knobs default to 0: pre-§10 call signatures reproduce
+    # fail-stop-only plans
+    old = FaultPlan.chaos(seed=11, horizon=1000.0, n_engines=2, n_crashes=1)
+    assert all(f.kind in ("engine_crash", "link_degrade")
+               for f in old.faults)
+
+
+def test_slowdown_factor_windows():
+    plan = (FaultPlan()
+            .engine_slowdown(at=10.0, duration=10.0, engine=0, factor=3.0)
+            .engine_slowdown(at=15.0, duration=10.0, engine=0, factor=2.0))
+    assert plan.slowdown_factor(0, 5.0) == 1.0
+    assert plan.slowdown_factor(0, 12.0) == 3.0
+    assert plan.slowdown_factor(0, 17.0) == 6.0   # overlap multiplies
+    assert plan.slowdown_factor(1, 12.0) == 1.0   # other engine untouched
+    assert plan.chunk_corrupted(0, 0, 0, 0, t=12.0) is False  # no corrupt
+
+
+# ---------------------------------------------------------------------------
+# healthy-path bit-equality (the §10 acceptance bar)
+# ---------------------------------------------------------------------------
+
+def test_healthy_run_bit_identical_with_watchdog_and_guard(setup):
+    """Monitor enabled + trainer guard armed, no faults: rollout streams,
+    per-token weight versions, and final params are bit-identical to a
+    run with both disabled."""
+    _, cfg, params = setup
+    rec_on, rec_off = [], []
+    p_on = _pipe(cfg, params, monitor=True, guard=True, record=rec_on)
+    p_off = _pipe(cfg, params, monitor=False, guard=False, record=rec_off)
+    assert p_on.monitor is not None and p_on.monitor.sweeps > 0
+    assert p_off.monitor is None
+    assert _digest(p_on, rec_on) == _digest(p_off, rec_off)
+    # and the watchdog saw nothing to mitigate
+    h = p_on.monitor.stats()
+    assert h["hangs_detected"] == 0 and h["stragglers_demoted"] == 0
+    assert p_on.pool_stats()["trainer"]["bad_steps"] == 0
+
+
+# ---------------------------------------------------------------------------
+# hang detection + straggler soundness
+# ---------------------------------------------------------------------------
+
+def test_hang_detected_and_healed(setup):
+    _, cfg, params = setup
+    plan = FaultPlan().engine_hang(at=120.0, engine=1, restart_after=60.0)
+    p = _pipe(cfg, params, plan=plan)
+    ps = p.pool_stats()
+    h = ps["health"]
+    assert h["hangs_detected"] >= 1
+    assert all(lat > 0 for lat in h["hang_detect_latency"])
+    kinds = [f["kind"] for f in ps["fault_log"]]
+    assert "engine_hang" in kinds           # injected
+    assert "engine_hang_detected" in kinds  # watchdog escalation
+    assert "engine_restore" in kinds        # healed
+    assert p.actors[1].hangs == 1 and p.actors[1].recoveries >= 1
+    # zero-lost: every salvaged prompt requeued or counted quarantined
+    assert ps["prompts_salvaged"] == (ps["prompts_requeued"]
+                                      + ps["prompts_quarantined"])
+    assert p.trainer.version >= 4           # the run finished
+
+
+def test_declared_slow_engine_never_flagged(setup):
+    """A 4x-slower *declared* engine (engine_speeds) normalizes to the
+    same progress statistic as the fast one: no straggler demotion, no
+    hang false-positive from its longer ticks."""
+    _, cfg, params = setup
+    p = _pipe(cfg, params, speeds=[1.0, 0.25], steps=4)
+    h = p.pool_stats()["health"]
+    assert h["sweeps"] > 0
+    assert h["hangs_detected"] == 0
+    assert h["stragglers_demoted"] == 0
+    assert p.router.health == [1.0, 1.0]
+
+
+def test_straggler_demoted_and_restored(setup):
+    """A gray slowdown window (not declared — measured) demotes the
+    engine in router scoring for the window and restores it after."""
+    _, cfg, params = setup
+    plan = FaultPlan().engine_slowdown(at=30.0, duration=600.0, engine=0,
+                                       factor=8.0)
+    p = _pipe(cfg, params, plan=plan, steps=8)
+    h = p.pool_stats()["health"]
+    assert h["stragglers_demoted"] >= 1
+    assert h["stragglers_restored"] >= 1
+    assert h["hangs_detected"] == 0     # slow, not dead
+    assert p.router.health == [1.0, 1.0]  # restored post-window
+
+
+def test_poison_prompt_quarantined(setup):
+    """The poisoned prompt wedges engine after engine until its failure
+    attribution crosses the threshold; then it is quarantined and the
+    run completes."""
+    _, cfg, params = setup
+    plan = FaultPlan().poison_prompt(5)
+    p = _pipe(cfg, params, plan=plan, steps=4)
+    ps = p.pool_stats()
+    assert ps["prompts_quarantined"] >= 1
+    assert any(getattr(q, "_poison", False)
+               for q in p.monitor.quarantined)
+    assert ps["health"]["hangs_detected"] >= p.pc.health.quarantine_after
+    assert ps["prompts_salvaged"] == (ps["prompts_requeued"]
+                                      + ps["prompts_quarantined"])
+    assert p.trainer.version >= 4
+
+
+# ---------------------------------------------------------------------------
+# broadcast integrity gate
+# ---------------------------------------------------------------------------
+
+def test_corrupt_chunks_rejected_and_retransmitted(setup):
+    _, cfg, params = setup
+    plan = FaultPlan(seed=5).chunk_corrupt(at=0.0, duration=1e9,
+                                           drop_prob=0.5)
+    p = _pipe(cfg, params, plan=plan)
+    bc = p.pool_stats()["broadcast"]
+    assert bc["chunks_corrupt"] > 0          # the oracle fired
+    assert bc["wchunks_rejected"] > 0        # engines rejected them
+    assert bc["retransmit_wait"] > 0         # backoff machinery engaged
+    assert p.trainer.version >= 4            # run still completed
+    # replays stay bit-equal under corruption
+    recs = []
+    for _ in range(2):
+        rec = []
+        _pipe(cfg, params, plan=plan, record=rec)
+        recs.append(hashlib.sha256(b"".join(rec)).hexdigest())
+    assert recs[0] == recs[1]
+
+
+def test_integrity_gate_blocks_torn_install(setup):
+    """Unit-level gate check: a chunk with a wrong checksum token is
+    rejected (cursor does not advance), and a stream whose final digest
+    mismatches is discarded without touching the live weights."""
+    from repro.core.events import chunk_token, stream_digest
+    from repro.core.rollout import GenerationEngine
+    task, cfg, params = setup
+    eng = GenerationEngine(cfg, params, EngineConfig(n_slots=2, max_len=16),
+                           task.sample, seed=0)
+    sizes = eng.begin_weight_stream(params, version=7, n_chunks=4)
+    good = [chunk_token(7, k, sizes[k]) for k in range(len(sizes))]
+    # corrupt first transmission: rejected, then the retransmit lands
+    assert eng.stream_weight_chunk(token=good[0] ^ 0x5AD0BAD) is False
+    assert eng.wchunks_rejected == 1
+    for k in range(len(sizes)):
+        done = eng.stream_weight_chunk(token=good[k])
+    assert done and eng.last_stream_installed
+    assert eng.version == 7
+    # torn stream: correct per-chunk tokens but a digest that does not
+    # match -> the pointer swap is refused
+    sizes = eng.begin_weight_stream(params, version=8, n_chunks=4,
+                                    expect_digest=stream_digest(good) ^ 1)
+    for k in range(len(sizes)):
+        done = eng.stream_weight_chunk(token=chunk_token(8, k, sizes[k]))
+    assert done
+    assert not eng.last_stream_installed
+    assert eng.wstreams_torn == 1
+    assert eng.version == 7                  # old weights survived
+
+
+# ---------------------------------------------------------------------------
+# NaN-robust trainer: in-step guard, skip-and-count, rollback
+# ---------------------------------------------------------------------------
+
+def _batch(cfg, seed):
+    rng = np.random.default_rng(seed)
+    rolls = []
+    for i in range(4):
+        toks = rng.integers(0, cfg.vocab_size, size=10).astype(np.int32)
+        rolls.append(Rollout(
+            tokens=toks, prompt_len=3,
+            behavior_logprobs=rng.normal(size=10).astype(np.float32) - 2.0,
+            reward=float(rng.choice([-1.0, 1.0])),
+            weight_versions=np.zeros(10, np.int32), prompt_key=i))
+    b = pack(rolls, 2, 48)
+    b.pop("packing_stats")
+    return b
+
+
+def test_guarded_step_bit_identical_when_healthy(setup):
+    _, cfg, params = setup
+    b = _batch(cfg, 1)
+    tg = Trainer(cfg, params, guard=True)
+    tu = Trainer(cfg, params, guard=False)
+    tg.step(b)
+    tu.step(b)
+    assert not tg.last_nonfinite()
+    for a, c in zip(jax.tree.leaves(tg.params), jax.tree.leaves(tu.params)):
+        assert np.array_equal(np.asarray(a), np.asarray(c))
+    assert tg.version == tu.version == 1
+
+
+def test_guard_drops_poisoned_step_bitwise(setup):
+    """A NaN-gradient step must not move params, opt state, or version —
+    and the very next healthy step proceeds normally."""
+    _, cfg, params = setup
+    tr = Trainer(cfg, params, guard=True)
+    tr.step(_batch(cfg, 1))
+    before = jax.tree.map(np.asarray, tr.state)
+    tr.step(_batch(cfg, 2), poison=True)
+    assert tr.last_nonfinite()
+    assert tr.nonfinite_steps == 1
+    after = jax.tree.map(np.asarray, tr.state)
+    for a, c in zip(jax.tree.leaves(before), jax.tree.leaves(after)):
+        assert np.array_equal(a, c)
+    assert tr.version == 1                   # did not advance
+    tr.step(_batch(cfg, 2))
+    assert not tr.last_nonfinite() and tr.version == 2
+
+
+def test_nan_burst_skipped_and_rolled_back(setup, tmp_path):
+    """4 consecutive poisoned steps cross the rollback threshold (3):
+    the trainer restores the newest intact checkpoint and still reaches
+    the target step count."""
+    _, cfg, params = setup
+    plan = FaultPlan().nan_step(at=360.0, count=4)
+    p = _pipe(cfg, params, plan=plan, ckpt_dir=str(tmp_path))
+    tr = p.pool_stats()["trainer"]
+    assert tr["bad_steps"] >= 4
+    assert tr["nonfinite_steps"] >= 4
+    assert tr["rollbacks"] >= 1
+    assert p.trainer.version >= 4
+
+
+# ---------------------------------------------------------------------------
+# checkpoint rotation + newest-intact fallback
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_content_checksum_rejects_corruption(setup, tmp_path):
+    _, cfg, params = setup
+    path = str(tmp_path / "ck.npz")
+    checkpoint.save(path, {"w": np.arange(8, dtype=np.float32)})
+    assert checkpoint.verify(path)
+    # truncation: unreadable archive
+    data = open(path, "rb").read()
+    open(path, "wb").write(data[:len(data) // 2])
+    assert not checkpoint.verify(path)
+    with pytest.raises(checkpoint.CheckpointError):
+        checkpoint.load(path, {"w": np.zeros(8, np.float32)})
+    # bit rot that still unzips: flip payload bytes, keep a valid zip
+    checkpoint.save(path, {"w": np.arange(8, dtype=np.float32)})
+    import zipfile
+    with np.load(path) as d:
+        flat = dict(d)
+    flat["w"] = flat["w"] + 1.0              # content changes, crc stale
+    with zipfile.ZipFile(path, "w") as z:
+        for k, v in flat.items():
+            import io
+            buf = io.BytesIO()
+            np.lib.format.write_array(buf, np.asarray(v))
+            z.writestr(f"{k}.npy", buf.getvalue())
+    assert not checkpoint.verify(path)
+    with pytest.raises(checkpoint.CheckpointError, match="checksum"):
+        checkpoint.load(path, {"w": np.zeros(8, np.float32)})
+
+
+def test_rotation_keeps_k_and_falls_back_to_intact(setup, tmp_path):
+    """TrainerStage keeps the newest K rotated checkpoints; when the
+    newest ones are truncated, restore falls back to the newest INTACT
+    file and counts the corrupt ones."""
+    _, cfg, params = setup
+    tr = Trainer(cfg, params)
+    ts = TrainerStage(EventLoop(), tr, queue=None, batch_size=0,
+                      train_time=lambda n: 1.0, ckpt_dir=str(tmp_path),
+                      ckpt_keep=2)
+    for v in (1, 2, 3):
+        ts._save_ckpt(v)
+    rotated = sorted(f for f in os.listdir(tmp_path)
+                     if f.startswith("trainer_step_"))
+    assert rotated == ["trainer_step_000002.npz", "trainer_step_000003.npz"]
+    assert os.path.exists(tmp_path / "trainer_latest.npz")
+    # damage latest + newest rotated: fallback lands on step 2
+    for name in ("trainer_latest.npz", "trainer_step_000003.npz"):
+        f = tmp_path / name
+        f.write_bytes(f.read_bytes()[:100])
+    used = ts.restore_newest_intact()
+    assert used is not None and used.endswith("trainer_step_000002.npz")
+    assert ts.ckpts_corrupt == 2
+
+
+# ---------------------------------------------------------------------------
+# Server quarantine terminal state
+# ---------------------------------------------------------------------------
+
+def test_server_quarantine_accounting(setup):
+    task, cfg, params = setup
+    srv = Server(cfg, params, EngineConfig(n_slots=2, max_len=16))
+    rids = [srv.submit(task.sample().prompt_ids) for _ in range(4)]
+    for _ in range(3):
+        srv.step()
+    assert rids[0] in srv.in_flight or srv.done
+    # quarantine one in-flight and one waiting request
+    in_flight = next(iter(srv.in_flight)) if srv.in_flight else None
+    waiting = srv.waiting[0].rid if srv.waiting else None
+    n_q = 0
+    if in_flight is not None:
+        assert srv.quarantine(in_flight, reason="poison")
+        n_q += 1
+        # the quarantined request freed its decode slot immediately
+        assert srv.engine.problems.count(None) >= 1
+    if waiting is not None:
+        assert srv.quarantine(waiting, reason="repeat-offender")
+        n_q += 1
+    assert n_q > 0
+    assert not srv.quarantine(9999)          # unknown rid refused
+    for _ in range(60):
+        if not (srv.waiting or srv.in_flight):
+            break
+        srv.step()
+    m = srv.metrics()
+    assert m["requests_quarantined"] == n_q
+    assert m["requests_lost"] == 0           # the extended invariant
+    assert all(r.quarantined and r.rejected and r.fail_reason
+               for r in srv.quarantined)
