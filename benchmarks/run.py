@@ -29,6 +29,7 @@ def main() -> None:
     from benchmarks import figures
     from benchmarks.engine_bench import engine_benchmarks
     from benchmarks.kernels_bench import kernel_benchmarks
+    from benchmarks.mesh_bench import mesh_benchmarks
     from benchmarks.orchestrator_bench import (chaos_benchmarks,
                                                gray_benchmarks,
                                                orchestrator_benchmarks)
@@ -51,6 +52,7 @@ def main() -> None:
         "orchestrator": orchestrator_benchmarks,
         "chaos": chaos_benchmarks,
         "gray": gray_benchmarks,
+        "mesh": mesh_benchmarks,
     }
     if args.smoke:
         # fast, deterministic-cost groups so per-PR CI can catch tokens/sec

@@ -105,8 +105,25 @@ class PipelineRL:
                  trainer: Optional[Trainer] = None, seed: int = 0,
                  preprocessor=None,
                  prompt_source: Optional[Callable] = None,
-                 fault_plan=None):
+                 fault_plan=None, mesh=None, rules=None):
         self.cfg, self.task, self.ec, self.pc, self.hw = cfg, task, ec, pc, hw
+        # real-mesh runtime (DESIGN.md §11): the trainer keeps the FSDP+TP
+        # train layout on `mesh`, each engine owns a disjoint 1D device
+        # subset (falling back to the shared mesh when devices don't split
+        # evenly), and streamed publications are *executed* per-chunk
+        # reshard transfers via MeshBroadcastExecutor. mesh=None keeps the
+        # pure simulation bit-identical to before.
+        self.mesh, self.rules = mesh, rules
+        self._engine_meshes: Optional[List] = None
+        if mesh is not None:
+            from repro.launch.mesh import engine_submeshes
+            n_eng = max(int(pc.n_engines), 1)
+            try:
+                self._engine_meshes = engine_submeshes(mesh, n_eng)
+            except ValueError:
+                self._engine_meshes = [mesh] * n_eng
+            if trainer is None:
+                trainer = Trainer(cfg, params, mesh=mesh, rules=rules)
         self.trainer = trainer or Trainer(cfg, params)
         self.preprocessor = preprocessor  # paper Fig. 4 middle stage
         self.queue = SampleQueue(pc.queue_maxsize)
@@ -149,7 +166,8 @@ class PipelineRL:
             donor = self.engines[0] if self.engines else None
             self.engines.append(GenerationEngine(
                 cfg, self.trainer.params, ec, self.router.source_for(i),
-                seed=seed + 1009 * i, jit_donor=donor))
+                seed=seed + 1009 * i, jit_donor=donor,
+                mesh=self._engine_mesh(i), rules=self.rules))
         self.router.attach(self.engines, speeds)
 
         self.trainer_stage = TrainerStage(
@@ -182,9 +200,13 @@ class PipelineRL:
         self.actors: List[ActorStage] = [
             self._make_actor(i, eng, speeds[i])
             for i, eng in enumerate(self.engines)]
+        executor = None
+        if mesh is not None and pc.broadcast == "streamed":
+            from repro.launch.meshrt import MeshBroadcastExecutor
+            executor = MeshBroadcastExecutor()
         self.broadcaster = WeightBroadcaster(
             hw, self.actors, mode=pc.broadcast, n_chunks=pc.broadcast_chunks,
-            fault_plan=fault_plan)
+            fault_plan=fault_plan, executor=executor)
         self.trainer_stage.broadcaster = self.broadcaster
         # gray-failure watchdog (DESIGN.md §10): hang/straggler detection
         # over the pool, escalating through the §8 fail/salvage/requeue
@@ -219,6 +241,13 @@ class PipelineRL:
 
         return draw
 
+    def _engine_mesh(self, i: int):
+        """Device subset of pool engine i (None without a mesh). Elastic
+        joiners beyond the configured pool reuse the last subset."""
+        if self._engine_meshes is None:
+            return None
+        return self._engine_meshes[min(i, len(self._engine_meshes) - 1)]
+
     def _make_actor(self, i: int, eng: GenerationEngine,
                     speed: float) -> ActorStage:
         """One pool member. The chip share stays fixed at the *configured*
@@ -233,6 +262,9 @@ class PipelineRL:
             prefill_cost=lambda toks, inv: m.prefill_time(toks, max(c, 1)),
             page_cost=m.page_touch_time,
             deliver=self._deliver, recompute_kv=self.pc.recompute_kv)
+        # real-mesh pool: the stage advertises the device subset it owns
+        a.devices = (tuple(eng.mesh.devices.reshape(-1))
+                     if getattr(eng, "mesh", None) is not None else None)
         plan = self.fault_plan
         if plan is not None and plan.has_slowdown_faults():
             # gray degradation (§10): the plan's windows scale this
@@ -450,7 +482,8 @@ class PipelineRL:
         eng = GenerationEngine(
             self.cfg, self.trainer.params, self.ec,
             self.router.source_for(idx), seed=self.seed + 1009 * idx,
-            jit_donor=self.engines[0] if self.engines else None)
+            jit_donor=self.engines[0] if self.engines else None,
+            mesh=self._engine_mesh(idx), rules=self.rules)
         self.engines.append(eng)
         self.engine_speeds.append(float(speed))
         self.router.add_engine(eng, speed)

@@ -15,17 +15,19 @@ Eq. 8) and the weight version each token was sampled under (token lag).
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
 import functools
+import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import (ModelConfig, effective_cache_len,
-                                kv_cache_specs, paged_cache_specs,
-                                paged_layout)
+from repro.configs.base import (CACHE_LOGICAL, ModelConfig,
+                                effective_cache_len, kv_cache_specs,
+                                paged_cache_specs, paged_layout)
 from repro.data.math_task import MathTask, Problem
 from repro.data.packing import Rollout
 from repro.kernels.paged_cache import BlockTables, OutOfPages, PageAllocator
@@ -224,10 +226,29 @@ class GenerationEngine:
 
     def __init__(self, cfg: ModelConfig, params, ec: EngineConfig,
                  prompt_source: Callable[[], Problem], seed: int = 0,
-                 jit_donor: Optional["GenerationEngine"] = None):
+                 jit_donor: Optional["GenerationEngine"] = None,
+                 mesh=None, rules=None):
         if ec.interpret is not None:
             cfg = dataclasses.replace(cfg, pallas_interpret=ec.interpret)
         self.cfg, self.ec = cfg, ec
+        # --- real-mesh placement (DESIGN.md §11): when `mesh` is given the
+        # engine owns a device set — params live in the generation layout
+        # from `tree_shardings`, the KV cache follows CACHE_LOGICAL, and
+        # every jitted call runs under `sharding_context` so the model's
+        # `constrain` annotations become real sharding constraints.
+        self.mesh, self.rules = mesh, rules
+        self._param_shardings = None
+        self._pshard_leaves: Optional[List[Any]] = None
+        # executed-transfer log, one entry per measured device placement:
+        # {"kind": "atomic"|"chunk", "version", "k", "nbytes", "seconds"}
+        self.wexec_log: List[Dict[str, Any]] = []
+        if mesh is not None:
+            from repro.sharding import tree_shardings
+            ann = M.init_params(cfg, abstract=True)
+            self._param_shardings = tree_shardings(ann, mesh, rules)
+            self._pshard_leaves = jax.tree_util.tree_leaves(
+                self._param_shardings)
+            params = jax.device_put(params, self._param_shardings)
         self.params = params      # behavior weights μ
         self.version = 0          # trainer version of μ
         self.prompt_source = prompt_source
@@ -267,6 +288,8 @@ class GenerationEngine:
             "cache": cache,
             "key": jax.random.PRNGKey(seed),
         }
+        if mesh is not None:
+            self.state = jax.device_put(self.state, self._state_shardings())
         # host-side bookkeeping
         self.problems: List[Optional[Problem]] = [None] * H
         self.ver_buf = np.zeros((H, T), np.int32)
@@ -336,7 +359,9 @@ class GenerationEngine:
         self.wstreams_torn = 0
         self.last_stream_installed = True
         if (jit_donor is not None and jit_donor.cfg == cfg
-                and jit_donor.ec == ec):
+                and jit_donor.ec == ec
+                and getattr(jit_donor, "mesh", None) == mesh
+                and getattr(jit_donor, "rules", None) == rules):
             self._step = jit_donor._step
             self._recompute = jit_donor._recompute
             self._admit = jit_donor._admit
@@ -361,13 +386,57 @@ class GenerationEngine:
                                       and attn._use_prefill_kernel(
                                           cfg, chunk, self._cache_len))
 
+    # ----- device placement (DESIGN.md §11 real-mesh runtime) ----------
+    def _state_shardings(self):
+        """Engine-state placement: slot-cache leaves follow CACHE_LOGICAL
+        through the rules engine (cache_seq / kv_heads sharding); paged
+        pool leaves and the scheduling vectors stay replicated — GSPMD
+        keeps the jitted step semantics-identical either way."""
+        from jax.sharding import NamedSharding, PartitionSpec
+        from repro.sharding import logical_to_spec
+        rep = NamedSharding(self.mesh, PartitionSpec())
+        sh: Dict[str, Any] = {k: rep for k in self.state if k != "cache"}
+        cache = {}
+        for k, v in self.state["cache"].items():
+            if self._paged or k not in CACHE_LOGICAL:
+                cache[k] = rep
+            else:
+                cache[k] = NamedSharding(self.mesh, logical_to_spec(
+                    CACHE_LOGICAL[k], v.shape, self.mesh, self.rules))
+        sh["cache"] = cache
+        return sh
+
+    def _ctx(self):
+        """Ambient sharding context for every jitted call — a no-op for
+        mesh-less engines, so the simulated pool is untouched."""
+        if self.mesh is None:
+            return contextlib.nullcontext()
+        from repro.shardctx import sharding_context
+        return sharding_context(self.mesh, self.rules)
+
     # ----- weights -----------------------------------------------------
-    def set_weights(self, params, version: int, recompute_kv: bool = False):
+    def set_weights(self, params, version: int, recompute_kv: bool = False,
+                    _placed: bool = False):
         """In-flight weight update: swap μ, keep the (stale) KV cache.
         recompute_kv=True reproduces the paper's §5.1 ablation (recompute
         the cache of in-progress sequences under the new weights). An
-        atomic swap supersedes any in-progress weight stream."""
+        atomic swap supersedes any in-progress weight stream.
+
+        On a mesh engine the swap is an *executed* transfer: the incoming
+        tree is resharded onto this engine's placement and the measured
+        wall time lands in `wexec_log` (`_placed=True` skips the copy when
+        the caller already delivered device-resident buffers, e.g. the
+        final swap of an executed chunk stream)."""
         self._wstream = None
+        if self.mesh is not None and not _placed:
+            from repro.core.events import tree_bytes
+            t0 = time.perf_counter()
+            params = jax.device_put(params, self._param_shardings)
+            jax.block_until_ready(params)
+            self.wexec_log.append({
+                "kind": "atomic", "version": int(version), "k": -1,
+                "nbytes": tree_bytes(params),
+                "seconds": time.perf_counter() - t0})
         self.params = params
         self.version = version
         if recompute_kv:
@@ -379,14 +448,18 @@ class GenerationEngine:
                 # nondeterministically
                 self._unshare_all()
                 self._sync_tables()
-                self.state["cache"] = self._recompute(params, self.state,
-                                                      self._bt_jax)
+                with self._ctx():
+                    self.state["cache"] = self._recompute(
+                        params, self.state, self._bt_jax)
             else:
-                self.state["cache"] = self._recompute(params, self.state)
+                with self._ctx():
+                    self.state["cache"] = self._recompute(params, self.state)
 
     def begin_weight_stream(self, params, version: int, n_chunks: int = 8,
                             recompute_kv: bool = False,
-                            expect_digest: Optional[int] = None) -> List[int]:
+                            expect_digest: Optional[int] = None,
+                            chunk_leaves: Optional[List[List[Any]]] = None
+                            ) -> List[int]:
         """Streamed in-flight broadcast (DESIGN.md §7): stage the new
         param tree into a shadow buffer chunk-by-chunk between decode
         steps via `stream_weight_chunk`; μ (and `self.version`) stay on
@@ -394,8 +467,12 @@ class GenerationEngine:
         so per-token `weight_versions` stamps stay exact across the whole
         transfer. A second `begin` abandons the unfinished shadow buffer.
         `expect_digest` arms the §10 integrity gate: the assembled stream
-        must reproduce it before the swap is allowed. Returns the
-        per-chunk byte sizes (for interconnect costing)."""
+        must reproduce it before the swap is allowed. `chunk_leaves[k]`,
+        when given, holds the k-th span's leaves already resharded onto
+        this engine's devices (a WeightBroadcaster execution backend ran
+        the transfer) — installs consume those buffers instead of the
+        sender's. Returns the per-chunk byte sizes (for interconnect
+        costing)."""
         from repro.core.events import chunk_spans, span_bytes
         leaves, treedef = jax.tree_util.tree_flatten(params)
         spans = chunk_spans(leaves, n_chunks)
@@ -405,6 +482,7 @@ class GenerationEngine:
             "sizes": sizes, "shadow": [None] * len(leaves), "next": 0,
             "version": version, "recompute": recompute_kv,
             "expect": expect_digest, "tokens": [],
+            "chunk_leaves": chunk_leaves,
         }
         return sizes
 
@@ -432,7 +510,25 @@ class GenerationEngine:
                 self.wchunks_rejected += 1
                 return False
         lo, hi = ws["spans"][k]
-        ws["shadow"][lo:hi] = ws["leaves"][lo:hi]
+        if ws.get("chunk_leaves") is not None:
+            # executor-resharded span: the buffers already live on this
+            # engine's devices (k-indexed, so a retransmit after a
+            # rejected chunk naturally reuses the right span)
+            ws["shadow"][lo:hi] = list(ws["chunk_leaves"][k])
+        elif self.mesh is not None:
+            # in-engine executed transfer: reshard the span onto this
+            # engine's placement, measured (DESIGN.md §11)
+            t0 = time.perf_counter()
+            placed = jax.device_put(ws["leaves"][lo:hi],
+                                    self._pshard_leaves[lo:hi])
+            jax.block_until_ready(placed)
+            self.wexec_log.append({
+                "kind": "chunk", "version": int(ws["version"]), "k": k,
+                "nbytes": ws["sizes"][k],
+                "seconds": time.perf_counter() - t0})
+            ws["shadow"][lo:hi] = placed
+        else:
+            ws["shadow"][lo:hi] = ws["leaves"][lo:hi]
         ws["tokens"].append(chunk_token(ws["version"], k, ws["sizes"][k]))
         ws["next"] += 1
         if ws["next"] < len(ws["spans"]):
@@ -448,7 +544,8 @@ class GenerationEngine:
         params = jax.tree_util.tree_unflatten(ws["treedef"], ws["shadow"])
         version, recompute = ws["version"], ws["recompute"]
         self.last_stream_installed = True
-        self.set_weights(params, version, recompute_kv=recompute)
+        self.set_weights(params, version, recompute_kv=recompute,
+                         _placed=True)
         return True
 
     @property
@@ -818,10 +915,11 @@ class GenerationEngine:
         # and forces the prompt token by token
         target_nc = (np.maximum(new_plen - 1, 0) if chunk
                      else np.zeros(H, np.int32))
-        self.state = self._admit(self.state, jnp.asarray(new_tokens),
-                                 jnp.asarray(new_plen),
-                                 jnp.asarray(target_nc.astype(np.int32)),
-                                 jnp.asarray(mask))
+        with self._ctx():
+            self.state = self._admit(self.state, jnp.asarray(new_tokens),
+                                     jnp.asarray(new_plen),
+                                     jnp.asarray(target_nc.astype(np.int32)),
+                                     jnp.asarray(mask))
         self._host_active[mask] = True
         self._host_prompt_len[mask] = new_plen[mask]
         self._host_ncached[mask] = target_nc[mask]
@@ -840,10 +938,11 @@ class GenerationEngine:
                     cl = self._cache_len
                     blk = attn.prefill_block_k(cl)
                     hint = int(min(cl, -(-min(off, cl) // blk) * blk))
-                self.state = self._prefill(self.params, self.state, off,
-                                           jnp.asarray(prefill_mask),
-                                           self._bt_jax,
-                                           offset_hint=hint)
+                with self._ctx():
+                    self.state = self._prefill(self.params, self.state, off,
+                                               jnp.asarray(prefill_mask),
+                                               self._bt_jax,
+                                               offset_hint=hint)
                 self.prefill_invocations += 1
             self.last_admit_prefill_tokens = int(
                 np.maximum(new_plen[prefill_mask] - 1, 0).sum())
@@ -897,8 +996,10 @@ class GenerationEngine:
             cur = (int(self._host_ncached[self._host_active].max()) + 1
                    if self._host_active.any() else 1)
             hint = int(min(cl, -(-cur // blk) * blk))
-        self.state, finished = self._step(self.params, self.state,
-                                          self._bt_jax, kv_len_hint=hint)
+        with self._ctx():
+            self.state, finished = self._step(self.params, self.state,
+                                              self._bt_jax,
+                                              kv_len_hint=hint)
         finished = np.asarray(finished)
         # record weight version for tokens written this step — only tokens
         # actually *sampled* under μ; prompt-forced tokens keep version 0

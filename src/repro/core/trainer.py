@@ -194,11 +194,23 @@ class Trainer:
 
     def __init__(self, cfg: ModelConfig, params, rl: RLConfig = RLConfig(),
                  adam: AdamConfig = AdamConfig(), lr_schedule=None,
-                 guard: bool = True):
+                 guard: bool = True, mesh=None, rules=None):
         self.cfg, self.rl, self.adam = cfg, rl, adam
         self.state = init_train_state(params)
         self.guard = bool(guard)
         self.nonfinite_steps = 0   # updates dropped by the in-step guard
+        # real-mesh placement (DESIGN.md §11): params/opt state live in
+        # the FSDP+TP train layout from `state_shardings`; the step runs
+        # under `sharding_context` so `constrain` annotations bind, and
+        # staged batches land replicated on the mesh (their sharding is
+        # decided by GSPMD inside the step)
+        self.mesh, self.rules = mesh, rules
+        if mesh is not None:
+            from repro.launch.steps import abstract_train_state, \
+                state_shardings
+            ann, _ = abstract_train_state(cfg)
+            self.state = jax.device_put(self.state,
+                                        state_shardings(ann, mesh, rules))
         # no donation of the state: the generation engine aliases these
         # buffers between in-flight updates (the co-sim shares one device)
         self._step = make_train_step(cfg, rl, adam, donate=False,
@@ -211,8 +223,21 @@ class Trainer:
         # step; explicit donation would add nothing (XLA donation aliases
         # inputs to *outputs* only, and a consumed batch has no matching
         # output — it would just warn "donated buffers were not usable").
-        self._stage = jax.jit(lambda b: b)
+        if mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec
+            self._stage = jax.jit(
+                lambda b: b,
+                out_shardings=NamedSharding(mesh, PartitionSpec()))
+        else:
+            self._stage = jax.jit(lambda b: b)
         self.history: List[LazyMetrics] = []
+
+    def _ctx(self):
+        if self.mesh is None:
+            import contextlib
+            return contextlib.nullcontext()
+        from repro.shardctx import sharding_context
+        return sharding_context(self.mesh, self.rules)
 
     @property
     def version(self) -> int:
@@ -230,13 +255,14 @@ class Trainer:
         `poison` (guard mode only) injects NaN gradients inside the step
         — the §10 `nan_step` fault; the guard must catch it."""
         batch = {k: v for k, v in batch.items() if k not in _NON_MODEL_KEYS}
-        if not all(isinstance(v, jax.Array) for v in batch.values()):
-            batch = self._stage(batch)
-        if self.guard:
-            self.state, metrics = self._step(self.state, batch,
-                                             poison=poison)
-        else:
-            self.state, metrics = self._step(self.state, batch)
+        with self._ctx():
+            if not all(isinstance(v, jax.Array) for v in batch.values()):
+                batch = self._stage(batch)
+            if self.guard:
+                self.state, metrics = self._step(self.state, batch,
+                                                 poison=poison)
+            else:
+                self.state, metrics = self._step(self.state, batch)
         m = LazyMetrics(metrics)
         self.history.append(m)
         return m
@@ -268,6 +294,12 @@ class Trainer:
         from repro.checkpoint import checkpoint
         loaded = checkpoint.load(path, self.state)
         self.state = jax.tree.map(jnp.asarray, loaded)
+        if self.mesh is not None:
+            from repro.launch.steps import abstract_train_state, \
+                state_shardings
+            ann, _ = abstract_train_state(self.cfg)
+            self.state = jax.device_put(
+                self.state, state_shardings(ann, self.mesh, self.rules))
         return self.version
 
     def fetch_metrics(self) -> List[Dict[str, float]]:

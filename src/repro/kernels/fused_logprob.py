@@ -178,6 +178,39 @@ def _bwd_dw_kernel(tgt_ref, lse_ref, c0_ref, glp_ref, gent_ref, h_ref, w_ref,
         dw_ref[...] = acc_ref[...].astype(dw_ref.dtype)
 
 
+def _bwd_dw_chunk_kernel(tgt_ref, lse_ref, c0_ref, glp_ref, gent_ref, h_ref,
+                         w_ref, dw_ref, acc_ref, *, block_n: int, block_v: int,
+                         n_n_blocks: int, rows_per_chunk: int, vocab: int,
+                         transpose_head: bool):
+    """Two-level dhead reduction (level 1): the sequential rows axis is cut
+    into chunks of `rows_per_chunk` row blocks; the VMEM accumulator resets
+    at each chunk boundary and flushes a per-chunk f32 partial to its own
+    slice of the (n_chunks, ...) output. Level 2 — summing the partials —
+    happens outside the kernel as an ordinary tree reduction, so at very
+    large N the hidden re-read per vocab block stops being one monolithic
+    length-n_n_blocks dependency chain."""
+    vi, ni = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(ni % rows_per_chunk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    dl = _block_dlogits(tgt_ref, lse_ref, c0_ref, glp_ref, gent_ref, h_ref,
+                        w_ref, vi, block_n=block_n, block_v=block_v,
+                        vocab=vocab, transpose_head=transpose_head)
+    h = h_ref[...]
+    if transpose_head:                       # dl^T @ h -> (bv, D)
+        acc_ref[...] += _dot(dl, h, ((0,), (0,)))
+    else:                                    # h^T @ dl -> (D, bv)
+        acc_ref[...] += _dot(h, dl, ((0,), (0,)))
+
+    last_of_chunk = (ni % rows_per_chunk) == rows_per_chunk - 1
+
+    @pl.when((ni == n_n_blocks - 1) | last_of_chunk)
+    def _flush():
+        dw_ref[...] = acc_ref[...][None]
+
+
 # ---------------------------------------------------------------------------
 # pallas_call plumbing
 # ---------------------------------------------------------------------------
@@ -249,7 +282,8 @@ def _fused_fwd_call(hidden, head, targets, block_n, block_v, transpose_head,
 
 
 def _fused_bwd_call(hidden, head, targets, lse, c0, g_lp, g_ent,
-                    block_n, block_v, transpose_head, interpret):
+                    block_n, block_v, transpose_head, interpret,
+                    dw_chunks=1):
     N, D = hidden.shape
     V = head.shape[0] if transpose_head else head.shape[1]
     bn, bv, n_n, n_v, Vp = _geometry(N, D, V, block_n, block_v)
@@ -275,22 +309,49 @@ def _fused_bwd_call(hidden, head, targets, lse, c0, g_lp, g_ent,
 
     dw_shape = (Vp, D) if transpose_head else (D, Vp)
     dw_block = (bv, D) if transpose_head else (D, bv)
-    dw = pl.pallas_call(
-        functools.partial(_bwd_dw_kernel, block_n=bn, block_v=bv,
-                          n_n_blocks=n_n, vocab=V,
-                          transpose_head=transpose_head),
-        grid=(n_v, n_n),                     # rows trailing: dw accumulates
-        in_specs=[pl.BlockSpec((bn, 1), lambda vi, ni: (ni, 0))] * 5 + [
-            pl.BlockSpec((bn, D), lambda vi, ni: (ni, 0)),
-            _w_spec(bv, D, transpose_head, flip=True),
-        ],
-        out_specs=pl.BlockSpec(
-            dw_block, (lambda vi, ni: (vi, 0)) if transpose_head
-            else (lambda vi, ni: (0, vi))),
-        out_shape=jax.ShapeDtypeStruct(dw_shape, head.dtype),
-        scratch_shapes=[pltpu.VMEM(dw_block, jnp.float32)],
-        interpret=interpret,
-    )(*rows, hidden, head_p)
+    if dw_chunks > 1 and n_n > 1:
+        # two-level reduction: per-row-chunk f32 partials + tree sum
+        rpc = -(-n_n // dw_chunks)           # row blocks per chunk
+        n_chunks = -(-n_n // rpc)
+        if transpose_head:
+            out_spec = pl.BlockSpec((1,) + dw_block,
+                                    lambda vi, ni: (ni // rpc, vi, 0))
+        else:
+            out_spec = pl.BlockSpec((1,) + dw_block,
+                                    lambda vi, ni: (ni // rpc, 0, vi))
+        dw_part = pl.pallas_call(
+            functools.partial(_bwd_dw_chunk_kernel, block_n=bn, block_v=bv,
+                              n_n_blocks=n_n, rows_per_chunk=rpc, vocab=V,
+                              transpose_head=transpose_head),
+            grid=(n_v, n_n),                 # rows trailing: dw accumulates
+            in_specs=[pl.BlockSpec((bn, 1), lambda vi, ni: (ni, 0))] * 5 + [
+                pl.BlockSpec((bn, D), lambda vi, ni: (ni, 0)),
+                _w_spec(bv, D, transpose_head, flip=True),
+            ],
+            out_specs=out_spec,
+            out_shape=jax.ShapeDtypeStruct((n_chunks,) + dw_shape,
+                                           jnp.float32),
+            scratch_shapes=[pltpu.VMEM(dw_block, jnp.float32)],
+            interpret=interpret,
+        )(*rows, hidden, head_p)
+        dw = dw_part.sum(axis=0).astype(head.dtype)
+    else:
+        dw = pl.pallas_call(
+            functools.partial(_bwd_dw_kernel, block_n=bn, block_v=bv,
+                              n_n_blocks=n_n, vocab=V,
+                              transpose_head=transpose_head),
+            grid=(n_v, n_n),                 # rows trailing: dw accumulates
+            in_specs=[pl.BlockSpec((bn, 1), lambda vi, ni: (ni, 0))] * 5 + [
+                pl.BlockSpec((bn, D), lambda vi, ni: (ni, 0)),
+                _w_spec(bv, D, transpose_head, flip=True),
+            ],
+            out_specs=pl.BlockSpec(
+                dw_block, (lambda vi, ni: (vi, 0)) if transpose_head
+                else (lambda vi, ni: (0, vi))),
+            out_shape=jax.ShapeDtypeStruct(dw_shape, head.dtype),
+            scratch_shapes=[pltpu.VMEM(dw_block, jnp.float32)],
+            interpret=interpret,
+        )(*rows, hidden, head_p)
     if Vp != V:
         dw = dw[:V] if transpose_head else dw[:, :V]
     return dh, dw
@@ -302,13 +363,13 @@ def _fused_bwd_call(hidden, head, targets, lse, c0, g_lp, g_ent,
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
 def _fused(static, hidden, head, targets):
-    block_n, block_v, transpose_head, interpret = static
+    block_n, block_v, transpose_head, interpret, _ = static
     return _fused_fwd_call(hidden, head, targets, block_n, block_v,
                            transpose_head, interpret)
 
 
 def _fused_fwd(static, hidden, head, targets):
-    block_n, block_v, transpose_head, interpret = static
+    block_n, block_v, transpose_head, interpret, _ = static
     out = _fused_fwd_call(hidden, head, targets, block_n, block_v,
                           transpose_head, interpret)
     lp, lse, ent = out
@@ -316,14 +377,15 @@ def _fused_fwd(static, hidden, head, targets):
 
 
 def _fused_bwd(static, res, cts):
-    block_n, block_v, transpose_head, interpret = static
+    block_n, block_v, transpose_head, interpret, dw_chunks = static
     hidden, head, targets, lse, ent = res
     g_lp, g_lse, g_ent = (g.astype(jnp.float32) for g in cts)
     # dl = g_lp * 1[v==t] + p * (c0 - g_ent * l), c0 = g_lse - g_lp
     #    + g_ent * (lse - H)  — see module docstring for the derivation
     c0 = g_lse - g_lp + g_ent * (lse - ent)
     dh, dw = _fused_bwd_call(hidden, head, targets, lse, c0, g_lp, g_ent,
-                             block_n, block_v, transpose_head, interpret)
+                             block_n, block_v, transpose_head, interpret,
+                             dw_chunks=dw_chunks)
     d_tgt = np.zeros(targets.shape, jax.dtypes.float0)
     return dh, dw, d_tgt
 
@@ -439,7 +501,7 @@ def fused_logprob_blocked(hidden, head, targets, *,
 
 def fused_logprob(hidden, head, targets, *, transpose_head: bool = False,
                   block_n: int = 128, block_v: int = 512,
-                  interpret: bool | None = None):
+                  interpret: bool | None = None, dw_chunks: int = 1):
     """Blockwise linear-cross-entropy over the lm head.
 
     hidden: (N, D) final hidden states (post final-norm); head: (D, V), or
@@ -451,10 +513,124 @@ def fused_logprob(hidden, head, targets, *, transpose_head: bool = False,
     VJP that re-derives each vocab block's softmax from the saved ``lse``
     — neither the logits nor their gradient are ever materialized.
 
+    dw_chunks > 1 splits the backward dhead reduction over the rows axis
+    into that many per-chunk f32 partials summed outside the kernel (a
+    two-level tree reduction): at very large N the single sequential
+    accumulation chain per vocab tile stops gating the re-read of hidden.
+    The default (1) keeps the original single-pass accumulator.
+
     Memory: activations are O(N) scalars + one (bn, D) tile per grid step,
     vs O(N·V) logits (twice: model dtype + f32) for the unfused path.
     """
     interpret = default_interpret(interpret)
     assert hidden.ndim == 2 and head.ndim == 2 and targets.ndim == 1
     return _fused((int(block_n), int(block_v), bool(transpose_head),
-                   bool(interpret)), hidden, head, targets)
+                   bool(interpret), int(dw_chunks)), hidden, head, targets)
+
+
+# ---------------------------------------------------------------------------
+# vocab-sharded wrapper (the p_vocab -> "model" mesh axis, DESIGN.md §11)
+# ---------------------------------------------------------------------------
+#
+# Each shard owns a contiguous V/n slice of the head and runs the ordinary
+# fused kernel on it, producing *local* (lp_i, lse_i, ent_i). The global
+# stats are exact functions of those three scalars per row:
+#
+#     lse = m + log sum_i exp(lse_i - m),      m = max_i lse_i
+#     sum_{v in shard i} exp(l_v) * l_v = exp(lse_i) * (lse_i - ent_i)
+#       => entropy = lse - sum_i exp(lse_i - lse) * (lse_i - ent_i)
+#     target logit = sum_i owned_i * (lp_i + lse_i)   (one owner per row)
+#       => logprob = target logit - lse
+#
+# so one psum over "model" of three (N,)-vectors replaces any (N, V)
+# traffic — the no-materialization property now holds *per shard*, and the
+# combine is plain differentiable jnp, so the custom VJP of the local call
+# stays intact and grads flow to the local head slice only.
+
+def vocab_shard_count(mesh, axis_name: str, vocab: int) -> int:
+    """Usable vocab shards: the size of `axis_name` on `mesh` when it
+    exists and divides `vocab`, else 1 (caller falls back to the
+    replicated path — the same divisibility-drop contract as
+    `sharding.logical_to_spec`)."""
+    if mesh is None or axis_name not in mesh.shape:
+        return 1
+    n = int(mesh.shape[axis_name])
+    return n if n > 1 and vocab % n == 0 else 1
+
+
+def fused_logprob_sharded(hidden, head, targets, *, mesh=None,
+                          axis_name: str = "model",
+                          transpose_head: bool = False,
+                          use_pallas: bool = True,
+                          block_n: int | None = None,
+                          block_v: int | None = None,
+                          interpret: bool | None = None,
+                          dw_chunks: int = 1):
+    """`fused_logprob` sharded over the vocab axis of `mesh`.
+
+    hidden (N, D) and targets (N,) enter replicated; the head enters split
+    along its vocab dimension over `axis_name` (rows when transpose_head,
+    columns otherwise — exactly how `sharding.DEFAULT_RULES` places
+    `p_vocab`/`p_embed_vocab`). Each shard runs the single-device fused
+    path (Pallas kernel or the blocked jnp twin per `use_pallas`) on its
+    V/n slice with targets clipped into the slice; the cross-shard combine
+    is three psums over (N,) vectors (see header comment). Falls back to
+    the unsharded call when `mesh` is None, the axis is absent/size-1, or
+    V does not divide — so callers can route unconditionally.
+
+    Value and grads match the single-device path to fp32 tolerance (the
+    shard cut only reassociates the vocab reduction, like a different
+    block_v would)."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    interpret = default_interpret(interpret)
+    if block_n is None:
+        block_n = 256 if interpret else 128
+    if block_v is None:
+        block_v = 2048 if interpret else 512
+    assert hidden.ndim == 2 and head.ndim == 2 and targets.ndim == 1
+    V = head.shape[0] if transpose_head else head.shape[1]
+    n = vocab_shard_count(mesh, axis_name, V)
+    if n <= 1:
+        if use_pallas:
+            return fused_logprob(hidden, head, targets,
+                                 transpose_head=transpose_head,
+                                 block_n=block_n, block_v=block_v,
+                                 interpret=interpret, dw_chunks=dw_chunks)
+        return fused_logprob_blocked(hidden, head, targets,
+                                     transpose_head=transpose_head,
+                                     block_v=block_v)
+
+    v_local = V // n
+
+    def shard_fn(h, w, t):
+        off = jax.lax.axis_index(axis_name).astype(jnp.int32) * v_local
+        t_local = jnp.clip(t.astype(jnp.int32) - off, 0, v_local - 1)
+        if use_pallas:
+            lp_i, lse_i, ent_i = _fused(
+                (int(block_n), int(block_v), bool(transpose_head),
+                 bool(interpret), int(dw_chunks)), h, w, t_local)
+        else:
+            lp_i, lse_i, ent_i = _blocked(
+                (int(block_v), bool(transpose_head)), h, w, t_local)
+        owned = (t >= off) & (t < off + v_local)
+        t_logit = lp_i + lse_i               # local logit of the clipped id
+        # stable max of the shard lse's; pmax has no autodiff rule, so the
+        # max rides an all_gather of the stopped values (m is a constant —
+        # any shared offset gives the same lse, see the log-sum-exp form)
+        m = jax.lax.all_gather(
+            jax.lax.stop_gradient(lse_i), axis_name).max(axis=0)
+        lse = m + jnp.log(jax.lax.psum(jnp.exp(lse_i - m), axis_name))
+        ent = lse - jax.lax.psum(
+            jnp.exp(lse_i - lse) * (lse_i - ent_i), axis_name)
+        # non-owner rows gathered a clipped (wrong) id: the where() both
+        # drops their contribution and zeroes their cotangent into lp_i
+        tgt = jax.lax.psum(jnp.where(owned, t_logit, 0.0), axis_name)
+        return tgt - lse, lse, ent
+
+    w_spec = P(axis_name, None) if transpose_head else P(None, axis_name)
+    return shard_map(shard_fn, mesh=mesh,
+                     in_specs=(P(), w_spec, P()),
+                     out_specs=(P(), P(), P()),
+                     check_rep=False)(hidden, head, targets)

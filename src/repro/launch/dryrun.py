@@ -29,7 +29,8 @@ from repro.roofline.analysis import analyze, model_flops_estimate  # noqa: E402
 
 def run_one(arch: str, shape_name: str, multi_pod: bool = False,
             include_weight_update: bool = False, calibrated: bool = False,
-            optimized: bool = False, wu_chunks: int = 0) -> dict:
+            optimized: bool = False, wu_chunks: int = 0,
+            wu_execute: bool = False) -> dict:
     """optimized=True applies the §Perf winners: remat + microbatch=16 for
     train shapes, GEN_RULES + cache donation for inference shapes.
     calibrated=True replaces the scan-blind cost_analysis terms with the
@@ -120,6 +121,23 @@ def run_one(arch: str, shape_name: str, multi_pod: bool = False,
                 "max_chunk_t_collective_s": max(
                     (c["t_collective_s"] for c in chunk_rows), default=0.0),
             }
+            if wu_execute:
+                # run the same per-chunk reshard programs on zero-filled
+                # sharded buffers (DESIGN.md §11): measured t_exec_s sits
+                # next to the compiled t_collective_s estimate above, so
+                # estimate-vs-execution drift is a dry-run column. Only
+                # meaningful for configs that fit on the host devices —
+                # execute_weight_update's byte guard turns a 70B config
+                # into an error record, not an OOM.
+                from repro.launch.steps import execute_weight_update
+                try:
+                    execd = execute_weight_update(
+                        cfg, mesh, n_chunks=wu_chunks)
+                    rec["weight_update_chunks"]["executed"] = execd
+                    rec["weight_update_chunks"]["sum_t_exec_s"] = sum(
+                        c["t_exec_s"] for c in execd)
+                except ValueError as e:
+                    rec["weight_update_chunks"]["executed_error"] = str(e)
     except Exception as e:
         rec["error"] = f"{type(e).__name__}: {e}"
         rec["traceback"] = traceback.format_exc()[-2000:]
@@ -171,6 +189,12 @@ def main() -> None:
                          "launcher twin) and record per-chunk collective "
                          "cost next to the whole-tree program (implies "
                          "the whole-tree --weight-update record)")
+    ap.add_argument("--wu-execute", action="store_true",
+                    help="with --wu-chunks: EXECUTE the per-chunk reshard "
+                         "programs on zero-filled sharded buffers and "
+                         "record measured t_exec_s next to the compiled "
+                         "t_collective_s estimate (needs the params to "
+                         "fit on the host devices)")
     ap.add_argument("--calibrated", action="store_true",
                     help="unroll-calibrated roofline terms (3 extra compiles)")
     ap.add_argument("--optimized", action="store_true",
@@ -193,7 +217,7 @@ def main() -> None:
         rec = run_one(arch, shape, multi_pod=args.multi_pod,
                       include_weight_update=args.weight_update,
                       calibrated=args.calibrated, optimized=args.optimized,
-                      wu_chunks=args.wu_chunks)
+                      wu_chunks=args.wu_chunks, wu_execute=args.wu_execute)
         status = "OK " if rec["ok"] else "FAIL"
         print(f"[{status}] {arch:24s} {shape:12s} mesh={rec['mesh']} "
               f"t={rec['t_total_s']}s "

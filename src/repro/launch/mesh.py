@@ -23,6 +23,25 @@ def make_host_mesh() -> Mesh:
     return jax.make_mesh((n,), ("data",))
 
 
+def engine_submeshes(mesh: Mesh, n_engines: int,
+                     axis_name: str = "model") -> list:
+    """Split a mesh's devices into `n_engines` disjoint 1D submeshes —
+    the per-engine device sets of the real-mesh actor pool (DESIGN.md
+    §11). Each engine places its params/cache on its own submesh; the
+    trainer→engine weight transfer is then a cross-mesh reshard, executed
+    by `launch.meshrt.MeshBroadcastExecutor`. Devices must split evenly."""
+    import numpy as np
+
+    devices = mesh.devices.reshape(-1)
+    n = int(n_engines)
+    if n <= 0 or len(devices) % n:
+        raise ValueError(
+            f"cannot split {len(devices)} devices into {n} engine meshes")
+    per = len(devices) // n
+    return [Mesh(np.asarray(devices[i * per:(i + 1) * per]), (axis_name,))
+            for i in range(n)]
+
+
 def make_disaggregated_meshes(mesh: Mesh, n_train_model: int = 8):
     """PipelineRL resource split: T trainer chips vs N-T generator chips.
 

@@ -1,0 +1,241 @@
+"""Real-mesh runtime (DESIGN.md §11): executed broadcast + co-sim twin.
+
+Everything distributed used to be simulated or dry-run-lowered; this
+module is the execution side. `MeshBroadcastExecutor` plugs into
+`WeightBroadcaster(executor=...)` and turns every streamed publication
+into *actual* per-chunk reshard transfers onto the target engine's
+devices (the runtime twin of `launch.steps.lower_weight_update`), with
+wall time measured per chunk. `record_cosim_trace` / `replay_trace`
+close the loop: a real decode run on a mesh engine is recorded (per-tick
+decode + per-chunk transfer seconds) and replayed through the EventLoop
+`ActorStage`, so the simulator's pause/lag accounting can be checked
+against measurement — the sim stays a calibrated twin, not a guess.
+
+CI exercises all of it on forced host devices
+(`XLA_FLAGS=--xla_force_host_platform_device_count=8`): true multi-device
+SPMD on CPU, no accelerator required.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+
+
+class MeshBroadcastExecutor:
+    """Executes the trainer→engine streamed weight transfer on real device
+    buffers. For each chunk span (the same byte-balanced `chunk_spans`
+    table the sim and the integrity gate use) the leaves are resharded
+    onto the target engine's placement:
+
+      * publisher and engine share a mesh → a cached jitted
+        identity-with-out-shardings program (the executed form of
+        `lower_weight_update(n_chunks=)`'s per-chunk reshard);
+      * the engine owns its own device subset → a cross-mesh
+        `device_put` of the span.
+
+    Either way the per-chunk wall time is measured (`block_until_ready`)
+    and returned, so `WeightBroadcaster.exec_records` holds real transfer
+    costs next to the sim's modeled ones."""
+
+    def __init__(self):
+        self._programs: Dict[Any, Any] = {}
+
+    def _program(self, engine, n_chunks: int, k: int, gshard, lo: int,
+                 hi: int):
+        key = (id(engine), n_chunks, k)
+        fn = self._programs.get(key)
+        if fn is None:
+            fn = jax.jit(lambda xs: xs, out_shardings=tuple(gshard[lo:hi]))
+            self._programs[key] = fn
+        return fn
+
+    def run(self, engine, params, version: int, n_chunks: int
+            ) -> Dict[str, Any]:
+        from repro.core.events import chunk_spans, span_bytes
+        leaves = jax.tree_util.tree_leaves(params)
+        spans = chunk_spans(leaves, n_chunks)
+        sizes = span_bytes(leaves, spans)
+        gshard = engine._pshard_leaves
+        in_mesh = getattr(getattr(leaves[0], "sharding", None), "mesh", None)
+        use_jit = in_mesh is not None and in_mesh == engine.mesh
+        chunks: List[List[Any]] = []
+        per_chunk: List[float] = []
+        for k, (lo, hi) in enumerate(spans):
+            t0 = time.perf_counter()
+            if use_jit:
+                out = self._program(engine, n_chunks, k, gshard, lo, hi)(
+                    tuple(leaves[lo:hi]))
+            else:
+                out = jax.device_put(leaves[lo:hi], gshard[lo:hi])
+            jax.block_until_ready(out)
+            per_chunk.append(time.perf_counter() - t0)
+            chunks.append(list(out))
+        return {"chunks": chunks, "per_chunk": per_chunk,
+                "seconds": sum(per_chunk), "sizes": sizes,
+                "nbytes": int(sum(sizes)), "version": int(version),
+                "jit": use_jit}
+
+
+# ---------------------------------------------------------------------------
+# co-sim calibration: record a real-mesh trace, replay it in the EventLoop
+# ---------------------------------------------------------------------------
+
+def record_cosim_trace(engine, params, *, n_ticks: int = 24,
+                       publish_every: int = 8, n_chunks: int = 4,
+                       task=None) -> Dict[str, Any]:
+    """Run a real decode loop on a mesh engine and record its timeline.
+
+    Every `publish_every` ticks a streamed publication of `params` begins;
+    exactly one chunk installs per tick (the ActorStage `per_tick=1`
+    discipline), resharded onto the engine's devices through the §11
+    executed-install path and measured. Each tick records the decode wall
+    seconds, the chunk transfer seconds (None on chunk-free ticks), the
+    engine's weight version after installs, and the newest version
+    published so far — everything `replay_trace` needs."""
+    engine.refill(0.0)
+    ticks: List[Dict[str, Any]] = []
+    version = engine.version
+    published = version
+    pending = 0
+    for i in range(n_ticks):
+        chunk_s = None
+        if pending == 0 and i and i % publish_every == 0:
+            published += 1
+            sizes = engine.begin_weight_stream(params, published,
+                                               n_chunks=n_chunks)
+            pending = len(sizes)
+        if pending:
+            t0 = time.perf_counter()
+            engine.stream_weight_chunk()
+            chunk_s = time.perf_counter() - t0
+            pending -= 1
+        t0 = time.perf_counter()
+        engine.step(task)
+        jax.block_until_ready(engine.state["tokens"])
+        decode_s = time.perf_counter() - t0
+        if engine.n_active == 0:
+            engine.refill(float(i))
+        ticks.append({"decode_s": decode_s, "chunk_s": chunk_s,
+                      "version": int(engine.version),
+                      "published": int(published)})
+    return {"ticks": ticks, "n_chunks": int(n_chunks),
+            "publish_every": int(publish_every)}
+
+
+class _ReplayEngine:
+    """Minimal engine for trace replay: one always-active slot so the
+    tick chain keeps firing, and streamed installs with GenerationEngine's
+    return contract (False until the last chunk, version swap on it)."""
+
+    def __init__(self):
+        self.version = 0
+        self.n_active = 1
+        self.last_stream_installed = True
+        self.problems: List[Any] = []
+        self._left = 0
+        self._v = 0
+
+    def refill(self, now):
+        return 0
+
+    def step(self, task=None, now=0.0):
+        return []
+
+    def set_weights(self, params, version, recompute_kv=False):
+        self.version = int(version)
+
+    def begin_weight_stream(self, params, version, n_chunks=8,
+                            recompute_kv=False, expect_digest=None):
+        self._left, self._v = int(n_chunks), int(version)
+        return [1] * int(n_chunks)
+
+    def stream_weight_chunk(self, token=None):
+        self._left -= 1
+        if self._left > 0:
+            return False
+        self.version = self._v
+        return True
+
+
+def replay_trace(trace: Dict[str, Any]) -> Dict[str, Any]:
+    """Replay a recorded real-mesh trace through the EventLoop twin.
+
+    The sim `ActorStage` is driven with the measured per-tick decode
+    seconds as its step cost; each recorded publication is delivered as a
+    stream whose chunks all arrive when the real run began installing,
+    throttled to `per_tick=1` with `install_pause` set to that
+    publication's *mean* measured chunk seconds. Returns the sim's
+    predicted totals next to the measured ones — the co-sim tolerance
+    check compares them (per-tick decode is shared by construction, so
+    any disagreement is the sim's pause/lag *accounting*, which is
+    exactly what the twin must keep faithful)."""
+    from repro.core.events import ActorStage, EventLoop
+
+    ticks = trace["ticks"]
+    n_chunks = trace["n_chunks"]
+    decode = [t["decode_s"] for t in ticks]
+    # group consecutive chunk installs into publications
+    pubs: List[Dict[str, Any]] = []
+    cur: Optional[Dict[str, Any]] = None
+    for i, t in enumerate(ticks):
+        if t["chunk_s"] is None:
+            continue
+        if cur is None:
+            cur = {"start": i, "chunk_s": [], "version": t["published"]}
+            pubs.append(cur)
+        cur["chunk_s"].append(t["chunk_s"])
+        if len(cur["chunk_s"]) == n_chunks:
+            cur = None
+    # closed-form sim tick-start times: t_{i+1} = t_i + decode_i + pause_i
+    pause_of = {}
+    for p in pubs:
+        mean = sum(p["chunk_s"]) / len(p["chunk_s"])
+        p["mean"] = mean
+        for o in range(len(p["chunk_s"])):
+            pause_of[p["start"] + o] = mean
+    starts = [0.0]
+    for i in range(len(ticks)):
+        starts.append(starts[-1] + decode[i] + pause_of.get(i, 0.0))
+
+    loop = EventLoop()
+    eng = _ReplayEngine()
+    versions_sim: List[int] = []
+
+    def step_cost(h, _i=[0]):
+        versions_sim.append(eng.version)
+        i, _i[0] = _i[0], _i[0] + 1
+        return decode[min(i, len(decode) - 1)]
+
+    stage = ActorStage(loop, eng, name="replay", step_cost=step_cost,
+                       auto_refill=False, chain=True)
+    for p in pubs:
+        # safely inside (t_{start-1}, t_start]: the first install lands on
+        # exactly the tick the real run installed on
+        arrive = 0.5 * (starts[p["start"] - 1] + starts[p["start"]])
+        loop.post(arrive, lambda now, p=p: stage.deliver_stream(
+            None, p["version"], [now] * len(p["chunk_s"]),
+            install_pause=p["mean"], per_tick=1))
+    stage.start(0.0)
+    loop.run(until=lambda: stage.ticks_completed >= len(ticks))
+
+    measured_total = sum(decode) + sum(s for p in pubs for s in p["chunk_s"])
+    measured_pause = (sum(sum(p["chunk_s"]) for p in pubs) / len(pubs)
+                      if pubs else 0.0)
+    lag_meas = sum(t["published"] - t["version"]
+                   for t in ticks) / len(ticks)
+    lag_sim = sum(t["published"] - v
+                  for t, v in zip(ticks, versions_sim)) / len(ticks)
+    return {
+        "sim_total_s": stage.time,
+        "measured_total_s": measured_total,
+        "sim_pause_per_update": (stage.pause_total / stage.updates_applied
+                                 if stage.updates_applied else 0.0),
+        "measured_pause_per_update": measured_pause,
+        "updates_sim": stage.updates_applied,
+        "updates_measured": len(pubs),
+        "mean_lag_sim": lag_sim,
+        "mean_lag_measured": lag_meas,
+        "versions_sim": versions_sim,
+    }

@@ -212,3 +212,46 @@ def lower_weight_update(arch_cfg: ModelConfig, mesh: Mesh, n_chunks: int = 1):
         programs.append(LoweredProgram(
             f"{arch_cfg.name}:weight_update_chunk{i}", lowered))
     return programs
+
+
+def execute_weight_update(arch_cfg: ModelConfig, mesh: Mesh,
+                          n_chunks: int = 1,
+                          max_bytes: int = 1 << 30) -> list:
+    """EXECUTE the per-chunk weight-update reshard programs on zero-filled
+    sharded buffers and measure each chunk's wall time (DESIGN.md §11) —
+    the runtime companion of `lower_weight_update`, whose `t_collective_s`
+    is a compiled-cost *estimate*. The model must actually fit on the
+    mesh's devices (`max_bytes` guards against accidentally materializing
+    a 671B dry-run config on a CPU host). Returns one record per chunk:
+    {"chunk", "nbytes", "t_exec_s"}."""
+    import time as _time
+
+    from repro.core.events import chunk_spans, span_bytes
+
+    ann = abstract_params(arch_cfg)
+    shapes = tree_values(ann)
+    leaves_sds, _ = jax.tree_util.tree_flatten(shapes)
+    total = sum(s.size * s.dtype.itemsize for s in leaves_sds)
+    if total > max_bytes:
+        raise ValueError(
+            f"{arch_cfg.name}: {total} param bytes exceed the "
+            f"execute budget ({max_bytes}); pass a smoke config")
+    train_shard = tree_shardings(ann, mesh)
+    gen_rules = GEN_RULES if arch_cfg.param_count() < 40e9 else None
+    gen_shard = tree_shardings(ann, mesh, gen_rules)
+    t_leaves = jax.tree_util.tree_leaves(train_shard)
+    g_leaves = jax.tree_util.tree_leaves(gen_shard)
+    spans = chunk_spans(leaves_sds, n_chunks)
+    sizes = span_bytes(leaves_sds, spans)
+    out = []
+    for i, (lo, hi) in enumerate(spans):
+        bufs = tuple(jax.device_put(jnp.zeros(s.shape, s.dtype), sh)
+                     for s, sh in zip(leaves_sds[lo:hi], t_leaves[lo:hi]))
+        fn = jax.jit(weight_update_fn,
+                     out_shardings=tuple(g_leaves[lo:hi]))
+        jax.block_until_ready(fn(bufs))        # compile + warm
+        t0 = _time.perf_counter()
+        jax.block_until_ready(fn(bufs))
+        out.append({"chunk": i, "nbytes": int(sizes[i]),
+                    "t_exec_s": _time.perf_counter() - t0})
+    return out

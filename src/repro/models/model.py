@@ -153,8 +153,10 @@ def forward(params, tokens, positions, cfg: ModelConfig, *,
     materialized and the output carries `token_logprobs` / `lse` /
     `entropy` instead, each (B,S) f32 aligned with `tokens` the way
     `algo.token_logprobs` aligns them (entry t describes the distribution
-    that scored token t; entry 0 is a zero pad). Value/MTP heads and the
-    MoE aux loss are unchanged (MTP still materializes its own logits).
+    that scored token t; entry 0 is a zero pad). The MTP head rides the
+    same fused call (per-draft stats `mtp_token_logprobs` / `mtp_lse` /
+    `mtp_entropy` instead of `mtp_logits`); value head and the MoE aux
+    loss are unchanged.
     """
     B, S = tokens.shape
     h = jnp.take(params["embed"], tokens, axis=0)
@@ -212,14 +214,61 @@ def forward(params, tokens, positions, cfg: ModelConfig, *,
                             params["value_head"])[..., 0]
         out["values"] = values[:, n_prefix:]
     if cfg.use_mtp:
-        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
-        out["mtp_logits"] = _mtp_forward(params, cfg, hidden, tokens, positions,
-                                         n_prefix, head)
+        if fused:
+            out.update(_mtp_fused_stats(params, cfg, hidden, tokens,
+                                        positions, n_prefix))
+        else:
+            head = (params["embed"].T if cfg.tie_embeddings
+                    else params["lm_head"])
+            out["mtp_logits"] = _mtp_forward(params, cfg, hidden, tokens,
+                                             positions, n_prefix, head)
     if return_cache:
         out["cache"] = _stack_group_caches(cfg, caches)
     if return_hidden:
         out["hidden"] = hidden[:, n_prefix:]
     return out
+
+
+def _fused_head_stats(params, cfg: ModelConfig, hs, tgt):
+    """Shared fused lm-head routing for the loss and MTP stats: hs (N,D)
+    rows against the lm head, targets (N,) int32. Returns (lp, lse, ent).
+
+    Tied embeddings pass `params["embed"]` in its native (V,D) layout
+    (`transpose_head`) so no transposed head copy is materialized. When a
+    mesh is active (`shardctx.sharding_context`) and the head's vocab
+    logical axis maps to a mesh axis, the call routes through
+    `fused_logprob_sharded`: each shard runs the ordinary fused path on
+    its V/n head slice and the global stats come from three (N,) psums —
+    the (N,V)-free property then holds per shard (DESIGN.md §11). The
+    sharded wrapper itself falls back to the single-device call when the
+    axis is absent, size 1, or does not divide V, so routing here is
+    unconditional on mesh presence only."""
+    from repro.shardctx import current_mesh, current_rules
+    if cfg.tie_embeddings:
+        head, transpose_head = params["embed"], True
+        logical = "p_embed_vocab"
+    else:
+        head, transpose_head = params["lm_head"], False
+        logical = "p_vocab"
+    mesh = current_mesh()
+    if mesh is not None:
+        from repro.sharding import DEFAULT_RULES
+        rules = dict(DEFAULT_RULES, **(current_rules() or {}))
+        axis = rules.get(logical)
+        if isinstance(axis, str):
+            from repro.kernels.fused_logprob import fused_logprob_sharded
+            return fused_logprob_sharded(
+                hs, head, tgt, mesh=mesh, axis_name=axis,
+                transpose_head=transpose_head, use_pallas=cfg.use_pallas,
+                interpret=cfg.pallas_interpret)
+    if cfg.use_pallas:
+        from repro.kernels import ops as kops
+        return kops.fused_logprob(
+            hs, head, tgt, transpose_head=transpose_head,
+            interpret=cfg.pallas_interpret)
+    from repro.kernels.fused_logprob import fused_logprob_blocked
+    return fused_logprob_blocked(hs, head, tgt,
+                                 transpose_head=transpose_head)
 
 
 def _fused_loss_stats(params, cfg: ModelConfig, h, loss_targets):
@@ -233,30 +282,17 @@ def _fused_loss_stats(params, cfg: ModelConfig, h, loss_targets):
     distribution that scored token t (entry 0 is a zero pad, masked by
     loss_mask downstream — prompts start at position >= 1).
 
-    Tied embeddings pass `params["embed"]` in its native (V,D) layout
-    (`transpose_head`) so no transposed head copy is materialized. The
-    Pallas kernel runs when `use_pallas` is set (interpret plumbed like
-    every other kernel); otherwise the compiled blockwise jnp twin
+    The Pallas kernel runs when `use_pallas` is set (interpret plumbed
+    like every other kernel); otherwise the compiled blockwise jnp twin
     `fused_logprob_blocked` — same tiling and VJP-recompute math as a
     lax.scan, so the no-materialization property holds on every backend
-    (the full-logits oracle lives in kernels/ref.py, tests only).
+    (the full-logits oracle lives in kernels/ref.py, tests only). Under an
+    active mesh the head call is vocab-sharded — see `_fused_head_stats`.
     """
     B, S, D = h.shape
     hs = h.reshape(B * S, D)
     tgt = loss_targets.reshape(B * S).astype(jnp.int32)
-    if cfg.tie_embeddings:
-        head, transpose_head = params["embed"], True
-    else:
-        head, transpose_head = params["lm_head"], False
-    if cfg.use_pallas:
-        from repro.kernels import ops as kops
-        lp, lse, ent = kops.fused_logprob(
-            hs, head, tgt, transpose_head=transpose_head,
-            interpret=cfg.pallas_interpret)
-    else:
-        from repro.kernels.fused_logprob import fused_logprob_blocked
-        lp, lse, ent = fused_logprob_blocked(hs, head, tgt,
-                                             transpose_head=transpose_head)
+    lp, lse, ent = _fused_head_stats(params, cfg, hs, tgt)
 
     def shift(x):  # (B,S) stats of position t -> aligned with token t+1
         return jnp.pad(x.reshape(B, S)[:, :-1], ((0, 0), (1, 0)))
@@ -265,12 +301,12 @@ def _fused_loss_stats(params, cfg: ModelConfig, h, loss_targets):
             "entropy": shift(ent)}
 
 
-def _mtp_forward(params, cfg, hidden, tokens, positions, n_prefix, head):
-    """DeepSeek-V3 MTP: predict token t+2 from [norm(h_t); norm(emb_{t+1})]
-    through one extra layer. Returns logits (B, S-1, V) for targets t+2."""
+def _mtp_hidden(params, cfg, hidden, tokens, positions, n_prefix):
+    """DeepSeek-V3 MTP trunk: [norm(h_t); norm(emb_{t+1})] -> proj -> one
+    extra layer -> final norm. Returns the pre-head hidden (B, S-1, D);
+    row t carries the draft prediction of token t+2."""
     mp = params["mtp"]
     h = hidden[:, n_prefix:]
-    B, S, d = h.shape
     h_t = rms_norm(h[:, :-1], mp["norm_h"], cfg.norm_eps)
     e_next = rms_norm(jnp.take(params["embed"], tokens[:, 1:], axis=0),
                       mp["norm_e"], cfg.norm_eps)
@@ -278,8 +314,32 @@ def _mtp_forward(params, cfg, hidden, tokens, positions, n_prefix, head):
                    mp["proj"])
     lp = jax.tree.map(lambda a: a[0], mp["layer"])  # single stacked layer
     x, _, _ = _layer_forward(cfg, "dense", x, lp, positions[:, 1:], None, False)
-    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+
+def _mtp_forward(params, cfg, hidden, tokens, positions, n_prefix, head):
+    """MTP logits oracle: (B, S-1, V) for targets t+2. Only used when the
+    fused loss is off — the fused path goes through `_mtp_fused_stats`."""
+    x = _mtp_hidden(params, cfg, hidden, tokens, positions, n_prefix)
     return jnp.einsum("bsd,dv->bsv", x, head)
+
+
+def _mtp_fused_stats(params, cfg, hidden, tokens, positions, n_prefix):
+    """Fused-loss coverage for the MTP head: per-draft targets (row t of
+    the MTP trunk predicts token t+2) through the same fused lm-head call
+    as the main loss, so the draft head stops materializing its own
+    (B, S-1, V) logits. Returns mtp_token_logprobs / mtp_lse /
+    mtp_entropy, each (B, S-1) f32 in MTP row alignment (entry t scores
+    token t+2; the last row is a dead pad, like the main loss targets'
+    last column)."""
+    x = _mtp_hidden(params, cfg, hidden, tokens, positions, n_prefix)
+    B, Sm1, D = x.shape
+    tgt = jnp.concatenate([tokens[:, 2:], tokens[:, -1:]], axis=1)
+    lp, lse, ent = _fused_head_stats(params, cfg, x.reshape(B * Sm1, D),
+                                     tgt.reshape(B * Sm1).astype(jnp.int32))
+    return {"mtp_token_logprobs": lp.reshape(B, Sm1),
+            "mtp_lse": lse.reshape(B, Sm1),
+            "mtp_entropy": ent.reshape(B, Sm1)}
 
 
 def _stack_group_caches(cfg: ModelConfig, caches: List[Dict[str, Any]]):

@@ -118,6 +118,63 @@ def test_blocked_twin_matches_oracle(N, D, V, bv, transpose_head):
                                    atol=2e-4, rtol=2e-4, err_msg=name)
 
 
+@pytest.mark.parametrize("dw_chunks", [2, 3])
+@pytest.mark.parametrize("transpose_head", [False, True])
+def test_fused_logprob_dw_chunks_grad_parity(dw_chunks, transpose_head):
+    """Chunked dhead accumulation in the backward (dw_chunks>1 splits the
+    row dim into chunks and sums per-chunk dw) must be exact vs the
+    single-pass kernel (dw_chunks=1 is the unchanged original path)."""
+    from repro.kernels.fused_logprob import fused_logprob
+
+    h, w, t = _inputs(48, 32, 64, transpose_head, jnp.float32)
+
+    def grads(dwc):
+        def loss(h, w):
+            lp, lse, ent = fused_logprob(h, w, t, block_n=8,
+                                         transpose_head=transpose_head,
+                                         dw_chunks=dwc)
+            return (lp - 0.5 * lse + 0.2 * ent).sum()
+        return jax.jit(jax.grad(loss, argnums=(0, 1)))(h, w)
+
+    base = grads(1)
+    got = grads(dw_chunks)
+    for a, b, name in zip(got, base, ("dhidden", "dhead")):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-5, rtol=1e-5, err_msg=name)
+
+
+def test_mtp_fused_head_matches_logits_oracle():
+    """MTP draft-head stats through the fused lm-head call (satellite of
+    DESIGN.md §11): mtp_token_logprobs / mtp_lse / mtp_entropy must match
+    the full (B,S-1,V) mtp_logits oracle, and the fused forward must not
+    emit mtp_logits at all."""
+    cfg = dataclasses.replace(smoke_config(get_config("deepseek-v3-671b")),
+                              use_mtp=True, fused_loss=True,
+                              use_pallas=False)
+    params = tree_values(M.init_params(cfg, KEY))
+    B, S = 2, 16
+    ks = jax.random.split(jax.random.fold_in(KEY, 7), 1)
+    tokens = jax.random.randint(ks[0], (B, S), 0, cfg.vocab_size)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
+                                 (B, S))
+    tgt = jnp.concatenate([tokens[:, 1:], tokens[:, -1:]], axis=1)
+    out = M.forward(params, tokens, positions, cfg, loss_targets=tgt)
+    assert "mtp_logits" not in out and "mtp_token_logprobs" in out
+
+    logits = M.forward(params, tokens, positions, cfg)["mtp_logits"]
+    f32 = logits.astype(jnp.float32)
+    ls = jax.nn.log_softmax(f32, axis=-1)
+    mtp_tgt = jnp.concatenate([tokens[:, 2:], tokens[:, -1:]], axis=1)
+    lp_ref = jnp.take_along_axis(ls, mtp_tgt[..., None], axis=-1)[..., 0]
+    lse_ref = jax.nn.logsumexp(f32, axis=-1)
+    ent_ref = lse_ref - (jax.nn.softmax(f32, -1) * f32).sum(-1)
+    for got, exp, name in ((out["mtp_token_logprobs"], lp_ref, "logprob"),
+                           (out["mtp_lse"], lse_ref, "lse"),
+                           (out["mtp_entropy"], ent_ref, "entropy")):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(exp),
+                                   atol=2e-4, rtol=2e-4, err_msg=name)
+
+
 def test_fused_logprob_grad_bf16_hidden():
     """bf16 hidden/head still accumulate gradients in f32 (loose tol only
     because the twin contracts in a different order)."""
