@@ -29,6 +29,7 @@ def main() -> None:
     from benchmarks import figures
     from benchmarks.engine_bench import engine_benchmarks
     from benchmarks.kernels_bench import kernel_benchmarks
+    from benchmarks.lag_bench import lag_benchmarks
     from benchmarks.mesh_bench import mesh_benchmarks
     from benchmarks.orchestrator_bench import (chaos_benchmarks,
                                                gray_benchmarks,
@@ -52,17 +53,20 @@ def main() -> None:
         "orchestrator": orchestrator_benchmarks,
         "chaos": chaos_benchmarks,
         "gray": gray_benchmarks,
+        "lag": lag_benchmarks,
         "mesh": mesh_benchmarks,
     }
     if args.smoke:
         # fast, deterministic-cost groups so per-PR CI can catch tokens/sec
         # regressions in the generation hot path, activation-memory /
         # step-time regressions in the trainer hot path, broadcast-pause /
-        # throughput regressions in the orchestration layer, and recovery
+        # throughput regressions in the orchestration layer, recovery
         # regressions in the fault-tolerance paths (fail-stop chaos +
-        # gray-failure detection scenarios)
+        # gray-failure detection scenarios), and lag-distribution /
+        # bounded-staleness regressions in the lag-aware training path
         groups = {k: groups[k] for k in ("engine", "trainer", "orchestrator",
-                                         "chaos", "gray", "fig8", "fig9")}
+                                         "chaos", "gray", "lag",
+                                         "fig8", "fig9")}
 
     print("name,us_per_call,derived")
     failed = []

@@ -7,6 +7,12 @@ compared to conventional lagged sampling and to in-flight + KV recompute?
 Expected (paper Fig. 7): KL(inflight) << KL(conventional lag g_max), and
 recomputing the KV cache changes little — justifying stale-KV in-flight
 updates.
+
+The successor study lives in `benchmarks/lag_bench.py` (DESIGN.md §12):
+where this sweeps update cadence against a KL proxy, that reads the
+*typed* per-token staleness contract back out of the training path
+(`PipelineRL.lag_stats()`, per-lag-bucket ESS) while sweeping the
+`max_lag` bounded-staleness barrier — emitting `BENCH_lag.json`.
 """
 import os
 

@@ -1,6 +1,21 @@
 """RL algorithm layer: truncated-importance-sampling REINFORCE with a
-learned value baseline (paper Eq. 4-5) and the ESS on-policyness metric
-(Eq. 6, Kong 1992)."""
+learned value baseline (paper Eq. 4-5), the ESS on-policyness metric
+(Eq. 6, Kong 1992), and lag-aware staleness corrections that consume the
+per-token `weight_versions` provenance the engine stamps (DESIGN.md §12):
+
+  lag_mode="off"       — the paper's objective, bit-identical to the
+                         pre-lag code path (lag fields dropped before jit)
+  lag_mode="token_is"  — per-token lag-conditional clamp: stale tokens get
+                         a tighter IS ceiling (clamp decays geometrically
+                         in lag), so one global clamp stops being the only
+                         defense against off-policy drift
+  lag_mode="truncated" — Truncated-PPO-style staleness horizon: tokens
+                         sampled more than `lag_horizon` versions ago are
+                         masked out of the objective, and max_len-truncated
+                         rollouts can be downweighted (`truncated_weight`)
+
+All modes are Python-trace-time branches — a mode never pays for the
+others' math, and "off" compiles to exactly the historical jaxpr."""
 from __future__ import annotations
 
 import dataclasses
@@ -17,6 +32,15 @@ class RLConfig:
     aux_coef: float = 0.001        # MoE load-balance
     entropy_coef: float = 0.0
     temperature: float = 1.0
+    # ---- lag-aware objectives (DESIGN.md §12) --------------------------
+    lag_mode: str = "off"          # "off" | "token_is" | "truncated"
+    lag_clamp_decay: float = 0.5   # token_is: clamp *= decay**lag
+    lag_clamp_min: float = 1.0     # token_is: clamp floor (>=1 keeps the
+                                   # on-policy ratio un-truncated)
+    lag_horizon: int = 4           # truncated: mask tokens with lag > this
+    truncated_weight: float = 1.0  # truncated: weight for max_len-truncated
+                                   # rollouts (1.0 = no downweighting)
+    lag_buckets: Tuple[int, ...] = (0, 1, 2, 4, 8)  # per-bucket ESS/clamp
 
 
 def token_logprobs(logits, tokens):
@@ -49,12 +73,18 @@ def token_stats_from_logits(logits, tokens):
 
 
 def ess(weights, mask) -> jax.Array:
-    """Normalized effective sample size (Eq. 6) over masked tokens."""
+    """Normalized effective sample size (Eq. 6) over masked tokens.
+
+    Explicitly 0 for an empty mask (salvage/requeue can assemble
+    completion-free batches) instead of leaning on the 1e-30 epsilon —
+    bit-identical to the epsilon path on every non-degenerate batch
+    (`where(True, x, 0)` selects x bitwise)."""
     w = weights * mask
     n = jnp.maximum(mask.sum(), 1.0)
     s1 = w.sum()
     s2 = jnp.square(w).sum()
-    return jnp.square(s1) / jnp.maximum(n * s2, 1e-30)
+    return jnp.where(s2 > 0,
+                     jnp.square(s1) / jnp.maximum(n * s2, 1e-30), 0.0)
 
 
 def reinforce_loss(
@@ -69,7 +99,15 @@ def reinforce_loss(
     the sampled token's logprob and (for the metric/bonus) the
     distribution entropy, which is what makes the fused kernel a drop-in.
     batch: packed train batch (tokens, loss_mask, behavior_logprobs,
-    rewards (per-token broadcast), ...). `values` may be None.
+    rewards (per-token broadcast), and — when a lag mode is armed —
+    per-token `lag` and per-segment `truncated` from `pack(...,
+    trainer_version=...)`). `values` may be None.
+
+    Lag handling is a Python-trace-time branch on `cfg.lag_mode` (never a
+    `jnp.where` over modes): "off" compiles to exactly the historical
+    jaxpr, and the armed modes are bit-identical to it whenever every lag
+    is 0 (`decay**0 == 1.0`, `mask * 1.0`, `where(True, x, _)` are all
+    bitwise-exact identities).
     """
     tokens, mask = batch["tokens"], batch["loss_mask"]
     if isinstance(outputs, dict):
@@ -80,9 +118,37 @@ def reinforce_loss(
     beh_lp = batch["behavior_logprobs"]
     rewards = batch["rewards"]
 
+    lag_f = None
+    if cfg.lag_mode != "off":
+        # legacy callers pack no lag field: fall back to all-fresh
+        lag = batch.get("lag")
+        lag_f = (jnp.asarray(lag).astype(jnp.float32) if lag is not None
+                 else jnp.zeros_like(mask))
+
+    if cfg.lag_mode == "truncated":
+        # staleness horizon: tokens sampled more than `lag_horizon`
+        # versions ago leave the objective entirely (Truncated PPO);
+        # max_len-truncated rollouts optionally downweighted
+        keep = jnp.where(lag_f <= float(cfg.lag_horizon), 1.0, 0.0)
+        if cfg.truncated_weight != 1.0:
+            tr = batch.get("truncated")
+            tr = (jnp.asarray(tr).astype(jnp.float32) if tr is not None
+                  else jnp.zeros_like(mask))
+            keep = keep * (1.0 - (1.0 - cfg.truncated_weight) * tr)
+        mask = mask * keep
+
     log_ratio = jnp.where(mask > 0, cur_lp - beh_lp, 0.0)
     ratio = jnp.exp(log_ratio)
-    clamped = jnp.minimum(ratio, cfg.is_clamp)
+    if cfg.lag_mode == "token_is":
+        # lag-conditional clamp: the IS ceiling decays geometrically in
+        # staleness, flooring at lag_clamp_min (>=1 keeps fresh tokens
+        # un-truncated). lag==0 gives clamp == is_clamp exactly.
+        clamp_tok = jnp.maximum(
+            cfg.is_clamp * jnp.power(cfg.lag_clamp_decay, lag_f),
+            cfg.lag_clamp_min)
+    else:
+        clamp_tok = cfg.is_clamp
+    clamped = jnp.minimum(ratio, clamp_tok)
 
     if values is not None:
         baseline = values
@@ -104,6 +170,13 @@ def reinforce_loss(
     if cfg.entropy_coef:
         loss = loss - cfg.entropy_coef * ent
 
+    # degenerate-batch guard (salvage/requeue or a hard lag bound can
+    # assemble an all-masked batch): explicit zero-loss no-op, counted via
+    # the `empty_batch` metric. `where(True, loss, 0)` is `loss` bitwise,
+    # so non-degenerate batches are untouched.
+    n_tok = mask.sum()
+    loss = jnp.where(n_tok > 0, loss, 0.0)
+
     metrics = {
         "entropy": jnp.sum(stats["entropy"] * mask)
             / jnp.maximum(mask.sum(), 1.0),
@@ -111,9 +184,22 @@ def reinforce_loss(
         "value_loss": value_loss,
         "ess": ess(ratio, mask),
         "mean_is_weight": jnp.sum(ratio * mask) / jnp.maximum(mask.sum(), 1.0),
-        "clip_frac": jnp.sum((ratio > cfg.is_clamp) * mask)
+        "clip_frac": jnp.sum((ratio > clamp_tok) * mask)
             / jnp.maximum(mask.sum(), 1.0),
         "token_kl": jnp.sum((beh_lp - cur_lp) * mask) / jnp.maximum(mask.sum(), 1.0),
         "mean_reward_tok": jnp.sum(rewards * mask) / jnp.maximum(mask.sum(), 1.0),
+        "empty_batch": (n_tok == 0).astype(jnp.float32),
     }
+    if cfg.lag_mode != "off":
+        # per-lag-bucket ESS and clamp rate: bucket i covers
+        # [lag_buckets[i], lag_buckets[i+1]) (last bucket open-ended)
+        buckets = tuple(cfg.lag_buckets)
+        for i, lo in enumerate(buckets):
+            hi = buckets[i + 1] if i + 1 < len(buckets) else None
+            sel = (lag_f >= lo) if hi is None else \
+                ((lag_f >= lo) & (lag_f < hi))
+            bmask = mask * sel
+            metrics[f"ess_lag{lo}"] = ess(ratio, bmask)
+            metrics[f"clamp_lag{lo}"] = jnp.sum((ratio > clamp_tok) * bmask) \
+                / jnp.maximum(bmask.sum(), 1.0)
     return loss, metrics

@@ -623,6 +623,45 @@ def apply_group_baseline(rollouts: List[Rollout]) -> List[Rollout]:
 
 
 # ---------------------------------------------------------------------------
+# periodic-asynchrony gate (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+class LagGate:
+    """Bounded-staleness barrier shared by the actor pool
+    (`PipelineConfig.max_lag`): an actor whose engine weights are more
+    than `max_lag` versions behind the learner pauses — via the PR-5
+    preemption-window machinery — until its pending weight delivery
+    installs, instead of stamping tokens that the lag bound would force
+    the trainer to discard. `max_lag=0` is conventional-RL lockstep
+    (every sampled token is trained at lag 0); `max_lag=None` (no gate)
+    is the paper's free-running pipeline.
+
+    The gate is keyed on `engine.version` — what a *new* token would be
+    stamped with — never on the oldest in-flight stamp: pausing decode
+    can't freshen an already-stamped token, it can only stop digging, so
+    gating on in-flight stamps would deadlock (the rollout could never
+    finish). In-flight staleness is bounded instead by the pack-time
+    mask (`pack(..., max_lag=...)`), which guarantees no over-bound
+    token reaches the objective."""
+
+    def __init__(self, max_lag: int, trainer_version: Callable[[], int]):
+        self.max_lag = int(max_lag)
+        self.trainer_version = trainer_version
+        self.blocks = 0        # gate decisions that paused an actor
+        self.parks = 0         # pauses with no delivery yet scheduled
+        self.wait_total = 0.0  # flashes of decode deferred by the gate
+
+    def blocked(self, actor: "ActorStage") -> bool:
+        """Would a token sampled now exceed the lag bound?"""
+        return (self.trainer_version()
+                - int(actor.engine.version)) > self.max_lag
+
+    def stats(self) -> Dict[str, Any]:
+        return {"max_lag": self.max_lag, "blocks": self.blocks,
+                "parks": self.parks, "wait_total": self.wait_total}
+
+
+# ---------------------------------------------------------------------------
 # actor stage
 # ---------------------------------------------------------------------------
 
@@ -646,10 +685,18 @@ class ActorStage:
                  auto_refill: bool = True, refill_first: bool = False,
                  chain: bool = True,
                  on_drained: Optional[Callable[[float], None]] = None,
-                 recompute_kv: bool = False):
+                 recompute_kv: bool = False,
+                 lag_gate: Optional["LagGate"] = None):
         self.loop, self.engine, self.task, self.name = loop, engine, task, name
         self.step_cost, self.prefill_cost = step_cost, prefill_cost
         self.page_cost = page_cost
+        # periodic-asynchrony (DESIGN.md §12): pool-shared staleness gate
+        self.lag_gate = lag_gate
+        self.lag_pauses = 0                # gate deferrals taken
+        self.lag_wait_total = 0.0          # decode flashes deferred
+        self._lag_parked = False           # offline awaiting a publication
+        self._lag_parked_at = 0.0
+        self._lag_carry_pause = 0.0        # install pause owed at unpark
         self.deliver = deliver or (lambda rollouts, t: None)
         self.auto_refill, self.refill_first = auto_refill, refill_first
         self.chain, self.on_drained = chain, on_drained
@@ -712,6 +759,7 @@ class ActorStage:
             return
         self._atomic.append((arrive, params, version, pause))
         self._atomic.sort(key=lambda x: x[0])
+        self._lag_unpark(arrive)
 
     def deliver_stream(self, params, version: int, arrivals: Sequence[float],
                        install_pause: float, per_tick: int = 0,
@@ -747,6 +795,8 @@ class ActorStage:
                                  install_pause, per_tick, rk,
                                  list(tokens) if tokens is not None else None,
                                  n_chunks, digest, chunk_leaves)
+            if arrivals:
+                self._lag_unpark(list(arrivals)[-1])
             return
         nc = len(arrivals) if n_chunks is None else int(n_chunks)
         # only pass the kwarg when set: stub engines in tests implement the
@@ -760,6 +810,8 @@ class ActorStage:
                                     else None),
                             n_chunks=len(sizes), pause=install_pause,
                             per_tick=per_tick, accum=0.0)
+        if arrivals:
+            self._lag_unpark(list(arrivals)[-1])
 
     def _install_weights(self, now: float) -> float:
         """Apply every publication that has arrived by `now`; returns the
@@ -817,6 +869,34 @@ class ActorStage:
         self.pause_total += pause
         return pause
 
+    def _pending_install_time(self) -> Optional[float]:
+        """Earliest future time a *version-advancing* install can land:
+        the first queued atomic swap, the in-flight stream's last chunk
+        (the pointer swap), or the pending next stream's last chunk. None
+        when no publication is in flight (the gate must park, not spin)."""
+        cands = []
+        if self._atomic:
+            cands.append(self._atomic[0][0])
+        if self._stream is not None and self._stream["arrivals"]:
+            cands.append(self._stream["arrivals"][-1])
+        if self._next_stream is not None and self._next_stream[2]:
+            cands.append(self._next_stream[2][-1])
+        return min(cands) if cands else None
+
+    def _lag_unpark(self, t: float) -> None:
+        """Resume a gate-parked actor once a publication is scheduled;
+        the owed install pause is served before the first post-park tick."""
+        if not self._lag_parked or self.failed:
+            return
+        self._lag_parked = False
+        carry, self._lag_carry_pause = self._lag_carry_pause, 0.0
+        wake = max(t, self._lag_parked_at) + carry
+        self.lag_wait_total += wake - self._lag_parked_at
+        if self.lag_gate is not None:
+            self.lag_gate.wait_total += wake - self._lag_parked_at
+        self.running = True
+        self._post_tick(wake)
+
     # ---- preemption (DESIGN.md §7 pool scheduling) ---------------------
     def preempt(self, start: float, duration: float) -> None:
         """Take the engine offline for [start, start+duration): any tick
@@ -862,6 +942,8 @@ class ActorStage:
         self.failures += 1
         self._epoch += 1          # kill any queued tick chain
         self.running = False
+        self._lag_parked = False  # restore() restarts the tick chain
+        self._lag_carry_pause = 0.0
         self._atomic.clear()
         self._stream = None
         self._next_stream = None
@@ -923,6 +1005,7 @@ class ActorStage:
     def start(self, t: float) -> None:
         if not self.running and not self.failed:
             self.running = True
+            self._lag_parked = False   # an explicit start supersedes a park
             self._post_tick(t)
 
     def _post_tick(self, t: float) -> None:
@@ -963,6 +1046,31 @@ class ActorStage:
             self._post_tick(resume)
             return
         pause = self._install_weights(now)
+        # periodic-asynchrony gate (DESIGN.md §12): checked AFTER installs
+        # so an already-arrived publication unblocks this very tick. A
+        # blocked actor defers to its pending delivery through the PR-5
+        # preemption machinery (HealthMonitor-exempt by construction); the
+        # install pause already charged above rides the window so its
+        # wall-time isn't dropped from the timeline.
+        if self.lag_gate is not None and self.lag_gate.blocked(self):
+            self.lag_gate.blocks += 1
+            self.lag_pauses += 1
+            wake = self._pending_install_time()
+            if wake is None:
+                # nothing published yet: park until a delivery lands
+                # (deliver_atomic / deliver_stream unpark)
+                self.lag_gate.parks += 1
+                self._lag_parked = True
+                self._lag_parked_at = now
+                self._lag_carry_pause += pause
+                self.running = False
+                return
+            wake = max(wake, now + 1e-9)
+            self.lag_wait_total += wake - now
+            self.lag_gate.wait_total += wake - now
+            self.preempt(now, (wake - now) + pause)
+            self._post_tick(now)
+            return
         c_pre = 0.0
         if self.auto_refill and (self.refill_first
                                  or self.engine.n_active == 0):
@@ -1597,7 +1705,8 @@ class TrainerStage:
                  bad_step_rollback: int = 3,
                  loss_spike_factor: float = 0.0,
                  samples_per_step: Optional[int] = None,
-                 on_free: Optional[Callable[[float], None]] = None):
+                 on_free: Optional[Callable[[float], None]] = None,
+                 max_lag: Optional[int] = None):
         self.loop, self.trainer = loop, trainer
         self.queue, self.batch_size = queue, batch_size
         self.train_time = train_time
@@ -1636,6 +1745,12 @@ class TrainerStage:
         self.ckpts_corrupt = 0         # skipped by the intact-fallback
         self._poison_pending = 0       # nan_step fault injection counter
         self._loss_ewma: Optional[float] = None
+        # staleness contract (DESIGN.md §12): every packed batch carries
+        # per-token lag vs the version this stage steps FROM; max_lag
+        # additionally hard-masks over-bound tokens out of the loss
+        self.max_lag = max_lag
+        self.lag_hist: Dict[int, int] = {}   # lag -> trained-token count
+        self.lag_masked_tokens = 0           # tokens dropped by the bound
         if ckpt_dir is not None:
             # version-0 seed checkpoint: a crash before the first periodic
             # save must still have something durable to restore from
@@ -1732,8 +1847,20 @@ class TrainerStage:
         queue_depth = len(self.queue) if self.queue is not None else 0
         if self.group_baseline:
             rollouts = apply_group_baseline(rollouts)
-        batch = pack(rollouts, self.pack_rows, self.pack_seq)
+        # staleness is computed against the version the learner steps
+        # FROM (pre-step `trainer.version`), typed into the batch by
+        # pack() — not recomputed ad hoc from the rollouts afterwards
+        pre_version = self.trainer.version
+        batch = pack(rollouts, self.pack_rows, self.pack_seq,
+                     trainer_version=pre_version, max_lag=self.max_lag)
         stats = batch.pop("packing_stats")
+        trained = batch["loss_mask"] > 0
+        lag_vals = batch["lag"][trained]
+        max_lag = float(lag_vals.max()) if lag_vals.size else 0.0
+        mean_lag = float(lag_vals.mean()) if lag_vals.size else 0.0
+        for v, c in zip(*np.unique(lag_vals, return_counts=True)):
+            self.lag_hist[int(v)] = self.lag_hist.get(int(v), 0) + int(c)
+        self.lag_masked_tokens += int(stats.get("lag_masked", 0))
         # pre-step snapshot (free: the state is not donated, this is a
         # tuple of references) — crash() rolls back to it so the eagerly
         # computed step is truly lost if the trainer dies before `done`
@@ -1773,7 +1900,6 @@ class TrainerStage:
         n_tokens = sum(r.length for r in rollouts)
         done = start + self.train_time(n_tokens)
         version = self.trainer.version
-        max_lag, mean_lag = lag_stats(rollouts, version - 1)
         stall = 0.0
         do_ckpt = bool(self.ckpt_every and not bad
                        and version % self.ckpt_every == 0)
@@ -1782,7 +1908,7 @@ class TrainerStage:
             done += stall
             self.stalls += 1
         self.busy, self.free_at = True, done
-        self.log.append({
+        entry = {
             "version": version,
             "samples": version * self.samples_per_step,
             "time": done,
@@ -1795,7 +1921,10 @@ class TrainerStage:
             "stall": stall,
             "bad_step": float(bad),
             **metrics,
-        })
+        }
+        if self.max_lag is not None:
+            entry["lag_masked"] = int(stats.get("lag_masked", 0))
+        self.log.append(entry)
 
         epoch = self._epoch
 

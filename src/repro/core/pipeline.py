@@ -30,8 +30,9 @@ import numpy as np
 
 from repro.configs.base import HealthConfig, ModelConfig
 from repro.core.events import (
-    ActorStage, EventLoop, HealthMonitor, PoolRouter, PreprocessStage,
-    TrainerStage, WeightBroadcaster, apply_group_baseline, lag_stats,
+    ActorStage, EventLoop, HealthMonitor, LagGate, PoolRouter,
+    PreprocessStage, TrainerStage, WeightBroadcaster, apply_group_baseline,
+    lag_stats,
 )
 from repro.core.queues import SampleQueue
 from repro.core.rollout import EngineConfig, GenerationEngine
@@ -72,6 +73,15 @@ class PipelineConfig:
     #                               "shortest_queue" | "length_affinity"
     router_lookahead: int = 0     # pending-prompt buffer (0 = pool slots)
     router_slack: Optional[float] = None  # shortest_queue admission slack
+    # --- periodic asynchrony (DESIGN.md §12) --------------------------
+    # bounded-staleness barrier: None = free-running pipeline (the
+    # paper's operating point); an int bounds every *trained* token's
+    # weight lag — actors pause (preemption-window machinery) when a
+    # newly sampled token would exceed the bound, and pack() hard-masks
+    # any over-bound token out of the loss. max_lag=0 is conventional-RL
+    # lockstep. Requires update_every == 1 (versions that never publish
+    # would park the pool forever).
+    max_lag: Optional[int] = None
     # --- trainer-stall scenario (checkpoint pause every k steps) ------
     ckpt_every: int = 0
     ckpt_pause: float = 0.0       # flashes the trainer stalls per ckpt
@@ -161,6 +171,19 @@ class PipelineRL:
                                  lookahead=pc.router_lookahead,
                                  slack=pc.router_slack,
                                  clock=lambda: self.loop.now)
+        # periodic-asynchrony gate (DESIGN.md §12): one pool-shared
+        # bounded-staleness barrier, consulted by every actor tick
+        self.lag_gate: Optional[LagGate] = None
+        if pc.max_lag is not None:
+            if pc.max_lag < 0:
+                raise ValueError(f"max_lag must be >= 0, got {pc.max_lag}")
+            if pc.update_every != 1:
+                raise ValueError(
+                    "max_lag requires update_every=1: unpublished versions "
+                    "would strand gate-parked actors with no delivery to "
+                    "wake on")
+            self.lag_gate = LagGate(pc.max_lag,
+                                    lambda: self.trainer.version)
         self.engines: List[GenerationEngine] = []
         for i in range(n_eng):
             donor = self.engines[0] if self.engines else None
@@ -181,7 +204,7 @@ class PipelineRL:
             ckpt_dir=pc.ckpt_dir, ckpt_keep=pc.health.ckpt_keep,
             bad_step_rollback=pc.health.bad_step_rollback,
             loss_spike_factor=pc.health.loss_spike_factor,
-            samples_per_step=pc.batch_size)
+            samples_per_step=pc.batch_size, max_lag=pc.max_lag)
         self.pre_stage = None
         if preprocessor is not None:
             self.pre_stage = PreprocessStage(
@@ -261,7 +284,8 @@ class PipelineRL:
             step_cost=lambda h: m.step_cost(h / max(c, 1e-9)),
             prefill_cost=lambda toks, inv: m.prefill_time(toks, max(c, 1)),
             page_cost=m.page_touch_time,
-            deliver=self._deliver, recompute_kv=self.pc.recompute_kv)
+            deliver=self._deliver, recompute_kv=self.pc.recompute_kv,
+            lag_gate=self.lag_gate)
         # real-mesh pool: the stage advertises the device subset it owns
         a.devices = (tuple(eng.mesh.devices.reshape(-1))
                      if getattr(eng, "mesh", None) is not None else None)
@@ -307,6 +331,39 @@ class PipelineRL:
             eng_stats["name"] = actor.name
             eng_stats["speed"] = speed
             eng_stats["preempt_total"] = actor.preempt_total
+        return st
+
+    def lag_stats(self) -> Dict:
+        """Staleness accounting for the whole run, from the *typed* lag
+        fields the trainer packed (DESIGN.md §12) — supersedes the old
+        ad-hoc per-batch recomputation. `histogram` maps lag value ->
+        trained-token count; `masked_tokens` counts completions the
+        `max_lag` bound dropped from the loss; per-engine entries report
+        how far each engine's installed weights trail the learner right
+        now, plus the gate pauses it absorbed."""
+        ts = self.trainer_stage
+        hist = dict(sorted(ts.lag_hist.items()))
+        total = sum(hist.values())
+        mean = (sum(v * c for v, c in hist.items()) / total
+                if total else 0.0)
+        st: Dict = {
+            "bound": self.pc.max_lag,
+            "histogram": hist,
+            "trained_tokens": total,
+            "max_lag": max(hist) if hist else 0,
+            "mean_lag": mean,
+            "masked_tokens": ts.lag_masked_tokens,
+            "engines": [{
+                "name": a.name,
+                "version": int(a.engine.version),
+                "behind": self.trainer.version - int(a.engine.version),
+                "oldest_inflight": a.engine.oldest_inflight_version(),
+                "lag_pauses": a.lag_pauses,
+                "lag_wait_total": a.lag_wait_total,
+            } for a in self.actors],
+        }
+        if self.lag_gate is not None:
+            st["gate"] = self.lag_gate.stats()
         return st
 
     # ----- fault injection + elastic pool (DESIGN.md §8) ----------------

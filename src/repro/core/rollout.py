@@ -1041,5 +1041,20 @@ class GenerationEngine:
                     prompt_key=(hash(tuple(prob.prompt_ids)) & 0x7FFFFFFF
                                 if prob is not None else 0),
                     slot=int(s),
+                    truncated=bool(tokens[s, L - 1] != self.ec.eos_id),
                 ))
         return done
+
+    def oldest_inflight_version(self) -> Optional[int]:
+        """Smallest weight-version stamp among sampled tokens of in-flight
+        (active, past-prompt) slots — the staleness frontier the periodic-
+        asynchrony gate reports. None when nothing sampled is in flight."""
+        oldest: Optional[int] = None
+        for s in np.where(self._host_active)[0]:
+            pl = int(self._host_prompt_len[s])
+            nc = int(self._host_ncached[s])
+            if nc + 1 <= pl:       # still in prompt: nothing sampled yet
+                continue
+            v = int(self.ver_buf[s, pl:min(nc + 1, self.ec.max_len)].min())
+            oldest = v if oldest is None else min(oldest, v)
+        return oldest

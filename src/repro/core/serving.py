@@ -362,4 +362,25 @@ class Server:
             # weight-publication path (DESIGN.md §7)
             "weight_updates": self._updates,
             "streams_completed": self.actor.streams_completed,
+            # per-request weight-lag over the completion's version stamps
+            # (DESIGN.md §12): a request served across an in-flight update
+            # mixes versions — lag here is each token's distance from the
+            # newest version *within its own request* (0 for a request
+            # served entirely under one version)
+            **self._request_lag(),
+        }
+
+    def _request_lag(self) -> dict:
+        means, maxes = [], []
+        for r in self.done:
+            vs = getattr(r, "weight_versions", None)
+            if vs is None or len(vs) == 0:
+                continue
+            l = vs.max() - vs
+            means.append(float(l.mean()))
+            maxes.append(float(l.max()))
+        return {
+            "request_lag_mean": float(np.mean(means)) if means else 0.0,
+            "request_lag_max": float(np.max(maxes)) if maxes else 0.0,
+            "requests_mixed_version": int(sum(1 for m in maxes if m > 0)),
         }

@@ -186,6 +186,10 @@ class LazyMetrics(Mapping):
 # batch fields the train step does not consume (bookkeeping riding along
 # in pack() output); dropped before staging so no dead transfers happen
 _NON_MODEL_KEYS = ("packing_stats", "weight_versions")
+# staleness-contract fields (pack(..., trainer_version=...)): consumed by
+# the loss only when a lag mode is armed; dropped otherwise so the "off"
+# staging (and therefore the whole step) stays bit-identical to pre-lag
+_LAG_KEYS = ("lag", "truncated")
 
 
 class Trainer:
@@ -254,7 +258,9 @@ class Trainer:
         nothing syncs to host unless a metric value is actually read.
         `poison` (guard mode only) injects NaN gradients inside the step
         — the §10 `nan_step` fault; the guard must catch it."""
-        batch = {k: v for k, v in batch.items() if k not in _NON_MODEL_KEYS}
+        drop = _NON_MODEL_KEYS if self.rl.lag_mode != "off" \
+            else _NON_MODEL_KEYS + _LAG_KEYS
+        batch = {k: v for k, v in batch.items() if k not in drop}
         with self._ctx():
             if not all(isinstance(v, jax.Array) for v in batch.values()):
                 batch = self._stage(batch)

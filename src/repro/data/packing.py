@@ -27,6 +27,7 @@ class Rollout:
     ref_logprobs: Optional[np.ndarray] = None   # filled by the Preprocessor
     token_rewards: Optional[np.ndarray] = None  # KL-shaped per-token rewards
     slot: int = -1                 # engine slot that produced this rollout
+    truncated: bool = False        # hit max_len without emitting EOS
 
     @property
     def length(self) -> int:
@@ -34,7 +35,8 @@ class Rollout:
 
 
 def pack(rollouts: List[Rollout], batch: int, seq: int,
-         pad_id: int = 0) -> Dict[str, np.ndarray]:
+         pad_id: int = 0, trainer_version: Optional[int] = None,
+         max_lag: Optional[int] = None) -> Dict[str, np.ndarray]:
     """First-fit pack rollouts into (batch, seq) rows. Sequences longer than
     `seq` are truncated; rows that stay empty are fully masked.
 
@@ -43,7 +45,18 @@ def pack(rollouts: List[Rollout], batch: int, seq: int,
     field — each row's segments are concatenated and written with a single
     slice assign, instead of 7 separate (T,) scatter assignments per
     rollout (the old inner loop dominated pack() time at engine-scale
-    rollout counts)."""
+    rollout counts).
+
+    When `trainer_version` is given (the version the learner will step
+    *from*, i.e. `trainer.version` at batch-assembly time), the batch also
+    carries the staleness contract: per-token `lag = trainer_version -
+    weight_versions` on completion positions (0 on prompt/pad, clipped at
+    0 so a post-rollback batch can't go negative) and a per-segment
+    `truncated` flag. With `max_lag` set, completion tokens whose lag
+    exceeds the bound are masked out of the loss and counted in
+    `packing_stats["lag_masked"]` — the hard half of the periodic-
+    asynchrony barrier (the actor-side gate throttles new stale sampling;
+    this guarantees no over-bound token is ever trained on)."""
     tokens = np.full((batch, seq), pad_id, np.int32)
     segment_ids = np.zeros((batch, seq), np.int32)
     positions = np.zeros((batch, seq), np.int32)
@@ -51,6 +64,10 @@ def pack(rollouts: List[Rollout], batch: int, seq: int,
     behavior_lp = np.zeros((batch, seq), np.float32)
     rewards = np.zeros((batch, seq), np.float32)   # per-token (broadcast of seq reward)
     versions = np.zeros((batch, seq), np.int32)
+    with_lag = trainer_version is not None
+    if with_lag:
+        lag = np.zeros((batch, seq), np.int32)
+        trunc = np.zeros((batch, seq), np.float32)
     used = np.zeros(batch, np.int32)
     dropped = 0
 
@@ -90,8 +107,23 @@ def pack(rollouts: List[Rollout], batch: int, seq: int,
              else np.full(T, r.reward, np.float32) for r, T in zip(rs, Ts)])
         versions[b, :n] = np.concatenate(
             [r.weight_versions[:T] for r, T in zip(rs, Ts)])
+        if with_lag:
+            # lag only on completion positions (prompt stamps are 0 by
+            # engine convention, not a real sampling version)
+            lag[b, :n] = np.maximum(
+                trainer_version - versions[b, :n], 0
+            ).astype(np.int32) * (loss_mask[b, :n] > 0)
+            trunc[b, :n] = np.concatenate(
+                [np.full(T, float(r.truncated), np.float32)
+                 for r, T in zip(rs, Ts)])
 
-    return {
+    lag_masked = 0
+    if with_lag and max_lag is not None:
+        over = (lag > max_lag) & (loss_mask > 0)
+        lag_masked = int(over.sum())
+        loss_mask = np.where(over, 0.0, loss_mask).astype(np.float32)
+
+    out = {
         "tokens": tokens,
         "segment_ids": segment_ids,
         "positions": positions,
@@ -104,3 +136,8 @@ def pack(rollouts: List[Rollout], batch: int, seq: int,
             "dropped": dropped,
         },
     }
+    if with_lag:
+        out["lag"] = lag
+        out["truncated"] = trunc
+        out["packing_stats"]["lag_masked"] = lag_masked
+    return out

@@ -67,6 +67,17 @@ def main() -> None:
                          "legacy zero-cost swap")
     ap.add_argument("--bcast-chunks", type=int, default=8,
                     help="layer chunks per streamed publication")
+    ap.add_argument("--lag-mode", choices=("off", "token_is", "truncated"),
+                    default="off",
+                    help="staleness-corrected objective (DESIGN.md §12): "
+                         "token_is = per-token lag-conditional IS clamp, "
+                         "truncated = Truncated-PPO staleness horizon; off "
+                         "is bit-identical to the uncorrected loss")
+    ap.add_argument("--max-lag", type=int, default=None,
+                    help="periodic asynchrony (pipeline mode): bound every "
+                         "trained token's weight lag — actors pause at the "
+                         "bound, pack() masks over-bound tokens. 0 = "
+                         "conventional-RL lockstep, unset = free-running")
     ap.add_argument("--ckpt-pause", type=float, default=0.0,
                     help="simulated trainer stall (flashes) every "
                          "--ckpt-every steps (queue back-pressure study)")
@@ -105,6 +116,10 @@ def main() -> None:
     ap.add_argument("--log-out", default=None)
     args = ap.parse_args()
 
+    if args.mode == "conventional" and args.max_lag is not None:
+        ap.error("--max-lag is a pipeline-mode knob (conventional RL is "
+                 "already the max_lag=0 lag structure by construction)")
+
     task = MathTask(max_operand=args.max_operand, ops="+")
     cfg = tiny_config(vocab_size=task.tok.vocab_size, d_model=args.d_model,
                       n_layers=args.layers)
@@ -112,7 +127,9 @@ def main() -> None:
         cfg = dataclasses.replace(cfg, fused_loss=True)
     params = tree_values(M.init_params(cfg, jax.random.PRNGKey(args.seed)))
     schedule = warmup_constant(args.lr, args.warmup) if args.warmup else None
-    trainer = Trainer(cfg, params, rl=RLConfig(entropy_coef=0.003),
+    trainer = Trainer(cfg, params,
+                      rl=RLConfig(entropy_coef=0.003,
+                                  lag_mode=args.lag_mode),
                       adam=AdamConfig(lr=args.lr), lr_schedule=schedule)
     ec = EngineConfig(n_slots=args.slots, max_len=args.max_len)
     pack_rows = max(2, args.batch * args.max_len // 320)
@@ -148,7 +165,8 @@ def main() -> None:
                            ckpt_every=(args.ckpt_every if args.ckpt_pause
                                        or args.ckpt_dir else 0),
                            ckpt_pause=args.ckpt_pause,
-                           ckpt_dir=args.ckpt_dir),
+                           ckpt_dir=args.ckpt_dir,
+                           max_lag=args.max_lag),
             trainer=trainer, seed=args.seed, preprocessor=preprocessor,
             fault_plan=fault_plan)
     else:
@@ -189,6 +207,14 @@ def main() -> None:
               f"mean decode pause/update = "
               f"{np.mean([e['pause_per_update'] for e in eng]):.2f}f "
               f"across {len(eng)} engine(s)", flush=True)
+        if args.max_lag is not None or args.lag_mode != "off":
+            ls = runner.lag_stats()
+            bound = "inf" if ls["bound"] is None else str(ls["bound"])
+            print(f"lag[bound={bound},mode={args.lag_mode}]: "
+                  f"max={ls['max_lag']} mean={ls['mean_lag']:.2f} over "
+                  f"{ls['trained_tokens']} trained tokens, "
+                  f"masked={ls['masked_tokens']}, hist={ls['histogram']}",
+                  flush=True)
         if args.router != "fifo" or engine_speeds:
             rs = runner.router_stats()
             print(f"router[{rs['policy']}]: " + ", ".join(

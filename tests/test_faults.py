@@ -31,6 +31,7 @@ from repro.core.queues import QueueUnderflow, SampleQueue
 from repro.core.rollout import EngineConfig
 from repro.core.serving import Server
 from repro.core.sim import HardwareModel
+from repro.core.algo import RLConfig
 from repro.core.trainer import Trainer
 from repro.data.math_task import MathTask
 from repro.data.packing import Rollout, pack
@@ -54,14 +55,18 @@ def setup():
 
 
 def _pipe(setup, plan=None, steps=4, ckpt_dir=None, ckpt_every=0,
-          record=None):
+          record=None, lag=False):
     task, cfg, params = setup
     ec = EngineConfig(n_slots=8, max_len=16)
     pc = PipelineConfig(batch_size=4, n_opt_steps=steps, n_chips=8,
                         train_chips=4, pack_rows=2, pack_seq=48,
                         n_engines=2, ckpt_every=ckpt_every,
-                        ckpt_dir=ckpt_dir)
-    p = PipelineRL(cfg, params, task, ec, pc, hw=HW, trainer=Trainer(cfg, params),
+                        ckpt_dir=ckpt_dir,
+                        max_lag=2 if lag else None)
+    trainer = Trainer(cfg, params,
+                      rl=RLConfig(lag_mode="token_is")) if lag \
+        else Trainer(cfg, params)
+    p = PipelineRL(cfg, params, task, ec, pc, hw=HW, trainer=trainer,
                    seed=0, fault_plan=plan)
     if record is not None:
         orig_put = p.queue.put
@@ -365,9 +370,14 @@ def _gray_plan():
             .poison_prompt(5))
 
 
+@pytest.mark.parametrize("lag", [False, True], ids=["plain", "lag"])
 @pytest.mark.parametrize("make_plan", [_failstop_plan, _gray_plan],
                          ids=["failstop", "gray"])
-def test_chaos_replay_is_bit_equal(make_plan):
+def test_chaos_replay_is_bit_equal(make_plan, lag):
+    """Two identical-seed chaos runs stream bit-equal rollouts — including
+    with the lag correction armed (token_is objective + max_lag=2 gate):
+    the bounded-staleness barrier keys only on replayed state (trainer /
+    engine versions), so it cannot desynchronize a replay."""
     digests = []
     for _ in range(2):
         # a fresh task per run: the prompt stream's RNG is part of the
@@ -377,7 +387,7 @@ def test_chaos_replay_is_bit_equal(make_plan):
                           n_layers=1)
         params = tree_values(M.init_params(cfg, jax.random.PRNGKey(0)))
         rec = []
-        p = _pipe((task, cfg, params), make_plan(), record=rec)
+        p = _pipe((task, cfg, params), make_plan(), record=rec, lag=lag)
         p.run()
         digests.append(hashlib.sha256(b"".join(rec)).hexdigest())
     assert digests[0] == digests[1]
